@@ -1,0 +1,39 @@
+"""Shared benchmark helpers.
+
+This container has no FPGA/GPU, so the paper's CPU/GPU baselines are
+re-grounded: the *baseline* is the dense Eq.-2 implementation (explicit
+(N, N) adjacency — what a framework without the sparse streaming engine
+does, analogous to the PyG dense path), and *FlowGNN* is this repo's
+sparse streaming engine. Both run on the same CPU, so latency ratios are
+apples-to-apples; absolute numbers are CPU wall times, not FPGA numbers.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Callable, List
+
+import jax
+import numpy as np
+
+
+def time_fn(fn: Callable, *args, warmup: int = 2, iters: int = 5) -> float:
+    """Median wall seconds per call (block_until_ready)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+class Csv:
+    def __init__(self):
+        self.rows: List[str] = []
+
+    def add(self, name: str, us_per_call: float, derived: str = ""):
+        row = f"{name},{us_per_call:.1f},{derived}"
+        self.rows.append(row)
+        print(row)

@@ -1,0 +1,45 @@
+"""Kernel-level micro-benchmarks (beyond-paper): the jnp MP/NT paths that
+the dry-run lowers, timed on CPU as a regression guard. Pallas kernels run
+in interpret mode here (correctness-only; their TPU perf is assessed
+structurally via the roofline, see EXPERIMENTS.md)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import Csv, time_fn
+from repro.core.message_passing import banked_segment_sum, segment_aggregate
+
+
+def mp_paths(csv: Csv):
+    rng = np.random.default_rng(0)
+    e, d, n = 4096, 64, 1024
+    msg = jnp.asarray(rng.normal(size=(e, d)).astype(np.float32))
+    rcv = jnp.asarray(rng.integers(0, n, size=e).astype(np.int32))
+    mask = jnp.ones(e, bool)
+
+    seg = jax.jit(lambda m, r: segment_aggregate(m, r, n, kind="sum",
+                                                 edge_mask=mask))
+    t = time_fn(seg, msg, rcv)
+    csv.add("kernel.mp.segment_sum", t * 1e6, f"E={e},D={d},N={n}")
+
+    for banks in (4, 16):
+        fn = jax.jit(lambda m, r, b=banks: banked_segment_sum(
+            m, r, n, num_banks=b, edge_mask=mask))
+        t = time_fn(fn, msg, rcv)
+        csv.add(f"kernel.mp.banked{banks}", t * 1e6, f"E={e},D={d},N={n}")
+
+
+def attention_paths(csv: Csv):
+    from repro.nn.attention import chunked_attention
+    rng = np.random.default_rng(1)
+    b, s, h, dh = 1, 1024, 4, 64
+    q = jnp.asarray(rng.normal(size=(b, s, h, dh)).astype(np.float32))
+    k = jnp.asarray(rng.normal(size=(b, s, h, dh)).astype(np.float32))
+    v = jnp.asarray(rng.normal(size=(b, s, h, dh)).astype(np.float32))
+    fn = jax.jit(lambda q, k, v: chunked_attention(
+        q, k, v, q_chunk=256, kv_chunk=256))
+    t = time_fn(fn, q, k, v)
+    csv.add("kernel.flash.chunked_1k", t * 1e6, "S=1024,H=4,D=64")

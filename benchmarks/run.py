@@ -1,0 +1,36 @@
+# One function per paper table. Print ``name,us_per_call,derived`` CSV.
+"""Benchmark orchestrator.
+
+  PYTHONPATH=src python -m benchmarks.run            # all tables, small sizes
+  PYTHONPATH=src python -m benchmarks.run table7     # one table
+"""
+
+import sys
+
+from benchmarks.common import Csv
+from benchmarks import kernel_bench, paper_tables
+
+TABLES = {
+    "table5": lambda csv: paper_tables.table5_hep_latency(csv, n_graphs=12),
+    "table6": lambda csv: paper_tables.table6_energy(csv, n_graphs=12),
+    "fig7": lambda csv: paper_tables.fig7_batch_sweep(csv),
+    "fig9": lambda csv: paper_tables.fig9_ablation(csv),
+    "fig10": lambda csv: paper_tables.fig10_dse(csv),
+    "table7": lambda csv: paper_tables.table7_imbalance(csv),
+    "table8": lambda csv: paper_tables.table8_gcn_small(csv),
+    "kernels": lambda csv: (kernel_bench.mp_paths(csv),
+                            kernel_bench.attention_paths(csv)),
+}
+
+
+def main() -> None:
+    names = sys.argv[1:] or list(TABLES)
+    csv = Csv()
+    print("name,us_per_call,derived")
+    for name in names:
+        TABLES[name](csv)
+    print(f"# {len(csv.rows)} rows")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,57 @@
+"""The paper's real-time scenario end to end: consecutive small graphs at
+batch size 1, zero preprocessing, workload-agnostic.
+
+Streams two workloads (MolHIV-like molecules and HEP-like kNN point
+clouds) through the SAME compiled engine — no recompilation per graph,
+graphs processed in raw arrival order — and compares against the dense
+Eq.-2 baseline, mirroring the paper's Table V methodology.
+
+Run:  PYTHONPATH=src python examples/gnn_streaming.py [--graphs 50]
+"""
+
+import argparse
+
+import jax
+
+from benchmarks.common import time_fn
+from repro.core.engine import GraphStreamEngine
+from repro.core.graph import build_graph_batch
+from repro.core.models import PAPER_GNN_CONFIGS, make_gnn
+from repro.core.pyg_ref import DENSE_REFS
+from repro.data.graphs import hep_like, molhiv_like
+
+
+def stream(model_name: str, gen, dataset: str, n: int):
+    cfg = PAPER_GNN_CONFIGS[model_name]
+    model = make_gnn(cfg)
+    params = model.init(jax.random.PRNGKey(0), cfg)
+    graphs = list(gen(seed=0, n_graphs=n))
+    g0 = graphs[0]
+
+    # dense baseline (what a framework without the sparse engine does)
+    gb = build_graph_batch(g0.node_feat, g0.senders, g0.receivers,
+                           edge_feat=g0.edge_feat, node_pad=128,
+                           edge_pad=1024, node_pos=g0.node_pos)
+    dense = jax.jit(lambda p, g: DENSE_REFS[cfg.model](p, g, cfg))
+    t_dense = time_fn(dense, params, gb)
+
+    eng = GraphStreamEngine(cfg, params)
+    eng.warmup(g0.node_feat, g0.senders, g0.receivers, g0.edge_feat,
+               g0.node_pos)
+    for g in graphs:
+        eng.process(g.node_feat, g.senders, g.receivers, g.edge_feat,
+                    g.node_pos)
+    s = eng.stats.summary()
+    print(f"[{model_name} | {dataset}] dense={t_dense*1e3:8.2f} ms  "
+          f"flowgnn p50={s['p50_ms']:7.2f} ms  p99={s['p99_ms']:7.2f} ms  "
+          f"speedup={t_dense*1e3/s['p50_ms']:5.1f}x  "
+          f"throughput={s['throughput_gps']:6.1f} graphs/s")
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--graphs", type=int, default=30)
+    args = ap.parse_args()
+    for m in ("gin", "gcn", "gat"):
+        stream(m, molhiv_like, "molhiv", args.graphs)
+    stream("gin", hep_like, "hep", max(args.graphs // 3, 5))

@@ -1,0 +1,60 @@
+"""Quickstart: the two halves of the repo in ~60 seconds on CPU.
+
+1. FlowGNN — build a GIN from the paper's model zoo, stream raw COO graphs
+   through the real-time engine (zero preprocessing), print latency stats.
+2. LM substrate — one training step of a reduced assigned architecture.
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.archs import REDUCED
+from repro.core.engine import GraphStreamEngine
+from repro.core.models import PAPER_GNN_CONFIGS, make_gnn
+from repro.data.graphs import molhiv_like
+from repro.distributed.sharding import init_params
+from repro.models import lm
+
+
+def flowgnn_demo():
+    print("=== FlowGNN streaming inference (paper scenario) ===")
+    cfg = PAPER_GNN_CONFIGS["gin"]          # 5 layers, dim 100, Eq. (1)
+    model = make_gnn(cfg)
+    params = model.init(jax.random.PRNGKey(0), cfg)
+    engine = GraphStreamEngine(cfg, params)
+
+    graphs = list(molhiv_like(seed=0, n_graphs=20))
+    g0 = graphs[0]
+    engine.warmup(g0.node_feat, g0.senders, g0.receivers, g0.edge_feat,
+                  g0.node_pos)
+    for g in graphs:                         # batch size 1, arrival order
+        pred = engine.process(g.node_feat, g.senders, g.receivers,
+                              g.edge_feat, g.node_pos)
+    print("stream stats:", engine.stats.summary())
+
+
+def lm_demo():
+    print("=== LM substrate: one train step of reduced llama3-8b ===")
+    cfg = REDUCED["llama3-8b"]
+    params = init_params(jax.random.PRNGKey(0), lm.lm_param_defs(cfg))
+    rng = np.random.default_rng(0)
+    batch = {
+        "tokens": jnp.asarray(rng.integers(0, cfg.vocab_size, (4, 64)),
+                              jnp.int32),
+        "labels": jnp.asarray(rng.integers(0, cfg.vocab_size, (4, 64)),
+                              jnp.int32),
+    }
+    loss, parts = lm.lm_loss(params, batch, cfg)
+    grads = jax.grad(lambda p: lm.lm_loss(p, batch, cfg)[0])(params)
+    gnorm = jnp.sqrt(sum(jnp.sum(g.astype(jnp.float32) ** 2)
+                         for g in jax.tree.leaves(grads)))
+    print(f"loss={float(loss):.4f} xent={float(parts['xent']):.4f} "
+          f"grad_norm={float(gnorm):.3f}")
+
+
+if __name__ == "__main__":
+    flowgnn_demo()
+    lm_demo()

@@ -1,0 +1,67 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Perf hillclimb driver: measure a (arch x shape) cell with config
+overrides and log the three roofline terms per iteration.
+
+  PYTHONPATH=src python experiments/hillclimb.py qwen1.5-0.5b train_4k iter1 sharding_profile=dp_only
+"""
+
+import json
+import sys
+from pathlib import Path
+
+from repro.configs.archs import ARCHS
+from repro.configs.base import SHAPES, TrainConfig
+from repro.launch.hlo_cost import measured_costs
+from repro.launch.mesh import make_production_mesh
+from repro.launch.roofline import memory_report, roofline_report
+from repro.launch.steps import lowering_bundle
+
+OUT = Path(__file__).parent / "perf"
+
+
+def measure(arch, shape_name, tag, overrides):
+    cfg = ARCHS[arch]
+    for kv in overrides:
+        k, v = kv.split("=")
+        for conv in (int, float):
+            try:
+                v = conv(v)
+                break
+            except ValueError:
+                continue
+        if v in ("True", "False"):
+            v = v == "True"
+        cfg = cfg.replace(**{k: v})
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh()
+    with mesh:
+        jitted, args = lowering_bundle(cfg, shape, mesh, tcfg=TrainConfig())
+        compiled = jitted.lower(*args).compile()
+        hlo = compiled.as_text()
+    mem = memory_report(compiled, hlo)
+    measured = measured_costs(cfg, shape, mesh, TrainConfig())
+    roof = roofline_report(compiled, hlo, mesh.devices.size, cfg, shape,
+                           measured=measured)
+    rec = {"arch": arch, "shape": shape_name, "tag": tag,
+           "overrides": overrides, "memory": mem, "roofline": roof,
+           "measured": {k: v for k, v in measured.items()
+                        if not k.startswith("_")}}
+    OUT.mkdir(parents=True, exist_ok=True)
+    p = OUT / f"{arch}__{shape_name}__{tag}.json"
+    p.write_text(json.dumps(rec, indent=2, default=str))
+    print(f"[{arch} | {shape_name} | {tag}] "
+          f"compute={roof['compute_s']:.3f}s "
+          f"memory={roof['memory_s']:.3f}s "
+          f"collective={roof['collective_s']:.3f}s "
+          f"(tpu-adj {roof['collective_s_tpu_adjusted']:.3f}s) "
+          f"bottleneck={roof['bottleneck']} "
+          f"fraction={roof.get('roofline_fraction', 0):.3f} "
+          f"peak={mem['peak_estimate_bytes']/2**30:.1f}GiB")
+    return rec
+
+
+if __name__ == "__main__":
+    arch, shape_name, tag = sys.argv[1:4]
+    measure(arch, shape_name, tag, sys.argv[4:])

@@ -1,0 +1,13 @@
+"""Config registry: ModelConfig per assigned arch (+ the paper's GNN
+configs), shape set, and reduced smoke variants."""
+
+from repro.configs.archs import ARCHS, LONG_CONTEXT_OK, REDUCED, shape_applicable
+from repro.configs.base import SHAPES, ModelConfig, ShapeConfig, TrainConfig
+
+
+def get_config(arch: str) -> ModelConfig:
+    return ARCHS[arch]
+
+
+def get_reduced(arch: str) -> ModelConfig:
+    return REDUCED[arch]

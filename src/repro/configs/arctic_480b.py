@@ -1,0 +1,10 @@
+"""Config module for --arch arctic-480b (canonical definition + reduced
+smoke variant live in the registry; this module is the per-arch entry
+point required by the layout)."""
+
+from repro.configs.archs import ARCTIC_480B as CONFIG
+from repro.configs.archs import REDUCED as _REDUCED
+
+REDUCED_CONFIG = _REDUCED["arctic-480b"]
+
+__all__ = ["CONFIG", "REDUCED_CONFIG"]

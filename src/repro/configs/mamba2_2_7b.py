@@ -1,0 +1,10 @@
+"""Config module for --arch mamba2-2.7b (canonical definition + reduced
+smoke variant live in the registry; this module is the per-arch entry
+point required by the layout)."""
+
+from repro.configs.archs import MAMBA2_27B as CONFIG
+from repro.configs.archs import REDUCED as _REDUCED
+
+REDUCED_CONFIG = _REDUCED["mamba2-2.7b"]
+
+__all__ = ["CONFIG", "REDUCED_CONFIG"]

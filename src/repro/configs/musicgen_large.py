@@ -1,0 +1,10 @@
+"""Config module for --arch musicgen-large (canonical definition + reduced
+smoke variant live in the registry; this module is the per-arch entry
+point required by the layout)."""
+
+from repro.configs.archs import MUSICGEN_LARGE as CONFIG
+from repro.configs.archs import REDUCED as _REDUCED
+
+REDUCED_CONFIG = _REDUCED["musicgen-large"]
+
+__all__ = ["CONFIG", "REDUCED_CONFIG"]

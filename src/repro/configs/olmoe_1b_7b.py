@@ -1,0 +1,10 @@
+"""Config module for --arch olmoe-1b-7b (canonical definition + reduced
+smoke variant live in the registry; this module is the per-arch entry
+point required by the layout)."""
+
+from repro.configs.archs import OLMOE_1B_7B as CONFIG
+from repro.configs.archs import REDUCED as _REDUCED
+
+REDUCED_CONFIG = _REDUCED["olmoe-1b-7b"]
+
+__all__ = ["CONFIG", "REDUCED_CONFIG"]

@@ -1,0 +1,10 @@
+"""Config module for --arch qwen1.5-0.5b (canonical definition + reduced
+smoke variant live in the registry; this module is the per-arch entry
+point required by the layout)."""
+
+from repro.configs.archs import QWEN15_05B as CONFIG
+from repro.configs.archs import REDUCED as _REDUCED
+
+REDUCED_CONFIG = _REDUCED["qwen1.5-0.5b"]
+
+__all__ = ["CONFIG", "REDUCED_CONFIG"]

@@ -1,0 +1,396 @@
+"""The FlowGNN model zoo: GCN, GIN, GIN+VN, GAT, PNA, DGN (paper Table II).
+
+Each model is a functional (init, apply) pair built on the generic
+message-passing engine. Layer counts / dims default to the paper's Sec. VI-A
+configurations; everything is overridable through ``GNNConfig``.
+
+These models are *inference-first* (the paper accelerates inference), but all
+apply functions are differentiable so the same code trains (used by the
+quickstart example and the loss-decreases system test).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.graph import GraphBatch
+from repro.core.message_passing import (
+    DEFAULT_DATAFLOW,
+    DataflowConfig,
+    global_pool,
+    propagate,
+    segment_aggregate,
+    segment_softmax,
+)
+
+Array = jax.Array
+Params = Dict[str, Any]
+
+
+@dataclass(frozen=True)
+class GNNConfig:
+    model: str = "gin"
+    num_layers: int = 5
+    hidden_dim: int = 100
+    node_feat_dim: int = 9          # OGB-mol style raw features
+    edge_feat_dim: int = 3
+    out_dim: int = 1
+    heads: int = 4                  # GAT
+    head_dim: int = 16              # GAT
+    pos_dim: int = 1                # DGN directional field width
+    avg_log_degree: float = 1.3     # PNA's delta (from "training set")
+    task: str = "graph"             # graph | node
+    head_mlp: Tuple[int, ...] = ()  # extra hidden head layers (PNA/DGN)
+    eps_init: float = 0.0           # GIN epsilon
+    dtype: Any = jnp.float32
+
+    def replace(self, **kw) -> "GNNConfig":
+        import dataclasses
+        return dataclasses.replace(self, **kw)
+
+
+# Paper Sec. VI-A model configurations.
+PAPER_GNN_CONFIGS: Dict[str, GNNConfig] = {
+    "gcn": GNNConfig(model="gcn", num_layers=5, hidden_dim=100),
+    "gin": GNNConfig(model="gin", num_layers=5, hidden_dim=100),
+    "gin_vn": GNNConfig(model="gin_vn", num_layers=5, hidden_dim=100),
+    "gat": GNNConfig(model="gat", num_layers=5, hidden_dim=64, heads=4, head_dim=16),
+    "pna": GNNConfig(model="pna", num_layers=4, hidden_dim=80, head_mlp=(40, 20)),
+    "dgn": GNNConfig(model="dgn", num_layers=4, hidden_dim=100, head_mlp=(50, 25)),
+}
+
+
+# ---------------------------------------------------------------------------
+# param helpers
+# ---------------------------------------------------------------------------
+
+def _dense_init(key, d_in: int, d_out: int, dtype=jnp.float32) -> Params:
+    scale = jnp.sqrt(2.0 / (d_in + d_out))
+    w = jax.random.normal(key, (d_in, d_out), dtype) * scale
+    return {"w": w, "b": jnp.zeros((d_out,), dtype)}
+
+
+def _dense(p: Params, x: Array) -> Array:
+    return x @ p["w"] + p["b"]
+
+
+def _mlp_init(key, dims, dtype=jnp.float32) -> list:
+    keys = jax.random.split(key, len(dims) - 1)
+    return [_dense_init(k, dims[i], dims[i + 1], dtype) for i, k in enumerate(keys)]
+
+
+def _mlp(ps: list, x: Array, act=jax.nn.relu) -> Array:
+    for i, p in enumerate(ps):
+        x = _dense(p, x)
+        if i < len(ps) - 1:
+            x = act(x)
+    return x
+
+
+def _head_init(key, cfg: GNNConfig, d_in: int) -> list:
+    dims = (d_in,) + tuple(cfg.head_mlp) + (cfg.out_dim,)
+    return _mlp_init(key, dims, cfg.dtype)
+
+
+def _readout(head, cfg: GNNConfig, graph: GraphBatch, x: Array) -> Array:
+    if cfg.task == "node":
+        return _mlp(head, x)
+    pooled = global_pool(graph, x, kind="mean")
+    out = _mlp(head, pooled)
+    return jnp.where(graph.graph_mask[:, None], out, 0.0)
+
+
+# ---------------------------------------------------------------------------
+# GCN — SpMM-expressible family (paper uses it for the I-GCN comparison)
+# ---------------------------------------------------------------------------
+
+def gcn_init(key, cfg: GNNConfig) -> Params:
+    keys = jax.random.split(key, cfg.num_layers + 2)
+    layers = []
+    d = cfg.hidden_dim
+    for l in range(cfg.num_layers):
+        d_in = cfg.node_feat_dim if l == 0 else d
+        layers.append(_dense_init(keys[l], d_in, d, cfg.dtype))
+    return {"layers": layers, "head": _head_init(keys[-1], cfg, d)}
+
+
+def gcn_apply(params, graph: GraphBatch, cfg: GNNConfig,
+              dataflow: DataflowConfig = DEFAULT_DATAFLOW) -> Array:
+    x = graph.node_feat.astype(cfg.dtype)
+    deg = graph.in_degrees() + 1.0          # self-loop degree, on the fly
+    inv_sqrt = jax.lax.rsqrt(deg)
+
+    for l, p in enumerate(params["layers"]):
+        def message(src, dst, e, _inv=inv_sqrt, _g=graph):
+            norm = _inv[_g.senders] * _inv[_g.receivers]
+            return src * norm[:, None]
+
+        def update(xx, m, _p=p, _inv=inv_sqrt, last=(l == cfg.num_layers - 1)):
+            m = m + xx * (_inv * _inv)[:, None]   # analytic self loop
+            h = _dense(_p, m)
+            return h if last else jax.nn.relu(h)
+
+        x = propagate(graph, x, message_fn=message, update_fn=update,
+                      aggregate="sum", dataflow=dataflow)
+    return _readout(params["head"], cfg, graph, x)
+
+
+# ---------------------------------------------------------------------------
+# GIN (+ edge embeddings, Eq. 1) and GIN + Virtual Node
+# ---------------------------------------------------------------------------
+
+def _gin_layers_init(key, cfg: GNNConfig):
+    keys = jax.random.split(key, cfg.num_layers)
+    layers = []
+    d = cfg.hidden_dim
+    for l in range(cfg.num_layers):
+        k1, k2, k3 = jax.random.split(keys[l], 3)
+        layers.append({
+            "edge_enc": _dense_init(k1, cfg.edge_feat_dim, d, cfg.dtype),
+            "mlp": _mlp_init(k2, (d, 2 * d, d), cfg.dtype),
+            "eps": jnp.asarray(cfg.eps_init, cfg.dtype),
+        })
+    return layers
+
+
+def gin_init(key, cfg: GNNConfig) -> Params:
+    k0, k1, k2 = jax.random.split(key, 3)
+    return {
+        "node_enc": _dense_init(k0, cfg.node_feat_dim, cfg.hidden_dim, cfg.dtype),
+        "layers": _gin_layers_init(k1, cfg),
+        "head": _head_init(k2, cfg, cfg.hidden_dim),
+    }
+
+
+def _gin_layer(p, graph, x, dataflow):
+    e = _dense(p["edge_enc"], graph.edge_feat)   # per-layer bond encoder
+
+    def message(src, dst, ee, _e=e):
+        return jax.nn.relu(src + _e)             # phi = ReLU(x_j + e_ji)
+
+    def update(xx, m, _p=p):
+        return _mlp(_p["mlp"], (1.0 + _p["eps"]) * xx + m)
+
+    return propagate(graph, x, message_fn=message, update_fn=update,
+                     aggregate="sum", dataflow=dataflow)
+
+
+def gin_apply(params, graph: GraphBatch, cfg: GNNConfig,
+              dataflow: DataflowConfig = DEFAULT_DATAFLOW) -> Array:
+    x = jax.nn.relu(_dense(params["node_enc"], graph.node_feat.astype(cfg.dtype)))
+    for p in params["layers"]:
+        x = _gin_layer(p, graph, x, dataflow)
+    return _readout(params["head"], cfg, graph, x)
+
+
+def gin_vn_init(key, cfg: GNNConfig) -> Params:
+    k0, k1, k2, k3 = jax.random.split(key, 4)
+    d = cfg.hidden_dim
+    vn_mlps = [_mlp_init(k, (d, 2 * d, d), cfg.dtype)
+               for k in jax.random.split(k3, cfg.num_layers - 1)]
+    return {
+        "node_enc": _dense_init(k0, cfg.node_feat_dim, d, cfg.dtype),
+        "layers": _gin_layers_init(k1, cfg),
+        "head": _head_init(k2, cfg, d),
+        "vn_mlps": vn_mlps,
+    }
+
+
+def gin_vn_apply(params, graph: GraphBatch, cfg: GNNConfig,
+                 dataflow: DataflowConfig = DEFAULT_DATAFLOW) -> Array:
+    """GIN with a virtual node per packed graph.
+
+    The VN's O(N) edges are never materialized: its incoming aggregation is a
+    segment-sum pool and its outgoing messages are a broadcast — the dataflow
+    balances automatically (paper Fig. 6, strictly cheaper here).
+    """
+    x = jax.nn.relu(_dense(params["node_enc"], graph.node_feat.astype(cfg.dtype)))
+    vn = jnp.zeros((graph.n_graph_pad, cfg.hidden_dim), cfg.dtype)
+    n_layers = len(params["layers"])
+    for l, p in enumerate(params["layers"]):
+        x = x + vn[graph.graph_ids]                       # VN -> all nodes
+        x = jnp.where(graph.node_mask[:, None], x, 0.0)
+        x = _gin_layer(p, graph, x, dataflow)
+        if l < n_layers - 1:                              # all nodes -> VN
+            pooled = global_pool(graph, x, kind="sum")
+            vn = _mlp(params["vn_mlps"][l], vn + pooled)
+            vn = jnp.where(graph.graph_mask[:, None], vn, 0.0)
+    return _readout(params["head"], cfg, graph, x)
+
+
+# ---------------------------------------------------------------------------
+# GAT — anisotropic family; MP-to-NT (gather-then-transform) dataflow
+# ---------------------------------------------------------------------------
+
+def gat_init(key, cfg: GNNConfig) -> Params:
+    keys = jax.random.split(key, cfg.num_layers + 2)
+    d_hid = cfg.heads * cfg.head_dim
+    layers = []
+    for l in range(cfg.num_layers):
+        d_in = cfg.node_feat_dim if l == 0 else d_hid
+        kw, ka = jax.random.split(keys[l])
+        layers.append({
+            "w": _dense_init(kw, d_in, d_hid, cfg.dtype),
+            # attention vectors a = [a_src ; a_dst], one per head
+            "a_src": jax.random.normal(ka, (cfg.heads, cfg.head_dim), cfg.dtype) * 0.1,
+            "a_dst": jax.random.normal(keys[-2], (cfg.heads, cfg.head_dim), cfg.dtype) * 0.1,
+        })
+    return {"layers": layers, "head": _head_init(keys[-1], cfg, d_hid)}
+
+
+def gat_apply(params, graph: GraphBatch, cfg: GNNConfig,
+              dataflow: DataflowConfig = DEFAULT_DATAFLOW) -> Array:
+    x = graph.node_feat.astype(cfg.dtype)
+    H, Dh = cfg.heads, cfg.head_dim
+    N = graph.n_node_pad
+    for l, p in enumerate(params["layers"]):
+        h = _dense(p["w"], x).reshape(N, H, Dh)
+        # per-node attention halves (computed once per node — NT side)
+        alpha_src = jnp.einsum("nhd,hd->nh", h, p["a_src"])
+        alpha_dst = jnp.einsum("nhd,hd->nh", h, p["a_dst"])
+        logits = jax.nn.leaky_relu(
+            alpha_src[graph.senders] + alpha_dst[graph.receivers],
+            negative_slope=0.2)                                   # (E, H)
+        att = segment_softmax(logits, graph.receivers, N,
+                              edge_mask=graph.edge_mask)          # (E, H)
+        msg = h[graph.senders] * att[..., None]                   # (E, H, Dh)
+        agg = segment_aggregate(
+            msg.reshape(-1, H * Dh), graph.receivers, N,
+            kind="sum", edge_mask=graph.edge_mask, dataflow=dataflow)
+        x = agg if l == cfg.num_layers - 1 else jax.nn.elu(agg)
+        x = jnp.where(graph.node_mask[:, None], x, 0.0)
+    return _readout(params["head"], cfg, graph, x)
+
+
+# ---------------------------------------------------------------------------
+# PNA — multi-aggregator (mean/std/max/min) x degree scalers (Eq. 3)
+# ---------------------------------------------------------------------------
+
+def pna_init(key, cfg: GNNConfig) -> Params:
+    keys = jax.random.split(key, cfg.num_layers + 3)
+    d = cfg.hidden_dim
+    layers = []
+    for l in range(cfg.num_layers):
+        k1, k2, k3 = jax.random.split(keys[l], 3)
+        layers.append({
+            "edge_enc": _dense_init(k1, cfg.edge_feat_dim, d, cfg.dtype),
+            "pre": _dense_init(k2, 2 * d, d, cfg.dtype),     # phi(x_j, e)
+            "post": _dense_init(k3, 12 * d + d, d, cfg.dtype),  # 4 aggs x 3 scalers + self
+        })
+    return {
+        "node_enc": _dense_init(keys[-3], cfg.node_feat_dim, d, cfg.dtype),
+        "layers": layers,
+        "head": _head_init(keys[-1], cfg, d),
+    }
+
+
+def pna_apply(params, graph: GraphBatch, cfg: GNNConfig,
+              dataflow: DataflowConfig = DEFAULT_DATAFLOW) -> Array:
+    x = jax.nn.relu(_dense(params["node_enc"], graph.node_feat.astype(cfg.dtype)))
+    N = graph.n_node_pad
+    deg = graph.in_degrees()
+    log_deg = jnp.log(deg + 1.0)
+    delta = cfg.avg_log_degree
+    scalers = jnp.stack([
+        jnp.ones_like(log_deg),
+        log_deg / delta,
+        delta / jnp.maximum(log_deg, 1e-3),
+    ], axis=-1)                                               # (N, 3)
+
+    for p in params["layers"]:
+        e = _dense(p["edge_enc"], graph.edge_feat)
+
+        def message(src, dst, ee, _e=e, _p=p):
+            return jax.nn.relu(_dense(_p["pre"], jnp.concatenate([src, _e], -1)))
+
+        def update(xx, m, _p=p):
+            # m = concat of 4 aggregators: (N, 4D); apply 3 scalers -> (N, 12D)
+            scaled = (m[:, None, :] * scalers[:, :, None]).reshape(N, -1)
+            h = _dense(_p["post"], jnp.concatenate([xx, scaled], -1))
+            return jax.nn.relu(h)
+
+        x = propagate(graph, x, message_fn=message, update_fn=update,
+                      aggregate=("mean", "std", "max", "min"), dataflow=dataflow)
+    return _readout(params["head"], cfg, graph, x)
+
+
+# ---------------------------------------------------------------------------
+# DGN — directional aggregation guided by a node field (Laplacian-eigvec proxy)
+# ---------------------------------------------------------------------------
+
+def dgn_init(key, cfg: GNNConfig) -> Params:
+    keys = jax.random.split(key, cfg.num_layers + 2)
+    d = cfg.hidden_dim
+    layers = []
+    for l in range(cfg.num_layers):
+        layers.append({"post": _dense_init(keys[l], 2 * d + d, d, cfg.dtype)})
+    return {
+        "node_enc": _dense_init(keys[-2], cfg.node_feat_dim, d, cfg.dtype),
+        "layers": layers,
+        "head": _head_init(keys[-1], cfg, d),
+    }
+
+
+def dgn_apply(params, graph: GraphBatch, cfg: GNNConfig,
+              dataflow: DataflowConfig = DEFAULT_DATAFLOW) -> Array:
+    """mean + directional-derivative aggregators: Y = [D^-1 A X ; |B_dx X|].
+
+    B_dx rows are built on the fly from the per-node field ``node_pos``
+    (the paper feeds precomputed Laplacian eigenvectors as kernel inputs; our
+    streaming generator attaches the field to each graph the same way).
+    """
+    x = jax.nn.relu(_dense(params["node_enc"], graph.node_feat.astype(cfg.dtype)))
+    N = graph.n_node_pad
+    pos = graph.node_pos[:, 0]
+    dpos = pos[graph.senders] - pos[graph.receivers]          # field along edge
+    absnorm = segment_aggregate(
+        jnp.abs(dpos)[:, None], graph.receivers, N, kind="sum",
+        edge_mask=graph.edge_mask)[:, 0]
+    w = dpos / jnp.maximum(absnorm[graph.receivers], 1e-6)     # (E,)
+
+    for p in params["layers"]:
+        def message(src, dst, ee):
+            return src
+
+        m_mean = segment_aggregate(
+            x[graph.senders], graph.receivers, N, kind="mean",
+            edge_mask=graph.edge_mask, dataflow=dataflow)
+        m_dir = segment_aggregate(
+            x[graph.senders] * w[:, None], graph.receivers, N, kind="sum",
+            edge_mask=graph.edge_mask, dataflow=dataflow)
+        w_sum = segment_aggregate(
+            w[:, None], graph.receivers, N, kind="sum",
+            edge_mask=graph.edge_mask)[:, 0]
+        m_dx = jnp.abs(m_dir - x * w_sum[:, None])            # |B_dx X|
+        h = _dense(p["post"], jnp.concatenate([x, m_mean, m_dx], -1))
+        x = jnp.where(graph.node_mask[:, None], jax.nn.relu(h), 0.0)
+    return _readout(params["head"], cfg, graph, x)
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+class GNNModel(NamedTuple):
+    init: Callable[..., Params]
+    apply: Callable[..., Array]
+
+
+GNN_MODELS: Dict[str, GNNModel] = {
+    "gcn": GNNModel(gcn_init, gcn_apply),
+    "gin": GNNModel(gin_init, gin_apply),
+    "gin_vn": GNNModel(gin_vn_init, gin_vn_apply),
+    "gat": GNNModel(gat_init, gat_apply),
+    "pna": GNNModel(pna_init, pna_apply),
+    "dgn": GNNModel(dgn_init, dgn_apply),
+}
+
+
+def make_gnn(cfg: GNNConfig) -> GNNModel:
+    if cfg.model not in GNN_MODELS:
+        raise KeyError(f"unknown GNN '{cfg.model}'; have {sorted(GNN_MODELS)}")
+    return GNN_MODELS[cfg.model]

@@ -1,0 +1,54 @@
+"""Elastic scaling: restore a checkpoint onto a different mesh.
+
+Checkpoints store unsharded host arrays (checkpoint/checkpoint.py), so
+elasticity reduces to recomputing shardings for the new mesh and
+device_put-ing on restore. The data pipeline is deterministic in
+(seed, step), so a resized job resumes the exact token stream with a new
+per-host batch slice — no replay, no skips.
+
+``remesh_plan`` also validates that the new mesh can hold the model
+(divisibility of the sharded dims), failing fast with an actionable error
+instead of a mid-restore crash.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+
+from repro.distributed.sharding import (ParamDef, ShardingRules,
+                                        param_shardings)
+
+
+def remesh_plan(defs: Any, rules: ShardingRules, new_mesh) -> Any:
+    """Shardings for ``defs`` on ``new_mesh``; raises on indivisibility."""
+    shardings = param_shardings(defs, rules, new_mesh)
+    flat_d = jax.tree.leaves(defs, is_leaf=lambda x: isinstance(x, ParamDef))
+    flat_s = jax.tree.leaves(shardings,
+                             is_leaf=lambda x: hasattr(x, "spec"))
+    axis_sizes = dict(zip(new_mesh.axis_names,
+                          np.array(new_mesh.devices.shape)))
+    for d, s in zip(flat_d, flat_s):
+        for dim, name in zip(d.shape, s.spec):
+            if name is None:
+                continue
+            names = name if isinstance(name, tuple) else (name,)
+            n = 1
+            for nm in names:
+                n *= int(axis_sizes[nm])
+            if dim % n:
+                raise ValueError(
+                    f"cannot remesh: dim {dim} of {d.shape} not divisible "
+                    f"by axis product {n} ({names}) on mesh "
+                    f"{dict(axis_sizes)}")
+    return shardings
+
+
+def elastic_restore(ckpt_root, defs: Any, rules: ShardingRules, new_mesh,
+                    like: Any) -> Optional[Tuple[int, Any, Dict]]:
+    """restore_latest + resharding onto ``new_mesh``."""
+    from repro.checkpoint.checkpoint import restore_latest
+    shardings = remesh_plan(defs, rules, new_mesh)
+    return restore_latest(ckpt_root, like, shardings=shardings)

@@ -1,0 +1,59 @@
+"""Jit'd dispatch wrappers for the Pallas kernels.
+
+On TPU the kernels run compiled; everywhere else they run in interpret mode
+(the kernel body executed step-by-step on CPU), which is how this repo's
+tests validate them. The pure-JAX fallbacks in ref.py are what the dry-run
+lowers for GSPMD compilation (see DESIGN.md §7).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+
+from repro.kernels import ref as _ref
+from repro.kernels.flash_attention import flash_attention as _flash
+from repro.kernels.fused_nt_scatter import fused_nt_scatter as _fused
+from repro.kernels.mp_scatter import mp_scatter as _mp_scatter
+from repro.kernels.nt_mlp import nt_mlp as _nt_mlp
+
+Array = jax.Array
+
+
+@functools.lru_cache(maxsize=1)
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def mp_scatter(msg, receivers, edge_mask, num_nodes, *, node_tile=8,
+               edge_tile=128, num_banks=4) -> Array:
+    return _mp_scatter(msg, receivers, edge_mask, num_nodes,
+                       node_tile=node_tile, edge_tile=edge_tile,
+                       num_banks=num_banks, interpret=_interpret())
+
+
+def nt_mlp(x, w1, b1, w2, b2, *, node_tile=128, k_tile=128) -> Array:
+    return _nt_mlp(x, w1, b1, w2, b2, node_tile=node_tile, k_tile=k_tile,
+                   interpret=_interpret())
+
+
+def fused_nt_scatter(x, w1, b1, w2, b2, senders, receivers, edge_mask,
+                     edge_feat, *, node_tile=32) -> Array:
+    return _fused(x, w1, b1, w2, b2, senders, receivers, edge_mask,
+                  edge_feat, node_tile=node_tile, interpret=_interpret())
+
+
+def flash_attention(q, k, v, *, causal=True, window: Optional[int] = None,
+                    softcap: Optional[float] = None, q_tile=128,
+                    kv_tile=128) -> Array:
+    return _flash(q, k, v, causal=causal, window=window, softcap=softcap,
+                  q_tile=q_tile, kv_tile=kv_tile, interpret=_interpret())
+
+
+# oracles re-exported for tests/benchmarks
+mp_scatter_ref = _ref.mp_scatter_ref
+nt_mlp_ref = _ref.nt_mlp_ref
+fused_nt_scatter_ref = _ref.fused_nt_scatter_ref
+mha_ref = _ref.mha_ref

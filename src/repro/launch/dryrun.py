@@ -1,0 +1,126 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this prints/records:
+  * memory_analysis()  — per-device bytes (proves the config fits HBM),
+  * cost_analysis()    — per-device HLO FLOPs / bytes for §Roofline,
+  * the collective schedule parsed from the partitioned HLO,
+  * the three roofline terms + bottleneck + useful-FLOPs ratio.
+
+Usage:
+  python -m repro.launch.dryrun --arch llama3-8b --shape train_4k
+  python -m repro.launch.dryrun --all [--mesh pod|multipod|both]
+
+Results land in experiments/dryrun/<arch>__<shape>__<mesh>.json.
+"""
+
+import argparse
+import json
+import time
+import traceback
+from pathlib import Path
+
+import jax
+
+from repro.configs.archs import ARCHS, shape_applicable
+from repro.configs.base import SHAPES, TrainConfig
+from repro.launch.hlo_cost import measured_costs
+from repro.launch.mesh import make_production_mesh
+from repro.launch.roofline import memory_report, roofline_report
+from repro.launch.steps import lowering_bundle
+
+OUT_DIR = Path(__file__).resolve().parents[3] / "experiments" / "dryrun"
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str,
+             verbose: bool = True) -> dict:
+    cfg = ARCHS[arch]
+    shape = SHAPES[shape_name]
+    ok, why = shape_applicable(arch, shape_name)
+    rec = {"arch": arch, "shape": shape_name, "mesh": mesh_kind}
+    if not ok:
+        rec["status"] = "skipped"
+        rec["reason"] = why
+        return rec
+
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multipod"))
+    n_dev = mesh.devices.size
+    t0 = time.time()
+    try:
+        with mesh:
+            jitted, args = lowering_bundle(cfg, shape, mesh,
+                                           tcfg=TrainConfig())
+            lowered = jitted.lower(*args)
+            t_lower = time.time() - t0
+            t0 = time.time()
+            compiled = lowered.compile()
+            t_compile = time.time() - t0
+            hlo = compiled.as_text()
+        mem = memory_report(compiled, hlo)
+        # roofline costs are single-pod only (the multipod pass proves the
+        # 'pod' axis shards); skipping the extrapolation compiles there
+        # roughly halves total sweep time on this 1-core container
+        measured = (measured_costs(cfg, shape, mesh, TrainConfig())
+                    if mesh_kind == "pod" else None)
+        roof = roofline_report(compiled, hlo, n_dev, cfg, shape,
+                               measured=measured)
+        rec.update(status="ok", n_devices=n_dev, lower_s=t_lower,
+                   compile_s=t_compile, memory=mem, roofline=roof,
+                   measured=measured)
+        if verbose:
+            print(compiled.memory_analysis())
+            ca = compiled.cost_analysis()
+            if isinstance(ca, (list, tuple)):
+                ca = ca[0]
+            print({k: ca[k] for k in ("flops", "bytes accessed")
+                   if k in ca})
+            print(f"[{arch} | {shape_name} | {mesh_kind}] "
+                  f"compile={t_compile:.1f}s "
+                  f"peak/dev={mem['peak_estimate_bytes']/2**30:.2f}GiB "
+                  f"bottleneck={roof['bottleneck']} "
+                  f"roofline_frac={roof.get('roofline_fraction', 0):.3f}")
+    except Exception as e:  # a failing cell is a bug to fix, not to hide
+        rec.update(status="error", error=f"{type(e).__name__}: {e}",
+                   traceback=traceback.format_exc()[-4000:])
+        if verbose:
+            print(f"[{arch} | {shape_name} | {mesh_kind}] FAILED: {e}")
+    return rec
+
+
+def save(rec: dict) -> Path:
+    OUT_DIR.mkdir(parents=True, exist_ok=True)
+    p = OUT_DIR / f"{rec['arch']}__{rec['shape']}__{rec['mesh']}.json"
+    p.write_text(json.dumps(rec, indent=2, default=str))
+    return p
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=sorted(ARCHS), default=None)
+    ap.add_argument("--shape", choices=sorted(SHAPES), default=None)
+    ap.add_argument("--mesh", choices=("pod", "multipod", "both"),
+                    default="pod")
+    ap.add_argument("--all", action="store_true")
+    args = ap.parse_args()
+
+    meshes = ["pod", "multipod"] if args.mesh == "both" else [args.mesh]
+    archs = sorted(ARCHS) if args.arch is None else [args.arch]
+    shapes = sorted(SHAPES) if args.shape is None else [args.shape]
+    if not args.all and (args.arch is None or args.shape is None):
+        ap.error("pass --arch and --shape, or --all")
+
+    n_fail = 0
+    for m in meshes:
+        for a in archs:
+            for s in shapes:
+                rec = run_cell(a, s, m)
+                save(rec)
+                n_fail += rec["status"] == "error"
+    print(f"done; {n_fail} failed cells")
+    raise SystemExit(1 if n_fail else 0)
+
+
+if __name__ == "__main__":
+    main()

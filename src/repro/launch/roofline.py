@@ -1,0 +1,232 @@
+"""Roofline terms from a compiled dry-run artifact (no hardware needed).
+
+    compute term    = HLO_FLOPs_per_device / peak_FLOP/s
+    memory term     = HLO_bytes_per_device / HBM_bw
+    collective term = collective_bytes_per_device / link_bw
+
+``compiled.cost_analysis()`` on the SPMD-partitioned module reports
+*per-device* flops/bytes (verified against hand counts in EXPERIMENTS.md),
+so the brief's "/ chips" division is already applied. collective bytes are
+parsed from the partitioned HLO text: result bytes of every all-gather /
+reduce-scatter / all-to-all / collective-permute, with all-reduce counted
+twice (ring AR moves ~2x the payload).
+"""
+
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from typing import Dict, Optional, Tuple
+
+# TPU v5e per-chip constants (the assignment's hardware model)
+PEAK_FLOPS = 197e12        # bf16 FLOP/s
+HBM_BW = 819e9             # bytes/s
+LINK_BW = 50e9             # bytes/s per ICI link
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"\b([a-z]\d*[a-z0-9]*)\[([0-9,]*)\]")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+_COLL_RE = re.compile(
+    r"= (?P<type>.*?) (?P<kind>all-gather|all-reduce|reduce-scatter|"
+    r"all-to-all|collective-permute)(?P<async>-start|-done)?\(")
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, Dict[str, float]]:
+    """Per collective kind: {'bytes': result bytes (AR x2), 'count': n,
+    'tpu_bytes': f32-payload collectives >= 64 MiB recosted at bf16}.
+
+    The tpu_bytes adjustment: XLA:CPU upconverts bf16 dot operands to f32,
+    so many large activation/weight collectives appear in f32 in this HLO;
+    the TPU lowering keeps them bf16 (half the bytes). Both raw and
+    adjusted numbers are reported (EXPERIMENTS.md §Roofline).
+
+    Result types precede the op name ("f32[8,128]{1,0} all-gather(...)");
+    async '-done' halves are skipped so start/done pairs count once.
+    """
+    out: Dict[str, Dict[str, float]] = defaultdict(
+        lambda: {"bytes": 0.0, "count": 0, "tpu_bytes": 0.0})
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if m is None or m.group("async") == "-done":
+            continue
+        kind = m.group("kind")
+        tstr = m.group("type")
+        b = _shape_bytes(tstr)
+        if m.group("async") == "-start":
+            b = b / 2  # start tuples carry (operand, result): count once
+        mult = 2.0 if kind == "all-reduce" else 1.0
+        if kind == "reduce-scatter":
+            # result is the SMALL side; a ring RS moves ~operand bytes
+            # (= result x participants); participants from replica_groups
+            mult = float(_group_size(line))
+        tpu_b = b
+        if "f32[" in tstr and b >= 2 ** 26:
+            tpu_b = b / 2
+        out[kind]["bytes"] += b * mult
+        out[kind]["tpu_bytes"] += tpu_b * mult
+        out[kind]["count"] += 1
+    return dict(out)
+
+
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[\d+,(\d+)\]")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([0-9,]+)\}")
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        return int(m.group(1))
+    m = _GROUPS_LIST_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    return 2  # conservative fallback
+
+
+def model_flops(cfg, shape) -> float:
+    """6*N*D (train) / 2*N*D (inference) with N = active params."""
+    from repro.distributed.sharding import param_count
+    from repro.models.lm import lm_param_defs
+    n_total = param_count(lm_param_defs(cfg))
+    n_active = n_total
+    if cfg.num_experts:
+        per_expert = cfg.d_model * cfg.moe_d_ff * 3
+        n_layers_moe = cfg.num_layers
+        inactive = (cfg.num_experts - cfg.num_experts_per_tok) * per_expert \
+            * n_layers_moe
+        n_active = n_total - inactive
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_active * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_active * tokens
+    tokens = shape.global_batch           # one step
+    return 2.0 * n_active * tokens
+
+
+def roofline_report(compiled, hlo_text: str, n_devices: int,
+                    cfg=None, shape=None,
+                    measured: Optional[Dict] = None) -> Dict:
+    """measured: loop-aware costs from launch/hlo_cost.py (preferred). The
+    raw compiled cost_analysis undercounts while-loop bodies and is kept
+    only as 'raw_*' fields for comparison."""
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0]
+    raw_flops = float(ca.get("flops", 0.0))
+    raw_bytes = float(ca.get("bytes accessed", 0.0))
+    colls = collective_bytes(hlo_text)
+    if measured is not None:
+        flops = measured["flops"]
+        bytes_accessed = measured["bytes"]
+        coll_bytes = measured["coll_bytes"]
+        coll_tpu = measured.get("coll_tpu_bytes", coll_bytes)
+    else:
+        flops = raw_flops
+        bytes_accessed = raw_bytes
+        coll_bytes = sum(v["bytes"] for v in colls.values())
+        coll_tpu = sum(v.get("tpu_bytes", v["bytes"])
+                       for v in colls.values())
+
+    compute_s = flops / PEAK_FLOPS
+    memory_s = bytes_accessed / HBM_BW
+    collective_s = coll_bytes / LINK_BW
+    collective_s_tpu = coll_tpu / LINK_BW
+    terms = {"compute_s": compute_s, "memory_s": memory_s,
+             "collective_s": collective_s}
+    bottleneck = max(terms, key=terms.get)
+
+    rep = {
+        "per_device_flops": flops,
+        "per_device_bytes": bytes_accessed,
+        "per_device_collective_bytes": coll_bytes,
+        "raw_cost_analysis_flops": raw_flops,
+        "raw_cost_analysis_bytes": raw_bytes,
+        "collectives": colls,
+        **terms,
+        "collective_s_tpu_adjusted": collective_s_tpu,
+        "bottleneck": bottleneck,
+        "step_time_lower_bound_s": max(terms.values()),
+    }
+    if cfg is not None and shape is not None:
+        mf = model_flops(cfg, shape)
+        rep["model_flops_total"] = mf
+        rep["model_flops_per_device"] = mf / n_devices
+        # the fraction is only meaningful with loop-aware measured costs
+        # (raw cost_analysis undercounts scanned models; see hlo_cost.py)
+        if measured is not None:
+            if flops > 0:
+                rep["useful_flops_ratio"] = (mf / n_devices) / flops
+            peak_time = (mf / n_devices) / PEAK_FLOPS
+            rep["roofline_fraction"] = (peak_time / max(terms.values())
+                                        if max(terms.values()) > 0 else 0.0)
+    return rep
+
+
+_CONVERT_RE = re.compile(
+    r"= f32\[([0-9,]+)\][^ ]* (?:fusion|convert)\(")
+
+
+def cpu_f32_artifact_bytes(hlo_text: str, min_bytes: int = 2 ** 26) -> float:
+    """Upper-bound estimate of CPU-only f32 buffers created because XLA:CPU
+    upconverts bf16 dot operands to f32 (TPU executes bf16 on the MXU
+    natively, so these buffers do not exist on the target). Counts unique
+    large f32 convert/fusion results; see EXPERIMENTS.md §Dry-run."""
+    total = 0.0
+    seen = set()
+    for line in hlo_text.splitlines():
+        if "wrapped_convert" not in line and "convert_" not in line:
+            continue
+        m = re.search(r"= f32\[([0-9,]+)\]", line)
+        if not m:
+            continue
+        n = 1
+        for d in m.group(1).split(","):
+            n *= int(d)
+        b = n * 4
+        if b >= min_bytes:
+            key = (m.group(1), line.split(" = ")[0].strip())
+            if key not in seen:
+                seen.add(key)
+                total += b
+    return total
+
+
+def memory_report(compiled, hlo_text: str = "") -> Dict[str, float]:
+    ma = compiled.memory_analysis()
+    rep = {
+        "argument_bytes": float(ma.argument_size_in_bytes),
+        "output_bytes": float(ma.output_size_in_bytes),
+        "temp_bytes": float(ma.temp_size_in_bytes),
+        "alias_bytes": float(ma.alias_size_in_bytes),
+        "peak_estimate_bytes": float(ma.argument_size_in_bytes
+                                     + ma.temp_size_in_bytes),
+    }
+    if hlo_text:
+        art = cpu_f32_artifact_bytes(hlo_text)
+        rep["cpu_f32_dot_artifact_bytes_ub"] = art
+        rep["tpu_adjusted_peak_bytes"] = max(
+            rep["peak_estimate_bytes"] - art, rep["argument_bytes"])
+    return rep

@@ -1,0 +1,236 @@
+"""Step builders shared by the trainer, the server and the dry-run.
+
+Everything here is mesh-agnostic: pass mesh=None for single-device smoke
+tests, or a production mesh + rules for distributed lowering.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig, TrainConfig
+from repro.distributed.sharding import (ParamDef, ShardingRules,
+                                        abstract_params, make_rules,
+                                        param_shardings, param_specs)
+from repro.launch.mesh import data_axis_names
+from repro.models import lm
+from repro.optim.optimizers import get_optimizer
+
+
+def build_rules(cfg: ModelConfig, mesh, kind: str,
+                global_batch: int = 0) -> ShardingRules:
+    data_axes = data_axis_names(mesh) if mesh is not None else ("data",)
+    if cfg.sharding_profile == "dp_only":
+        from repro.distributed.sharding import make_dp_only_rules
+        rules = make_dp_only_rules(data_axes=data_axes)
+        if mesh is not None and global_batch:
+            n = mesh.devices.size
+            if global_batch % n:
+                t = dict(rules.table)
+                t["batch"] = data_axes if len(data_axes) > 1 else data_axes[0]
+                rules = ShardingRules(table=t)
+        return rules
+    # KV-cache layout: shard on kv-heads when they divide the model axis
+    # (keeps decode attention collective-free and the cache update local);
+    # otherwise shard on seq (flash-decoding combine via all-reduce).
+    model_size = mesh.shape["model"] if mesh is not None else 1
+    heads_ok = cfg.num_kv_heads and cfg.num_kv_heads % model_size == 0
+    rules = make_rules(
+        data_axes=data_axes,
+        fsdp=cfg.fsdp,
+        expert_fsdp=cfg.expert_fsdp,
+        shard_seq_for_decode=(kind in ("decode", "prefill")
+                              and not heads_ok),
+        seq_parallel=(kind != "decode"),
+    )
+    if mesh is not None and global_batch:
+        n_data = 1
+        for a in data_axes:
+            n_data *= mesh.shape[a]
+        if global_batch % n_data:
+            # batch-1 long-context decode etc: batch cannot shard
+            t = dict(rules.table)
+            t["batch"] = None
+            rules = ShardingRules(table=t)
+    return rules
+
+
+# ---------------------------------------------------------------------------
+# abstract inputs (ShapeDtypeStruct stand-ins; no allocation)
+# ---------------------------------------------------------------------------
+
+def batch_defs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, ParamDef]:
+    b, s = shape.global_batch, shape.seq_len
+    defs = {
+        "tokens": ParamDef((b, s), ("batch", None), init="zeros",
+                           dtype=jnp.int32),
+        "labels": ParamDef((b, s), ("batch", None), init="zeros",
+                           dtype=jnp.int32),
+    }
+    if cfg.prefix_len:
+        defs["prefix_embed"] = ParamDef(
+            (b, cfg.prefix_len, cfg.d_model), ("batch", None, None),
+            init="zeros", dtype=cfg.dtype)
+    return defs
+
+
+def decode_input_defs(cfg: ModelConfig, shape: ShapeConfig):
+    b = shape.global_batch
+    return {
+        "token": ParamDef((b, 1), ("batch", None), init="zeros",
+                          dtype=jnp.int32),
+        "position": ParamDef((), (), init="zeros", dtype=jnp.int32),
+    }
+
+
+def prefill_input_defs(cfg: ModelConfig, shape: ShapeConfig):
+    defs = batch_defs(cfg, shape)
+    del defs["labels"]
+    return defs
+
+
+# ---------------------------------------------------------------------------
+# step functions
+# ---------------------------------------------------------------------------
+
+def make_train_step(cfg: ModelConfig, tcfg: TrainConfig,
+                    rules: Optional[ShardingRules], mesh):
+    """Train step with microbatch gradient accumulation (f32 accumulator).
+
+    Microbatching bounds activation memory: per-microbatch transients shrink
+    by ~k while grads/optimizer stay fixed — the standard recipe when tokens
+    per device are large (our assigned shapes put 64k tokens on each chip).
+    """
+    opt = get_optimizer(cfg.optimizer)
+
+    def loss_fn(params, mb):
+        return lm.lm_loss(params, mb, cfg, rules=rules, mesh=mesh)
+
+    def train_step(params, opt_state, batch):
+        k = tcfg.microbatches
+        if k <= 1:
+            (loss, parts), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params, batch)
+        else:
+            split = jax.tree.map(
+                lambda a: a.reshape((k, a.shape[0] // k) + a.shape[1:]),
+                batch)
+
+            def micro(carry, mb):
+                gsum, lsum, psum_ = carry
+                (l, parts), g = jax.value_and_grad(
+                    loss_fn, has_aux=True)(params, mb)
+                gsum = jax.tree.map(
+                    lambda s, gg: s + gg.astype(jnp.float32), gsum, g)
+                psum_ = jax.tree.map(lambda s, v: s + v, psum_, parts)
+                return (gsum, lsum + l, psum_), None
+
+            gsum0 = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            parts0 = {"xent": jnp.zeros((), jnp.float32),
+                      "aux": jnp.zeros((), jnp.float32),
+                      "z_loss": jnp.zeros((), jnp.float32)}
+            carry0 = (gsum0, jnp.zeros((), jnp.float32), parts0)
+            if cfg.unroll_scans:
+                carry = carry0
+                for i in range(k):
+                    carry, _ = micro(carry, jax.tree.map(
+                        lambda a: a[i], split))
+            else:
+                carry, _ = jax.lax.scan(micro, carry0, split)
+            gsum, lsum, psum_ = carry
+            grads = jax.tree.map(lambda g: g / k, gsum)
+            loss = lsum / k
+            parts = jax.tree.map(lambda v: v / k, psum_)
+        params, opt_state, om = opt.update(params, grads, opt_state, tcfg)
+        metrics = {"loss": loss, **parts, **om}
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig, rules, mesh):
+    def prefill_step(params, caches, batch):
+        return lm.prefill(params, batch["tokens"], caches, cfg,
+                          prefix_embed=batch.get("prefix_embed"),
+                          rules=rules, mesh=mesh)
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig, rules, mesh):
+    def serve_step(params, caches, inputs):
+        return lm.decode_step(params, inputs["token"], caches, cfg,
+                              position=inputs["position"], rules=rules,
+                              mesh=mesh)
+    return serve_step
+
+
+# ---------------------------------------------------------------------------
+# lowering bundles (defs + shardings + jitted fn) per shape kind
+# ---------------------------------------------------------------------------
+
+def lowering_bundle(cfg: ModelConfig, shape: ShapeConfig, mesh,
+                    tcfg: Optional[TrainConfig] = None):
+    """Returns (jitted_fn, abstract_args) ready for .lower(*abstract_args)."""
+    kind = shape.kind
+    rules = build_rules(cfg, mesh, kind, global_batch=shape.global_batch)
+    pdefs = lm.lm_param_defs(cfg)
+    p_abs = abstract_params(pdefs)
+    p_sh = param_shardings(pdefs, rules, mesh)
+    rep = NamedSharding(mesh, P())
+
+    def shard_of(defs):
+        return param_shardings(defs, rules, mesh)
+
+    if kind == "train":
+        tcfg = tcfg or TrainConfig()
+        if cfg.train_microbatches > 1 and tcfg.microbatches == 1:
+            import dataclasses
+            tcfg = dataclasses.replace(
+                tcfg, microbatches=cfg.train_microbatches)
+        opt = get_optimizer(cfg.optimizer)
+        odefs = opt.state_defs(pdefs)
+        bdefs = batch_defs(cfg, shape)
+        fn = make_train_step(cfg, tcfg, rules, mesh)
+        jitted = jax.jit(
+            fn,
+            in_shardings=(p_sh, shard_of(odefs), shard_of(bdefs)),
+            out_shardings=(p_sh, shard_of(odefs), rep),
+            donate_argnums=(0, 1),
+        )
+        args = (p_abs, abstract_params(odefs), abstract_params(bdefs))
+        return jitted, args
+
+    cdefs = lm.lm_cache_defs(cfg, shape.global_batch, shape.seq_len)
+    c_abs = abstract_params(cdefs)
+    c_sh = shard_of(cdefs)
+
+    if kind == "prefill":
+        # prefill processes the full prompt and emits a filled cache
+        bdefs = prefill_input_defs(cfg, shape)
+        fn = make_prefill_step(cfg, rules, mesh)
+        jitted = jax.jit(
+            fn,
+            in_shardings=(p_sh, c_sh, shard_of(bdefs)),
+            out_shardings=(rep, c_sh),
+            donate_argnums=(1,),
+        )
+        return jitted, (p_abs, c_abs, abstract_params(bdefs))
+
+    if kind == "decode":
+        idefs = decode_input_defs(cfg, shape)
+        fn = make_decode_step(cfg, rules, mesh)
+        jitted = jax.jit(
+            fn,
+            in_shardings=(p_sh, c_sh, shard_of(idefs)),
+            out_shardings=(rep, c_sh),
+            donate_argnums=(1,),
+        )
+        return jitted, (p_abs, c_abs, abstract_params(idefs))
+
+    raise ValueError(kind)

@@ -1,0 +1,224 @@
+"""GQA attention for the LM substrate.
+
+Three execution paths, all numerically checked against kernels/ref.mha_ref:
+
+  * ``chunked_attention`` — pure-JAX flash (online softmax over kv blocks)
+    with *static block-pair scheduling*: the (q_chunk, kv_chunk) pairs that
+    survive causal/local-window masking are enumerated at trace time and
+    scanned, so fully-masked blocks cost zero FLOPs in the lowered HLO (this
+    is what the dry-run lowers; it is also why the roofline's compute term
+    reflects ~2x savings for causal and ~S/window for local layers).
+  * ``decode_attention`` — one query over a (possibly sequence-sharded) KV
+    cache; reductions over the sharded seq dim lower to all-reduces (flash-
+    decoding style combine under GSPMD).
+  * kernels/flash_attention.py — the Pallas TPU kernel (compiled on TPU,
+    interpret-validated here); same block schedule realized in hardware.
+
+GQA is handled by repeating KV heads inside each kv block (keeps the head
+dim shardable; the cache stores unrepeated KV heads).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import (ParamDef, ShardingRules,
+                                        logical_constraint)
+from repro.nn.flash import FlashSpec, flash_mha
+from repro.nn.layers import apply_rope, softcap
+
+Array = jax.Array
+
+
+def attn_param_defs(cfg: ModelConfig) -> Dict[str, ParamDef]:
+    d, h, hk, dh = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    defs = {
+        "wq": ParamDef((d, h * dh), ("embed_fsdp", "heads"), dtype=cfg.dtype),
+        "wk": ParamDef((d, hk * dh), ("embed_fsdp", "kv_heads"), dtype=cfg.dtype),
+        "wv": ParamDef((d, hk * dh), ("embed_fsdp", "kv_heads"), dtype=cfg.dtype),
+        "wo": ParamDef((h * dh, d), ("heads", "embed_fsdp"), dtype=cfg.dtype),
+    }
+    if cfg.qkv_bias:
+        defs["bq"] = ParamDef((h * dh,), ("heads",), init="zeros", dtype=cfg.dtype)
+        defs["bk"] = ParamDef((hk * dh,), ("kv_heads",), init="zeros", dtype=cfg.dtype)
+        defs["bv"] = ParamDef((hk * dh,), ("kv_heads",), init="zeros", dtype=cfg.dtype)
+    return defs
+
+
+def _block_pairs_padded(sq: int, sk: int, q_chunk: int, kv_chunk: int,
+                        causal: bool, window: Optional[int], offset: int,
+                        sk_real: int) -> np.ndarray:
+    """Static flash-attention block schedule: (qi, ki, flush) triples for
+    every block that is not fully masked. Queries are end-aligned with keys
+    at REAL lengths (offset = sk_real - sq_real), matching mha_ref; padded
+    key blocks beyond sk_real are skipped entirely."""
+    nq, nk = sq // q_chunk, sk // kv_chunk
+    rows = []
+    for qi in range(nq):
+        q_lo = qi * q_chunk + offset
+        q_hi = q_lo + q_chunk - 1
+        kis = []
+        for ki in range(nk):
+            k_lo, k_hi = ki * kv_chunk, ki * kv_chunk + kv_chunk - 1
+            if k_lo >= sk_real:
+                continue                      # pure padding
+            if causal and k_lo > q_hi:
+                continue                      # entirely in the future
+            if window is not None and k_hi <= q_lo - window:
+                continue                      # entirely before the window
+            kis.append(ki)
+        if not kis:
+            # fully-padded q row (only possible for padded queries): attend
+            # block 0 so the row has a defined (discarded) value.
+            kis = [0]
+        for j, ki in enumerate(kis):
+            rows.append((qi, ki, int(j == len(kis) - 1)))
+    return np.asarray(rows, dtype=np.int32)
+
+
+def chunked_attention(q: Array, k: Array, v: Array, *, causal: bool = True,
+                      window: Optional[int] = None,
+                      logit_softcap: Optional[float] = None,
+                      q_chunk: int = 512, kv_chunk: int = 1024,
+                      unroll: bool = False,
+                      rules: Optional[ShardingRules] = None,
+                      mesh=None) -> Array:
+    """q: (B, Sq, H, D); k/v: (B, Sk, Hk, D) with H % Hk == 0. -> (B, Sq, H, D).
+
+    GQA wrapper over the custom-VJP flash core (nn/flash.py): KV heads are
+    repeated to H (the repeat's transpose sums group grads), ragged tails are
+    padded (masked via the static block schedule), and the flash backward
+    keeps layer-remat memory flat.
+    """
+    b, sq_real, h, d = q.shape
+    sk_real, hk = k.shape[1], k.shape[2]
+    rep = h // hk
+    if rep > 1:
+        k = jnp.repeat(k, rep, axis=2)
+        v = jnp.repeat(v, rep, axis=2)
+    q_chunk = min(q_chunk, sq_real)
+    kv_chunk = min(kv_chunk, sk_real)
+    pad_q = (-sq_real) % q_chunk
+    pad_k = (-sk_real) % kv_chunk
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0)))
+    if pad_k:
+        k = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+    spec = FlashSpec(causal=causal, window=window, softcap=logit_softcap,
+                     q_chunk=q_chunk, kv_chunk=kv_chunk, sq_real=sq_real,
+                     sk_real=sk_real, unroll=unroll)
+    out = flash_mha(q, k, v, spec)
+    return out[:, :sq_real]
+
+
+def decode_attention(q: Array, cache_k: Array, cache_v: Array,
+                     cache_len: Array, *, window: Optional[int] = None,
+                     logit_softcap: Optional[float] = None) -> Array:
+    """q: (B, 1, H, D); cache_k/v: (B, Smax, Hk, D); cache_len: () int32.
+
+    Dense single-token attention over the cache. Under a sequence-sharded
+    cache, GSPMD lowers the max/sum reductions to all-reduces (flash-decoding
+    combine).
+    """
+    b, _, h, d = q.shape
+    smax, hk = cache_k.shape[1], cache_k.shape[2]
+    rep = h // hk
+    scale = 1.0 / math.sqrt(d)
+    # GQA-grouped: never materialize repeated KV (a 32k cache repeated in
+    # f32 costs GiBs); scores accumulate in f32 via preferred_element_type.
+    qg = (q[:, 0] * scale).reshape(b, hk, rep, d).astype(cache_k.dtype)
+    s = jnp.einsum("bkgd,bskd->bkgs", qg, cache_k,
+                   preferred_element_type=jnp.float32)  # (B, Hk, G, S)
+    s = softcap(s, logit_softcap)
+    pos = jnp.arange(smax)
+    q_pos = cache_len - 1
+    mask = pos[None, :] <= q_pos                        # (1|B, S)
+    if window is not None:
+        mask &= pos[None, :] > q_pos - window
+    mask4 = mask[:, None, None, :]
+    s = jnp.where(mask4, s, -1e30)
+    m = jnp.max(s, axis=-1, keepdims=True)
+    p = jnp.where(mask4, jnp.exp(s - m), 0.0)
+    denom = jnp.maximum(jnp.sum(p, axis=-1, keepdims=True), 1e-30)
+    o = jnp.einsum("bkgs,bskd->bkgd", (p / denom).astype(cache_v.dtype),
+                   cache_v, preferred_element_type=jnp.float32)
+    return o.reshape(b, 1, h, d).astype(q.dtype)
+
+
+class KVCache(NamedTuple):
+    k: Array          # (B, Smax, Hk, D)
+    v: Array
+    length: Array     # () int32 — tokens currently in the cache
+
+
+def attention(params: Dict[str, Array], x: Array, positions: Array,
+              cfg: ModelConfig, *, layer_window: Optional[int] = None,
+              cache: Optional[KVCache] = None,
+              rules: Optional[ShardingRules] = None, mesh=None
+              ) -> Tuple[Array, Optional[KVCache]]:
+    """Full GQA attention layer. x: (B, S, d).
+
+    Without a cache: training/prefill (chunked flash). With a cache and
+    S == 1: one decode step (cache updated functionally).
+    """
+    b, s, d = x.shape
+    h, hk, dh = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+
+    q = x @ params["wq"]
+    k = x @ params["wk"]
+    v = x @ params["wv"]
+    if cfg.qkv_bias:
+        q, k, v = q + params["bq"], k + params["bk"], v + params["bv"]
+    q = q.reshape(b, s, h, dh)
+    k = k.reshape(b, s, hk, dh)
+    v = v.reshape(b, s, hk, dh)
+    if cfg.pos == "rope":
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    q = logical_constraint(q, "batch", "seq", "act_heads", None,
+                           rules=rules, mesh=mesh)
+    if s > 1:
+        # pin K/V layouts: without this GSPMD picks kv-head shardings that
+        # need seq<->head reshards it can only do by full rematerialization
+        k = logical_constraint(k, "batch", "seq", "act_kv", None,
+                               rules=rules, mesh=mesh)
+        v = logical_constraint(v, "batch", "seq", "act_kv", None,
+                               rules=rules, mesh=mesh)
+
+    new_cache = None
+    if cache is not None and s == 1:
+        ck = jax.lax.dynamic_update_slice_in_dim(
+            cache.k, k.astype(cache.k.dtype), cache.length, axis=1)
+        cv = jax.lax.dynamic_update_slice_in_dim(
+            cache.v, v.astype(cache.v.dtype), cache.length, axis=1)
+        ck = logical_constraint(ck, "batch", "cache_seq", "cache_heads", None,
+                                rules=rules, mesh=mesh)
+        cv = logical_constraint(cv, "batch", "cache_seq", "cache_heads", None,
+                                rules=rules, mesh=mesh)
+        new_cache = KVCache(ck, cv, cache.length + 1)
+        o = decode_attention(q, ck, cv, cache.length + 1,
+                             window=layer_window,
+                             logit_softcap=cfg.attn_softcap)
+    else:
+        o = chunked_attention(
+            q, k, v, causal=True, window=layer_window,
+            logit_softcap=cfg.attn_softcap,
+            q_chunk=cfg.attn_q_chunk, kv_chunk=cfg.attn_kv_chunk,
+            unroll=cfg.unroll_scans, rules=rules, mesh=mesh)
+        if cache is not None:                      # prefill fills the cache
+            pad = cache.k.shape[1] - s
+            ck = jnp.pad(k.astype(cache.k.dtype), ((0, 0), (0, pad), (0, 0), (0, 0)))
+            cv = jnp.pad(v.astype(cache.v.dtype), ((0, 0), (0, pad), (0, 0), (0, 0)))
+            new_cache = KVCache(ck, cv, jnp.asarray(s, jnp.int32))
+
+    o = logical_constraint(o, "batch", "seq", "act_heads", None,
+                           rules=rules, mesh=mesh)
+    out = o.reshape(b, s, h * dh) @ params["wo"]
+    return out, new_cache

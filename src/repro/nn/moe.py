@@ -1,0 +1,182 @@
+"""Mixture-of-Experts with FlowGNN-style destination banking (DESIGN.md §4).
+
+Token -> expert dispatch *is* message passing: tokens are sources, experts
+are destination banks, and the top-k router emits the edge list on the fly
+(zero preprocessing). Exactly like the paper's multicast adapter, each
+expert-parallel shard *owns a contiguous expert bank* and selects only the
+tokens routed to its bank — conflict-free, with one all-reduce to combine
+partial outputs (tokens routed elsewhere contribute zeros locally).
+
+Mechanics (per data shard, per token group — GShard-style groups bound the
+dispatch buffers):
+  1. router logits -> top-k (expert id, weight) per token,
+  2. sort the flattened assignments by expert id (on-the-fly binning),
+  3. within-expert rank via searchsorted; rank >= capacity drops (standard),
+  4. scatter tokens into the local bank's (E_loc, C, d) buffer,
+  5. batched expert FFN (einsum over the local bank),
+  6. gather-back * router weight, scatter-add into the output,
+  7. psum over the expert-parallel ('model') axis.
+
+Expert weights can additionally be FSDP-sharded on the ff dim ('expert_ff'
+-> data axes, used by arctic-480b); they are all-gathered just-in-time
+inside the shard_map and re-gathered in the backward pass under remat.
+"""
+
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import ParamDef, ShardingRules
+from repro.nn.layers import activation
+
+Array = jax.Array
+
+
+def moe_param_defs(cfg: ModelConfig) -> Dict[str, ParamDef]:
+    d, e, ff = cfg.d_model, cfg.num_experts, cfg.moe_d_ff
+    return {
+        "router": ParamDef((d, e), (None, None), dtype=jnp.float32),
+        "wg": ParamDef((e, d, ff), ("experts", None, "expert_ff"), dtype=cfg.dtype),
+        "wu": ParamDef((e, d, ff), ("experts", None, "expert_ff"), dtype=cfg.dtype),
+        "wd": ParamDef((e, ff, d), ("experts", "expert_ff", None), dtype=cfg.dtype),
+    }
+
+
+def _capacity(tokens: int, k: int, e: int, cf: float) -> int:
+    c = int(math.ceil(tokens * k / e * cf))
+    return max(8, (c + 7) // 8 * 8)
+
+
+def _dispatch_compute_combine(xg: Array, rw: Array, wg: Array, wu: Array,
+                              wd: Array, *, e_total: int, bank_start: int,
+                              k: int, capacity: int, act) -> Tuple[Array, Array]:
+    """One token group through the local expert bank.
+
+    xg: (T, d); wg/wu: (E_loc, d, ff); wd: (E_loc, ff, d).
+    Returns (partial_out (T, d), aux_loss ()).
+    """
+    t, d = xg.shape
+    e_loc = wg.shape[0]
+    logits = (xg.astype(jnp.float32) @ rw).astype(jnp.float32)      # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_w, top_i = jax.lax.top_k(probs, k)                          # (T, k)
+
+    # --- on-the-fly binning (the FlowGNN multicast): sort edges by dest bank
+    flat_e = top_i.reshape(-1)                                      # (T*k,)
+    flat_t = jnp.repeat(jnp.arange(t, dtype=jnp.int32), k)
+    flat_w = top_w.reshape(-1)
+    order = jnp.argsort(flat_e, stable=True)
+    se, st, sw = flat_e[order], flat_t[order], flat_w[order]
+    starts = jnp.searchsorted(se, jnp.arange(e_total), side="left")
+    rank = jnp.arange(t * k, dtype=jnp.int32) - starts[se].astype(jnp.int32)
+    keep = rank < capacity
+    local_e = se - bank_start
+    own = (local_e >= 0) & (local_e < e_loc) & keep
+    slot = jnp.where(own, local_e * capacity + rank, e_loc * capacity)
+
+    # --- scatter into the bank buffer (trash row absorbs foreign tokens)
+    buf = jnp.zeros((e_loc * capacity + 1, d), xg.dtype)
+    buf = buf.at[slot].set(xg[st])
+    buf = buf[:-1].reshape(e_loc, capacity, d)
+
+    # --- batched expert FFN on the bank
+    h = act(jnp.einsum("ecd,edf->ecf", buf, wg)) * jnp.einsum(
+        "ecd,edf->ecf", buf, wu)
+    y = jnp.einsum("ecf,efd->ecd", h, wd).reshape(e_loc * capacity, d)
+
+    # --- combine: gather back, weight, scatter-add
+    contrib = jnp.where(
+        own[:, None], y[jnp.clip(slot, 0, e_loc * capacity - 1)], 0.0)
+    contrib = contrib * sw[:, None].astype(contrib.dtype)
+    out = jnp.zeros((t, d), xg.dtype).at[st].add(contrib.astype(xg.dtype))
+
+    # --- switch-style load-balance aux (computed on the full router output)
+    # scatter-add bincount instead of one_hot: a (T, k, E) one-hot costs
+    # ~134 MB/group at olmoe's sizes purely for this statistic
+    counts = jnp.zeros((e_total,), jnp.float32).at[flat_e].add(1.0)
+    frac = counts / t
+    mean_p = jnp.mean(probs, axis=0)
+    aux = e_total * jnp.sum(frac * mean_p)
+    return out, aux
+
+
+def _moe_all(x: Array, rw: Array, wg: Array, wu: Array, wd: Array, *,
+             cfg: ModelConfig, bank_start, group_size: int) -> Tuple[Array, Array]:
+    """Run all token groups through the local bank. x: (B, S, d)."""
+    b, s, d = x.shape
+    t = b * s
+    x2 = x.reshape(t, d)
+    groups = max(1, -(-t // group_size))
+    while t % groups:
+        groups += 1
+    tg = t // groups
+    cap = _capacity(tg, cfg.num_experts_per_tok, cfg.num_experts,
+                    cfg.capacity_factor)
+    act = activation(cfg.act)
+    fn = partial(_dispatch_compute_combine, rw=rw, wg=wg, wu=wu, wd=wd,
+                 e_total=cfg.num_experts, bank_start=bank_start,
+                 k=cfg.num_experts_per_tok, capacity=cap, act=act)
+    if cfg.moe_inner_remat:
+        # remat each token group: differentiating lax.map otherwise saves
+        # every group's dispatch buffers (O(groups) residuals per layer).
+        # Under layer-level remat this costs a THIRD dispatch recompute in
+        # the nested backward; archs with peak-memory headroom turn it off
+        # (EXPERIMENTS.md §Perf, olmoe iteration 3).
+        fn = jax.checkpoint(fn,
+                            policy=jax.checkpoint_policies.nothing_saveable)
+    if groups == 1:
+        out, aux = fn(x2)
+    elif cfg.unroll_scans:
+        res = [fn(xg) for xg in x2.reshape(groups, tg, d)]
+        out = jnp.concatenate([r[0] for r in res], axis=0)
+        aux = jnp.mean(jnp.stack([r[1] for r in res]))
+    else:
+        out, aux = jax.lax.map(fn, x2.reshape(groups, tg, d))
+        out, aux = out.reshape(t, d), jnp.mean(aux)
+    return out.reshape(b, s, d), aux
+
+
+def moe_ffn(params: Dict[str, Array], x: Array, cfg: ModelConfig, *,
+            rules: Optional[ShardingRules] = None, mesh=None,
+            group_size: int = 8192) -> Tuple[Array, Array]:
+    """MoE feed-forward. x: (B, S, d) -> (out (B, S, d), aux ())."""
+    if mesh is None or rules is None:
+        return _moe_all(x, params["router"], params["wg"], params["wu"],
+                        params["wd"], cfg=cfg, bank_start=0,
+                        group_size=group_size)
+
+    model_ax = rules.axis("experts")                 # expert-parallel axis
+    ef_ax = rules.axis("expert_ff")                  # FSDP axis or None
+    batch_ax = rules.axis("batch")
+    e_loc = cfg.num_experts // mesh.shape[model_ax]
+
+    def local_fn(x_loc, rw, wg, wu, wd):
+        if ef_ax is not None:
+            wg = jax.lax.all_gather(wg, ef_ax, axis=2, tiled=True)
+            wu = jax.lax.all_gather(wu, ef_ax, axis=2, tiled=True)
+            wd = jax.lax.all_gather(wd, ef_ax, axis=1, tiled=True)
+        bank_start = jax.lax.axis_index(model_ax) * e_loc
+        out, aux = _moe_all(x_loc, rw, wg, wu, wd, cfg=cfg,
+                            bank_start=bank_start, group_size=group_size)
+        out = jax.lax.psum(out, model_ax)            # combine expert banks
+        aux = jax.lax.pmean(aux, batch_ax)           # replicated aux
+        return out, aux
+
+    in_specs = (
+        P(batch_ax, None, None),                     # x (replicated on model)
+        P(None, None),                               # router
+        P(model_ax, None, ef_ax),                    # wg
+        P(model_ax, None, ef_ax),                    # wu
+        P(model_ax, ef_ax, None),                    # wd
+    )
+    out_specs = (P(batch_ax, None, None), P())
+    fn = jax.shard_map(local_fn, mesh=mesh, in_specs=in_specs,
+                       out_specs=out_specs, check_vma=False)
+    return fn(x, params["router"], params["wg"], params["wu"], params["wd"])

@@ -1,0 +1,114 @@
+"""Griffin / RecurrentGemma recurrent block: conv1d + RG-LRU gated recurrence.
+
+    r_t = sigmoid(W_a x_t + b_a)            # recurrence gate
+    i_t = sigmoid(W_x x_t + b_x)            # input gate
+    a_t = exp(-c * softplus(Lambda) * r_t)  # per-channel decay in (0, 1)
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+Sequence mode uses an associative scan (log-depth); decode is a single
+recurrence step carried in the cache.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import (ParamDef, ShardingRules,
+                                        logical_constraint)
+
+Array = jax.Array
+
+
+def rglru_param_defs(cfg: ModelConfig) -> Dict[str, ParamDef]:
+    d, w = cfg.d_model, cfg.lru_width
+    return {
+        "w_y": ParamDef((d, w), ("embed_fsdp", "lru_width"), dtype=cfg.dtype),
+        "w_x": ParamDef((d, w), ("embed_fsdp", "lru_width"), dtype=cfg.dtype),
+        "conv_w": ParamDef((cfg.lru_conv, w), (None, "lru_width"),
+                           scale=0.3, dtype=cfg.dtype),
+        "conv_b": ParamDef((w,), ("lru_width",), init="zeros", dtype=cfg.dtype),
+        "gate_a": ParamDef((w, w), (None, "lru_width"), dtype=cfg.dtype),
+        "gate_a_b": ParamDef((w,), ("lru_width",), init="zeros", dtype=cfg.dtype),
+        "gate_x": ParamDef((w, w), (None, "lru_width"), dtype=cfg.dtype),
+        "gate_x_b": ParamDef((w,), ("lru_width",), init="zeros", dtype=cfg.dtype),
+        # softplus(lambda)=0.8/c-ish -> a ~ 0.45..0.999 across channels
+        "lam": ParamDef((w,), ("lru_width",), init="constant", constant=0.1,
+                        dtype=jnp.float32),
+        "w_out": ParamDef((w, d), ("lru_width", "embed_fsdp"), dtype=cfg.dtype),
+    }
+
+
+class RecCache(NamedTuple):
+    h: Array        # (B, W) f32 recurrent state
+    conv: Array     # (B, conv-1, W) conv window
+    length: Array
+
+
+def _conv(x: Array, w: Array, b: Array) -> Array:
+    width = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (width - 1, 0), (0, 0)))
+    return sum(xp[:, i:i + x.shape[1], :] * w[i][None, None, :]
+               for i in range(width)) + b
+
+
+def _gates(params, x: Array, cfg: ModelConfig):
+    r = jax.nn.sigmoid((x @ params["gate_a"]).astype(jnp.float32)
+                       + params["gate_a_b"].astype(jnp.float32))
+    i = jax.nn.sigmoid((x @ params["gate_x"]).astype(jnp.float32)
+                       + params["gate_x_b"].astype(jnp.float32))
+    a = jnp.exp(-cfg.lru_c * jax.nn.softplus(params["lam"]) * r)
+    b = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * (i * x.astype(jnp.float32))
+    return a, b
+
+
+def rglru_scan(a: Array, b: Array, h0: Optional[Array] = None) -> Array:
+    """h_t = a_t h_{t-1} + b_t along axis 1 via associative scan."""
+    if h0 is not None:
+        b = b.at[:, 0].add(a[:, 0] * h0)
+
+    def combine(x, y):
+        a1, b1 = x
+        a2, b2 = y
+        return a1 * a2, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return h
+
+
+def recurrent_block(params: Dict[str, Array], x: Array, cfg: ModelConfig, *,
+                    cache: Optional[RecCache] = None,
+                    rules: Optional[ShardingRules] = None, mesh=None
+                    ) -> Tuple[Array, Optional[RecCache]]:
+    """Griffin recurrent branch. x: (B, S, d)."""
+    b, s, d = x.shape
+    y_branch = jax.nn.gelu((x @ params["w_y"]).astype(jnp.float32))
+    u = x @ params["w_x"]
+
+    new_cache = None
+    if cache is not None and s == 1:
+        window = jnp.concatenate([cache.conv, u], axis=1)
+        w = params["conv_w"]
+        conv = (jnp.einsum("bwc,wc->bc", window.astype(jnp.float32),
+                           w.astype(jnp.float32))
+                + params["conv_b"].astype(jnp.float32))[:, None, :]
+        a, bb = _gates(params, conv.astype(x.dtype), cfg)
+        h = a[:, 0] * cache.h + bb[:, 0]
+        hs = h[:, None, :]
+        new_cache = RecCache(h, window[:, 1:], cache.length + 1)
+    else:
+        conv = _conv(u, params["conv_w"], params["conv_b"])
+        conv = logical_constraint(conv, "batch", "seq", "lru_width",
+                                  rules=rules, mesh=mesh)
+        a, bb = _gates(params, conv.astype(x.dtype), cfg)
+        h0 = cache.h if cache is not None else None
+        hs = rglru_scan(a, bb, h0)
+        if cache is not None:
+            new_cache = RecCache(hs[:, -1], u[:, s - cfg.lru_conv + 1:, :],
+                                 jnp.asarray(s, jnp.int32))
+
+    out = (hs * y_branch).astype(x.dtype) @ params["w_out"]
+    return out, new_cache

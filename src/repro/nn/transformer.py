@@ -1,0 +1,285 @@
+"""Block assembly + layer stack (scan over repeating groups, remat).
+
+Layer patterns (cfg.layer_pattern):
+  global       -> group ("attn",)              qwen/deepseek/llama/internvl/
+                                               olmoe/arctic/musicgen
+  local_global -> group ("local", "attn")      gemma2 (alternating windows)
+  griffin      -> group ("rec", "rec", "local") recurrentgemma (+2 rem layers)
+  ssm          -> group ("mamba",)             mamba2
+
+Homogeneous groups are scanned with stacked (num_groups, ...) parameters and
+per-group remat (policy: nothing saveable); remainder layers run unrolled.
+Caches thread through the scan as xs/ys so decode works layer-stacked.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import (ParamDef, ShardingRules,
+                                        logical_constraint)
+from repro.nn.attention import KVCache, attention, attn_param_defs
+from repro.nn.layers import layernorm, rmsnorm
+from repro.nn.mlp import mlp, mlp_param_defs
+from repro.nn.moe import moe_ffn, moe_param_defs
+from repro.nn.rglru import RecCache, recurrent_block, rglru_param_defs
+from repro.nn.ssm import MambaCache, mamba_mixer, mamba_param_defs
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+def norm_defs(cfg: ModelConfig) -> Dict[str, ParamDef]:
+    d = cfg.d_model
+    if cfg.norm == "layernorm":
+        return {"scale": ParamDef((d,), (None,), init="ones", dtype=cfg.dtype),
+                "bias": ParamDef((d,), (None,), init="zeros", dtype=cfg.dtype)}
+    init = "zeros" if cfg.norm_plus_one else "ones"
+    return {"scale": ParamDef((d,), (None,), init=init, dtype=cfg.dtype)}
+
+
+def apply_norm(p: Dict[str, Array], x: Array, cfg: ModelConfig) -> Array:
+    if cfg.norm == "layernorm":
+        return layernorm(x, p["scale"], p["bias"], cfg.norm_eps)
+    return rmsnorm(x, p["scale"], cfg.norm_eps, plus_one=cfg.norm_plus_one)
+
+
+# ---------------------------------------------------------------------------
+# blocks
+# ---------------------------------------------------------------------------
+
+def block_param_defs(cfg: ModelConfig, kind: str) -> Dict[str, Any]:
+    if kind in ("attn", "local"):
+        defs: Dict[str, Any] = {
+            "ln1": norm_defs(cfg),
+            "attn": attn_param_defs(cfg),
+            "ln2": norm_defs(cfg),
+        }
+        if cfg.num_experts:
+            defs["moe"] = moe_param_defs(cfg)
+            if cfg.dense_residual:
+                defs["mlp"] = mlp_param_defs(cfg, gated=True)
+        else:
+            defs["mlp"] = mlp_param_defs(cfg, gated=cfg.gated_mlp)
+        if cfg.post_norms:
+            defs["pn1"] = norm_defs(cfg)
+            defs["pn2"] = norm_defs(cfg)
+        return defs
+    if kind == "mamba":
+        return {"ln1": norm_defs(cfg), "mamba": mamba_param_defs(cfg)}
+    if kind == "rec":
+        return {"ln1": norm_defs(cfg), "rec": rglru_param_defs(cfg),
+                "ln2": norm_defs(cfg), "mlp": mlp_param_defs(cfg, gated=True)}
+    raise ValueError(kind)
+
+
+def block_apply(params, x: Array, positions: Array, cfg: ModelConfig,
+                kind: str, *, cache=None,
+                rules: Optional[ShardingRules] = None, mesh=None
+                ) -> Tuple[Array, Any, Array]:
+    """Returns (x, new_cache, aux_loss)."""
+    aux = jnp.zeros((), jnp.float32)
+    if kind in ("attn", "local"):
+        window = cfg.local_window if kind == "local" else None
+        h = apply_norm(params["ln1"], x, cfg)
+        a_out, new_cache = attention(
+            params["attn"], h, positions, cfg, layer_window=window,
+            cache=cache, rules=rules, mesh=mesh)
+        if cfg.post_norms:
+            a_out = apply_norm(params["pn1"], a_out, cfg)
+        x = x + a_out
+        h = apply_norm(params["ln2"], x, cfg)
+        if cfg.num_experts:
+            f_out, aux = moe_ffn(params["moe"], h, cfg, rules=rules, mesh=mesh)
+            if cfg.dense_residual:
+                f_out = f_out + mlp(params["mlp"], h, cfg, rules=rules, mesh=mesh)
+        else:
+            f_out = mlp(params["mlp"], h, cfg, rules=rules, mesh=mesh)
+        if cfg.post_norms:
+            f_out = apply_norm(params["pn2"], f_out, cfg)
+        x = x + f_out
+    elif kind == "mamba":
+        h = apply_norm(params["ln1"], x, cfg)
+        m_out, new_cache = mamba_mixer(params["mamba"], h, cfg, cache=cache,
+                                       rules=rules, mesh=mesh)
+        x = x + m_out
+    elif kind == "rec":
+        h = apply_norm(params["ln1"], x, cfg)
+        r_out, new_cache = recurrent_block(params["rec"], h, cfg, cache=cache,
+                                           rules=rules, mesh=mesh)
+        x = x + r_out
+        h = apply_norm(params["ln2"], x, cfg)
+        x = x + mlp(params["mlp"], h, cfg, rules=rules, mesh=mesh)
+    else:
+        raise ValueError(kind)
+    sp = "seq_sp" if x.shape[1] > 1 else "seq"
+    x = logical_constraint(x, "batch", sp, "embed", rules=rules, mesh=mesh)
+    return x, new_cache, aux
+
+
+def block_cache_defs(cfg: ModelConfig, kind: str, batch: int, max_len: int):
+    """ParamDef tree for one block's decode cache (zeros-initializable and
+    abstractable for the dry-run)."""
+    if kind in ("attn", "local"):
+        hk, dh = cfg.num_kv_heads, cfg.head_dim
+        return KVCache(
+            k=ParamDef((batch, max_len, hk, dh),
+                       ("batch", "cache_seq", "cache_heads", None),
+                       init="zeros", dtype=cfg.dtype),
+            v=ParamDef((batch, max_len, hk, dh),
+                       ("batch", "cache_seq", "cache_heads", None),
+                       init="zeros", dtype=cfg.dtype),
+            length=ParamDef((), (), init="zeros", dtype=jnp.int32),
+        )
+    if kind == "mamba":
+        return MambaCache(
+            state=ParamDef((batch, cfg.ssm_heads, cfg.ssm_head_dim,
+                            cfg.ssm_state),
+                           ("batch", "ssm_heads", None, None),
+                           init="zeros", dtype=jnp.float32),
+            conv=ParamDef((batch, cfg.ssm_conv - 1,
+                           cfg.d_inner + 2 * cfg.ssm_state),
+                          ("batch", None, None), init="zeros", dtype=cfg.dtype),
+            length=ParamDef((), (), init="zeros", dtype=jnp.int32),
+        )
+    if kind == "rec":
+        return RecCache(
+            h=ParamDef((batch, cfg.lru_width), ("batch", "lru_width"),
+                       init="zeros", dtype=jnp.float32),
+            conv=ParamDef((batch, cfg.lru_conv - 1, cfg.lru_width),
+                          ("batch", None, "lru_width"), init="zeros",
+                          dtype=cfg.dtype),
+            length=ParamDef((), (), init="zeros", dtype=jnp.int32),
+        )
+    raise ValueError(kind)
+
+
+# ---------------------------------------------------------------------------
+# the stack
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class StackDef:
+    group: Tuple[str, ...]
+    num_groups: int
+    remainder: Tuple[str, ...]
+
+
+PATTERNS = {
+    "global": ("attn",),
+    "local_global": ("local", "attn"),
+    "griffin": ("rec", "rec", "local"),
+    "ssm": ("mamba",),
+}
+
+
+def stack_pattern(cfg: ModelConfig) -> StackDef:
+    group = PATTERNS[cfg.layer_pattern]
+    g = len(group)
+    if not cfg.scan_layers:
+        # unrolled: everything is "remainder"
+        full = (group * ((cfg.num_layers + g - 1) // g))[:cfg.num_layers]
+        return StackDef(group, 0, tuple(full))
+    num_groups = cfg.num_layers // g
+    rem = group[:cfg.num_layers % g]
+    return StackDef(group, num_groups, rem)
+
+
+def _stack_defs(cfg: ModelConfig, per_layer_fn) -> Dict[str, Any]:
+    """Build {'groups': tuple_per_position(stacked defs), 'rem': [defs]}."""
+    sd = stack_pattern(cfg)
+
+    def stacked(defs):
+        return jax.tree.map(
+            lambda p: ParamDef((sd.num_groups,) + p.shape,
+                               ("layers",) + p.axes, init=p.init,
+                               scale=p.scale, constant=p.constant,
+                               dtype=p.dtype),
+            defs, is_leaf=lambda x: isinstance(x, ParamDef))
+
+    groups = tuple(stacked(per_layer_fn(kind)) for kind in sd.group) \
+        if sd.num_groups > 0 else ()
+    rem = [per_layer_fn(kind) for kind in sd.remainder]
+    return {"groups": groups, "rem": rem}
+
+
+def stack_param_defs(cfg: ModelConfig) -> Dict[str, Any]:
+    return _stack_defs(cfg, lambda kind: block_param_defs(cfg, kind))
+
+
+def stack_cache_defs(cfg: ModelConfig, batch: int, max_len: int):
+    return _stack_defs(
+        cfg, lambda kind: block_cache_defs(cfg, kind, batch, max_len))
+
+
+def stack_apply(params, x: Array, positions: Array, cfg: ModelConfig, *,
+                caches=None, rules: Optional[ShardingRules] = None,
+                mesh=None) -> Tuple[Array, Any, Array]:
+    """Run the full stack. Returns (x, new_caches | None, aux_loss)."""
+    sd = stack_pattern(cfg)
+    aux0 = jnp.zeros((), jnp.float32)
+    have_cache = caches is not None
+
+    def group_body(carry, xs):
+        """Caches ride in the carry and are updated in place by layer index
+        (xs->ys threading copies the full cache stack twice per step —
+        measured ~2x cache bytes of temp on the 32k decode cells)."""
+        x, aux, group_caches = carry
+        layer_params, idx = xs
+        new_group_caches = []
+        for i, kind in enumerate(sd.group):
+            cache_i = None
+            if have_cache:
+                cache_i = jax.tree.map(
+                    lambda c: jax.lax.dynamic_index_in_dim(
+                        c, idx, 0, keepdims=False), group_caches[i])
+            x, nc, aux_i = block_apply(
+                layer_params[i], x, positions, cfg, kind, cache=cache_i,
+                rules=rules, mesh=mesh)
+            if have_cache:
+                new_group_caches.append(jax.tree.map(
+                    lambda buf, new: jax.lax.dynamic_update_index_in_dim(
+                        buf, new, idx, 0), group_caches[i], nc))
+            aux = aux + aux_i
+        return (x, aux, tuple(new_group_caches)), None
+
+    body = group_body
+    if cfg.remat:
+        body = jax.checkpoint(
+            group_body, policy=jax.checkpoint_policies.nothing_saveable)
+
+    new_group_caches = ()
+    aux = aux0
+    if sd.num_groups > 0:
+        xs = (params["groups"],
+              jnp.arange(sd.num_groups, dtype=jnp.int32))
+        cache_carry = caches["groups"] if have_cache else ()
+        (x, aux, new_group_caches), _ = jax.lax.scan(
+            body, (x, aux0, cache_carry), xs)
+
+    new_rem_caches = []
+    for i, kind in enumerate(sd.remainder):
+        cache_i = caches["rem"][i] if have_cache else None
+
+        def one(p, xx, c, _kind=kind):
+            return block_apply(p, xx, positions, cfg, _kind, cache=c,
+                               rules=rules, mesh=mesh)
+
+        if cfg.remat:
+            one = jax.checkpoint(
+                one, policy=jax.checkpoint_policies.nothing_saveable)
+        x, nc, aux_i = one(params["rem"][i], x, cache_i)
+        new_rem_caches.append(nc)
+        aux = aux + aux_i
+
+    new_caches = ({"groups": new_group_caches, "rem": new_rem_caches}
+                  if have_cache else None)
+    return x, new_caches, aux

@@ -1,0 +1,190 @@
+"""Optimizers (AdamW, Adafactor) as pure functions over ParamDef trees.
+
+State trees are declared as ParamDefs so the dry-run can build abstract
+optimizer state (no allocation) with correct shardings; m/v inherit the
+parameter's sharding (with FSDP configs this gives ZeRO-3-style fully
+sharded optimizer state for free).
+
+Adafactor (factored second moments, no momentum) is used for arctic-480b —
+full AdamW state for 480B params does not fit 256 chips (napkin math in
+EXPERIMENTS.md §Dry-run).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import TrainConfig
+from repro.distributed.sharding import ParamDef
+
+Array = jax.Array
+
+
+def lr_schedule(step: Array, cfg: TrainConfig) -> Array:
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    prog = jnp.clip((step - cfg.warmup_steps)
+                    / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1),
+                    0.0, 1.0)
+    cos = 0.5 * (1.0 + jnp.cos(jnp.pi * prog))
+    return cfg.learning_rate * warm * (0.1 + 0.9 * cos)
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    leaves = jax.tree.leaves(grads)
+    gn = jnp.sqrt(sum(jnp.sum(g.astype(jnp.float32) ** 2) for g in leaves))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype),
+                        grads), gn
+
+
+def _zeros_like_def(d: ParamDef, dtype=jnp.float32) -> ParamDef:
+    return ParamDef(d.shape, d.opt_axes or d.axes, init="zeros", dtype=dtype)
+
+
+# ---------------------------------------------------------------------------
+# AdamW
+# ---------------------------------------------------------------------------
+
+def adamw_state_defs(param_defs) -> Dict[str, Any]:
+    is_def = lambda x: isinstance(x, ParamDef)
+    return {
+        "step": ParamDef((), (), init="zeros", dtype=jnp.int32),
+        "m": jax.tree.map(_zeros_like_def, param_defs, is_leaf=is_def),
+        "v": jax.tree.map(_zeros_like_def, param_defs, is_leaf=is_def),
+    }
+
+
+def adamw_update(params, grads, state, cfg: TrainConfig):
+    step = state["step"] + 1
+    lr = lr_schedule(step, cfg)
+    grads, gnorm = clip_by_global_norm(grads, cfg.grad_clip)
+    b1, b2 = cfg.b1, cfg.b2
+
+    def upd(p, g, m, v):
+        gf = g.astype(jnp.float32)
+        m = b1 * m + (1 - b1) * gf
+        v = b2 * v + (1 - b2) * gf * gf
+        mh = m / (1 - b1 ** step.astype(jnp.float32))
+        vh = v / (1 - b2 ** step.astype(jnp.float32))
+        pf = p.astype(jnp.float32)
+        pf = pf - lr * (mh / (jnp.sqrt(vh) + 1e-8) + cfg.weight_decay * pf)
+        return pf.astype(p.dtype), m, v
+
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_m = jax.tree.leaves(state["m"])
+    flat_v = jax.tree.leaves(state["v"])
+    out = _chained_updates(upd, list(zip(flat_p, flat_g, flat_m, flat_v)))
+    new_p = jax.tree.unflatten(tdef, [o[0] for o in out])
+    new_m = jax.tree.unflatten(tdef, [o[1] for o in out])
+    new_v = jax.tree.unflatten(tdef, [o[2] for o in out])
+    return new_p, {"step": step, "m": new_m, "v": new_v}, \
+        {"lr": lr, "grad_norm": gnorm}
+
+
+def _chained_updates(upd, leaf_args):
+    """Apply per-leaf updates in a barrier-enforced chain: without it XLA
+    schedules the f32 upcasts of many GiB-sized leaves concurrently (measured
+    +15 GiB peak on arctic-480b)."""
+    out = []
+    prev = None
+    for args in leaf_args:
+        if prev is not None:
+            args = jax.lax.optimization_barrier(tuple(args) + (prev,))[:-1]
+        res = upd(*args)
+        prev = res[0]
+        out.append(res)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Adafactor (factored second moments; memory ~ sum of dims, not product)
+# ---------------------------------------------------------------------------
+
+def _factored(shape) -> bool:
+    return len(shape) >= 2 and shape[-1] > 1 and shape[-2] > 1
+
+
+def adafactor_state_defs(param_defs) -> Dict[str, Any]:
+    is_def = lambda x: isinstance(x, ParamDef)
+
+    def row_def(d: ParamDef) -> ParamDef:
+        if not _factored(d.shape):
+            return _zeros_like_def(d)
+        return ParamDef(d.shape[:-1], d.axes[:-1], init="zeros",
+                        dtype=jnp.float32)
+
+    def col_def(d: ParamDef) -> ParamDef:
+        if not _factored(d.shape):
+            return ParamDef((1,), (None,), init="zeros", dtype=jnp.float32)
+        return ParamDef(d.shape[:-2] + d.shape[-1:],
+                        d.axes[:-2] + d.axes[-1:], init="zeros",
+                        dtype=jnp.float32)
+
+    return {
+        "step": ParamDef((), (), init="zeros", dtype=jnp.int32),
+        "vr": jax.tree.map(row_def, param_defs, is_leaf=is_def),
+        "vc": jax.tree.map(col_def, param_defs, is_leaf=is_def),
+    }
+
+
+def adafactor_update(params, grads, state, cfg: TrainConfig):
+    step = state["step"] + 1
+    lr = lr_schedule(step, cfg)
+    grads, gnorm = clip_by_global_norm(grads, cfg.grad_clip)
+    beta2 = 1.0 - step.astype(jnp.float32) ** -0.8
+    eps = 1e-30
+
+    def upd(p, g, vr, vc):
+        gf = g.astype(jnp.float32)
+        g2 = gf * gf + eps
+        if _factored(p.shape):
+            vr = beta2 * vr + (1 - beta2) * jnp.mean(g2, axis=-1)
+            vc = beta2 * vc + (1 - beta2) * jnp.mean(g2, axis=-2)
+            rfac = vr / jnp.maximum(
+                jnp.mean(vr, axis=-1, keepdims=True), eps)
+            u = gf / (jnp.sqrt(rfac)[..., None] * jnp.sqrt(vc)[..., None, :])
+        else:
+            vr = beta2 * vr + (1 - beta2) * g2
+            u = gf / jnp.sqrt(vr + 1e-12)
+            vc = vc
+        # update clipping (Adafactor's d=1.0 RMS rule)
+        rms = jnp.sqrt(jnp.mean(u * u) + eps)
+        u = u / jnp.maximum(1.0, rms)
+        pf = p.astype(jnp.float32)
+        pf = pf - lr * u - lr * cfg.weight_decay * pf
+        return pf.astype(p.dtype), vr, vc
+
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_r = jax.tree.leaves(state["vr"])
+    flat_c = jax.tree.leaves(state["vc"])
+    out = _chained_updates(upd, list(zip(flat_p, flat_g, flat_r, flat_c)))
+    new_p = jax.tree.unflatten(tdef, [o[0] for o in out])
+    new_r = jax.tree.unflatten(tdef, [o[1] for o in out])
+    new_c = jax.tree.unflatten(tdef, [o[2] for o in out])
+    return new_p, {"step": step, "vr": new_r, "vc": new_c}, \
+        {"lr": lr, "grad_norm": gnorm}
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+class Optimizer(NamedTuple):
+    state_defs: Callable[[Any], Any]
+    update: Callable[..., Tuple[Any, Any, Dict[str, Array]]]
+
+
+OPTIMIZERS = {
+    "adamw": Optimizer(adamw_state_defs, adamw_update),
+    "adafactor": Optimizer(adafactor_state_defs, adafactor_update),
+}
+
+
+def get_optimizer(name: str) -> Optimizer:
+    return OPTIMIZERS[name]

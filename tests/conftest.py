@@ -1,0 +1,37 @@
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+REPO = Path(__file__).resolve().parents[1]
+SRC = str(REPO / "src")
+if SRC not in sys.path:
+    sys.path.insert(0, SRC)
+
+from hypothesis import settings
+
+# CPU container: keep hypothesis light and undeadlined
+settings.register_profile("ci", max_examples=12, deadline=None,
+                          derandomize=True)
+settings.load_profile("ci")
+
+
+def run_with_devices(code: str, n: int = 8, timeout: int = 420) -> str:
+    """Run ``code`` in a subprocess with n fake host devices (the main test
+    process must keep its single real device, so multi-device sharding tests
+    isolate via fresh processes)."""
+    env = os.environ.copy()
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n}"
+    env["PYTHONPATH"] = SRC
+    r = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                       text=True, env=env, cwd=str(REPO), timeout=timeout)
+    assert r.returncode == 0, f"STDOUT:\n{r.stdout}\nSTDERR:\n{r.stderr}"
+    return r.stdout
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)

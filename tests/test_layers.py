@@ -1,0 +1,87 @@
+"""Unit/property tests for the shared LM layers."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.nn.layers import (apply_rope, layernorm, rmsnorm, sinusoidal_pos,
+                             softcap)
+
+
+@given(st.integers(0, 2 ** 31 - 1))
+@settings(max_examples=10)
+def test_rope_preserves_norm(seed):
+    """Rotation: per-head vector norms are invariant under RoPE."""
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(2, 8, 4, 16)).astype(np.float32))
+    pos = jnp.broadcast_to(jnp.arange(8, dtype=jnp.int32), (2, 8))
+    y = apply_rope(x, pos, 10000.0)
+    np.testing.assert_allclose(jnp.linalg.norm(x, axis=-1),
+                               jnp.linalg.norm(y, axis=-1),
+                               atol=1e-4, rtol=1e-4)
+
+
+def test_rope_relative_property():
+    """<rope(q, m), rope(k, n)> depends only on (m - n)."""
+    rng = np.random.default_rng(0)
+    q = jnp.asarray(rng.normal(size=(1, 1, 1, 32)).astype(np.float32))
+    k = jnp.asarray(rng.normal(size=(1, 1, 1, 32)).astype(np.float32))
+
+    def dot_at(m, n):
+        pm = jnp.full((1, 1), m, jnp.int32)
+        pn = jnp.full((1, 1), n, jnp.int32)
+        return float(jnp.sum(apply_rope(q, pm, 1e4) * apply_rope(k, pn, 1e4)))
+
+    assert abs(dot_at(5, 3) - dot_at(12, 10)) < 1e-4
+    assert abs(dot_at(7, 7) - dot_at(100, 100)) < 1e-4
+
+
+def test_rope_position_zero_is_identity():
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.normal(size=(1, 1, 2, 16)).astype(np.float32))
+    pos = jnp.zeros((1, 1), jnp.int32)
+    np.testing.assert_allclose(apply_rope(x, pos, 1e4), x, atol=1e-6)
+
+
+@given(st.integers(0, 2 ** 31 - 1))
+@settings(max_examples=10)
+def test_rmsnorm_scale_invariance(seed):
+    """rmsnorm(a*x) == rmsnorm(x) for a > 0 (up to eps)."""
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(4, 32)).astype(np.float32)) + 0.1
+    s = jnp.ones((32,))
+    a = float(rng.random() * 5 + 0.5)
+    np.testing.assert_allclose(rmsnorm(x, s, 1e-8), rmsnorm(a * x, s, 1e-8),
+                               atol=1e-4, rtol=1e-4)
+
+
+def test_layernorm_moments():
+    rng = np.random.default_rng(2)
+    x = jnp.asarray(rng.normal(size=(8, 64)).astype(np.float32) * 3 + 2)
+    y = layernorm(x, jnp.ones(64), jnp.zeros(64))
+    np.testing.assert_allclose(jnp.mean(y, -1), 0.0, atol=1e-5)
+    np.testing.assert_allclose(jnp.std(y, -1), 1.0, atol=1e-2)
+
+
+@given(st.floats(1.0, 100.0), st.integers(0, 2 ** 31 - 1))
+@settings(max_examples=10)
+def test_softcap_bounds_and_monotone(cap, seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(np.sort(rng.normal(size=(64,)) * 200).astype(np.float32))
+    y = np.asarray(softcap(x, cap))
+    assert np.all(np.abs(y) <= cap + 1e-4)
+    # monotone up to f32 rounding (eps ~ 1e-5 at |y| ~ 100)
+    assert np.all(np.diff(y) >= -1e-4 * max(cap, 1.0))
+    small = jnp.asarray([0.01 * cap], jnp.float32)
+    np.testing.assert_allclose(softcap(small, cap), small, rtol=1e-3)
+
+
+def test_sinusoidal_pos_shapes_and_range():
+    pos = jnp.broadcast_to(jnp.arange(16, dtype=jnp.int32), (2, 16))
+    e = sinusoidal_pos(pos, 64)
+    assert e.shape == (2, 16, 64)
+    assert float(jnp.max(jnp.abs(e))) <= 1.0 + 1e-6
+    # distinct positions -> distinct embeddings
+    assert float(jnp.linalg.norm(e[0, 3] - e[0, 4])) > 1e-2

@@ -1,0 +1,106 @@
+"""Per-assigned-architecture smoke tests (reduced configs, CPU).
+
+For each of the 10 archs: one forward pass and one train step asserting
+output shapes and finiteness, plus prefill/decode == full-forward
+equivalence (capacity un-bound for the MoE archs so dropping cannot differ
+between the two evaluation orders).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.archs import ARCHS, REDUCED, shape_applicable
+from repro.distributed.sharding import init_params, param_count
+from repro.models import lm
+
+ARCH_NAMES = sorted(REDUCED)
+
+
+def _batch(cfg, rng, b=2, s=32):
+    out = {
+        "tokens": jnp.asarray(rng.integers(0, cfg.vocab_size, (b, s)),
+                              jnp.int32),
+        "labels": jnp.asarray(rng.integers(0, cfg.vocab_size, (b, s)),
+                              jnp.int32),
+    }
+    if cfg.prefix_len:
+        out["prefix_embed"] = jnp.asarray(
+            rng.normal(size=(b, cfg.prefix_len, cfg.d_model)), jnp.float32)
+    return out
+
+
+@pytest.mark.parametrize("name", ARCH_NAMES)
+def test_forward_and_train_step(name):
+    cfg = REDUCED[name]
+    params = init_params(jax.random.PRNGKey(0), lm.lm_param_defs(cfg))
+    rng = np.random.default_rng(0)
+    batch = _batch(cfg, rng)
+    logits, _, _ = lm.forward(params, batch["tokens"], cfg,
+                              prefix_embed=batch.get("prefix_embed"))
+    assert logits.shape == (2, 32, cfg.vocab_pad)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+
+    loss, parts = lm.lm_loss(params, batch, cfg)
+    assert bool(jnp.isfinite(loss))
+    grads = jax.grad(lambda p: lm.lm_loss(p, batch, cfg)[0])(params)
+    gn = jnp.sqrt(sum(jnp.sum(g.astype(jnp.float32) ** 2)
+                      for g in jax.tree.leaves(grads)))
+    assert bool(jnp.isfinite(gn)) and float(gn) > 0
+
+
+@pytest.mark.parametrize("name", ARCH_NAMES)
+def test_prefill_decode_equivalence(name):
+    cfg = REDUCED[name]
+    if cfg.num_experts:
+        cfg = cfg.replace(capacity_factor=64.0)
+    params = init_params(jax.random.PRNGKey(1), lm.lm_param_defs(cfg))
+    rng = np.random.default_rng(1)
+    b, s, mx = 2, 32, 64
+    toks = jnp.asarray(rng.integers(0, cfg.vocab_size, (b, s + 2)),
+                       jnp.int32)
+    pe = (jnp.asarray(rng.normal(size=(b, cfg.prefix_len, cfg.d_model)),
+                      jnp.float32) if cfg.prefix_len else None)
+    ref, _, _ = lm.forward(params, toks, cfg, prefix_embed=pe)
+    caches = init_params(jax.random.PRNGKey(0),
+                         lm.lm_cache_defs(cfg, b, mx))
+    lg, caches = lm.prefill(params, toks[:, :s], caches, cfg,
+                            prefix_embed=pe)
+    np.testing.assert_allclose(lg, ref[:, s - 1], atol=2e-4, rtol=2e-4)
+    for i in range(2):
+        lg, caches = lm.decode_step(params, toks[:, s + i:s + i + 1],
+                                    caches, cfg,
+                                    position=jnp.asarray(s + i, jnp.int32))
+        np.testing.assert_allclose(lg, ref[:, s + i], atol=2e-3, rtol=2e-3)
+
+
+def test_full_config_param_counts():
+    """Full configs land in the right parameter-count ballpark (guards
+    against config typos; counts include the vocab-padding rows)."""
+    expected = {
+        "qwen1.5-0.5b": (0.3e9, 0.8e9),
+        "deepseek-67b": (60e9, 75e9),
+        "gemma2-27b": (24e9, 31e9),
+        "llama3-8b": (7e9, 9e9),
+        "internvl2-2b": (1.5e9, 2.5e9),
+        "mamba2-2.7b": (2.2e9, 3.2e9),
+        "olmoe-1b-7b": (6e9, 8e9),
+        "arctic-480b": (420e9, 520e9),
+        "recurrentgemma-2b": (2e9, 3.5e9),
+        "musicgen-large": (1.5e9, 2.8e9),
+    }
+    for name, (lo, hi) in expected.items():
+        n = param_count(lm.lm_param_defs(ARCHS[name]))
+        assert lo <= n <= hi, f"{name}: {n/1e9:.2f}B not in [{lo/1e9}B, {hi/1e9}B]"
+
+
+def test_shape_applicability_table():
+    runnable = sum(shape_applicable(a, s)[0] for a in ARCHS
+                   for s in ("train_4k", "prefill_32k", "decode_32k",
+                             "long_500k"))
+    # 10 archs x 4 shapes - 8 long-context skips = 32 runnable cells
+    assert runnable == 32
+    assert shape_applicable("mamba2-2.7b", "long_500k")[0]
+    assert shape_applicable("recurrentgemma-2b", "long_500k")[0]
+    assert not shape_applicable("llama3-8b", "long_500k")[0]

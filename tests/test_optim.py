@@ -1,0 +1,116 @@
+"""Optimizers, schedules, clipping, compression primitives."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.configs.base import TrainConfig
+from repro.distributed.sharding import ParamDef, init_params
+from repro.optim.compression import (dequantize_int8, ef_compressed_psum,
+                                     quantize_int8)
+from repro.optim.optimizers import (adafactor_state_defs, adamw_state_defs,
+                                    clip_by_global_norm, get_optimizer,
+                                    lr_schedule)
+
+
+def _defs():
+    return {"w": ParamDef((8, 8), (None, None), dtype=jnp.float32),
+            "b": ParamDef((8,), (None,), init="zeros", dtype=jnp.float32)}
+
+
+@pytest.mark.parametrize("opt_name", ["adamw", "adafactor"])
+def test_optimizer_decreases_quadratic(opt_name):
+    tcfg = TrainConfig(learning_rate=0.05, warmup_steps=1, total_steps=200,
+                       weight_decay=0.0)
+    opt = get_optimizer(opt_name)
+    defs = _defs()
+    params = init_params(jax.random.PRNGKey(0), defs)
+    state = init_params(jax.random.PRNGKey(0), opt.state_defs(defs))
+    target = jax.tree.map(lambda p: jnp.ones_like(p) * 0.5, params)
+
+    def loss_fn(p):
+        return sum(jnp.sum((a - t) ** 2)
+                   for a, t in zip(jax.tree.leaves(p),
+                                   jax.tree.leaves(target)))
+
+    l0 = float(loss_fn(params))
+    for _ in range(60):
+        g = jax.grad(loss_fn)(params)
+        params, state, extras = opt.update(params, g, state, tcfg)
+    assert float(loss_fn(params)) < 0.2 * l0
+    assert float(extras["grad_norm"]) >= 0
+
+
+def test_adafactor_state_is_factored():
+    defs = {"w": ParamDef((64, 32), (None, None), dtype=jnp.bfloat16)}
+    sd = adafactor_state_defs(defs)
+    assert sd["vr"]["w"].shape == (64,)
+    assert sd["vc"]["w"].shape == (32,)
+    # full second moment would be 2048 floats; factored is 96
+    full = adamw_state_defs(defs)
+    assert full["v"]["w"].shape == (64, 32)
+
+
+def test_clip_by_global_norm():
+    g = {"a": jnp.ones((10,)) * 10.0}
+    clipped, gn = clip_by_global_norm(g, 1.0)
+    assert abs(float(gn) - 10.0 * np.sqrt(10)) < 1e-3
+    cn = float(jnp.sqrt(jnp.sum(clipped["a"] ** 2)))
+    assert abs(cn - 1.0) < 1e-5
+
+
+def test_lr_schedule_shape():
+    tcfg = TrainConfig(learning_rate=1.0, warmup_steps=10, total_steps=100)
+    lrs = [float(lr_schedule(jnp.asarray(s), tcfg)) for s in range(0, 101, 10)]
+    assert lrs[0] < lrs[1]                      # warmup rises
+    assert lrs[1] == max(lrs)                   # peak at warmup end
+    assert lrs[-1] < 0.2 * lrs[1]               # cosine decays
+
+
+@given(st.integers(0, 2 ** 31 - 1))
+@settings(max_examples=15)
+def test_quantize_roundtrip_bound(seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(64,)).astype(np.float32) * 10)
+    q, scale = quantize_int8(x)
+    err = jnp.max(jnp.abs(dequantize_int8(q, scale) - x))
+    assert float(err) <= float(scale) * 0.5 + 1e-6
+
+
+def test_error_feedback_reduces_bias():
+    """With EF, the accumulated compressed sum tracks the true sum."""
+    rng = np.random.default_rng(0)
+    xs = rng.normal(size=(50, 32)).astype(np.float32) * 0.1
+
+    # single-participant psum == identity; simulate via axis of size 1
+    import jax
+    from jax.sharding import PartitionSpec as P
+    mesh = jax.make_mesh((1,), ("p",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+
+    def run(with_ef):
+        err = jnp.zeros(32)
+        acc_c = np.zeros(32)
+        for x in xs:
+            xj = jnp.asarray(x)
+
+            def f(x, e):
+                return ef_compressed_psum(x, e, "p")
+
+            out, new_err = jax.shard_map(
+                f, mesh=mesh, in_specs=(P(), P()),
+                out_specs=(P(), P()), check_vma=False)(
+                    xj, err if with_ef else jnp.zeros(32))
+            if with_ef:
+                err = new_err
+            acc_c += np.asarray(out)
+        return acc_c
+
+    true = xs.sum(0)
+    err_with = np.abs(run(True) - true).max()
+    err_without = np.abs(run(False) - true).max()
+    assert err_with <= err_without + 1e-6
+    assert err_with < 0.05

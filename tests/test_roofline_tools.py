@@ -1,0 +1,61 @@
+"""Unit tests for the roofline tooling: collective parsing, group sizes,
+artifact estimation, layer extrapolation arithmetic."""
+
+import numpy as np
+
+from repro.launch.roofline import (_group_size, _shape_bytes,
+                                   collective_bytes, cpu_f32_artifact_bytes)
+
+HLO = """
+ENTRY %main {
+  %ag = f32[32,1024,1024]{1,0,2} all-gather(%x), channel_id=1, replica_groups=[32,16]<=[512], dimensions={2}
+  %ar = bf16[16,512]{1,0} all-reduce(%y), replica_groups={{0,1,2,3},{4,5,6,7}}, to_apply=%add
+  %rs = f32[2,256,512]{2,1,0} reduce-scatter(%z), replica_groups=[32,16]<=[512], dimensions={1}
+  %a2a = bf16[4,128]{1,0} all-to-all(%w), replica_groups={{0,1}}
+  %ags = (f32[64]{0}, f32[64]{0}) all-gather-start(%v), replica_groups=[8,2]<=[16]
+  %agd = f32[64]{0} all-gather-done(%ags)
+  %wrapped_convert.1 = f32[128256,4096]{1,0} fusion(%p), kind=kLoop
+}
+"""
+
+
+def test_shape_bytes():
+    assert _shape_bytes("f32[32,1024,1024]{1,0,2}") == 32 * 1024 * 1024 * 4
+    assert _shape_bytes("bf16[16,512]{1,0}") == 16 * 512 * 2
+    assert _shape_bytes("(f32[64]{0}, f32[64]{0})") == 2 * 64 * 4
+
+
+def test_group_size_parsing():
+    assert _group_size("replica_groups=[32,16]<=[512]") == 16
+    assert _group_size("replica_groups={{0,1,2,3},{4,5,6,7}}") == 4
+
+
+def test_collective_bytes():
+    c = collective_bytes(HLO)
+    ag = 32 * 1024 * 1024 * 4
+    assert c["all-gather"]["bytes"] == ag + 64 * 4  # start pair counted once
+    assert c["all-gather"]["count"] == 2
+    # all-reduce counted 2x
+    assert c["all-reduce"]["bytes"] == 2 * 16 * 512 * 2
+    # reduce-scatter at operand size = result x group(16)
+    assert c["reduce-scatter"]["bytes"] == 2 * 256 * 512 * 4 * 16
+    assert c["all-to-all"]["bytes"] == 4 * 128 * 2
+    # f32 >= 64MiB payloads halved in the TPU adjustment
+    assert c["all-gather"]["tpu_bytes"] < c["all-gather"]["bytes"]
+
+
+def test_artifact_estimator():
+    b = cpu_f32_artifact_bytes(HLO)
+    assert b == 128256 * 4096 * 4  # only the big wrapped_convert counts
+
+
+def test_layer_extrapolation_math():
+    from repro.launch.hlo_cost import _PATTERN_LEN
+    # full = c1 + (groups-1) * (c2 - c1): with per-group g and base b,
+    # c1 = b + g, c2 = b + 2g -> full = b + groups*g
+    b, g, groups = 100.0, 7.0, 24
+    c1, c2 = b + g, b + 2 * g
+    full = c1 + (groups - 1) * (c2 - c1)
+    assert abs(full - (b + groups * g)) < 1e-9
+    assert _PATTERN_LEN == {"global": 1, "local_global": 2, "griffin": 3,
+                            "ssm": 1}

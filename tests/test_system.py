@@ -1,0 +1,81 @@
+"""End-to-end behaviour: the paper's streaming scenario + GNN training +
+the serve drivers — the system works as a whole, not just per-module."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.engine import GraphStreamEngine
+from repro.core.message_passing import DataflowConfig
+from repro.core.models import PAPER_GNN_CONFIGS, make_gnn
+from repro.data.graphs import molhiv_like
+
+
+def test_streaming_engine_end_to_end():
+    """Graphs of varying size stream through at batch 1, zero preprocessing;
+    compiled programs are reused per padding bucket."""
+    cfg = PAPER_GNN_CONFIGS["gin"].replace(num_layers=2, hidden_dim=16)
+    model = make_gnn(cfg)
+    params = model.init(jax.random.PRNGKey(0), cfg)
+    eng = GraphStreamEngine(cfg, params)
+    graphs = list(molhiv_like(seed=0, n_graphs=12))
+    eng.warmup(graphs[0].node_feat, graphs[0].senders, graphs[0].receivers,
+               graphs[0].edge_feat, graphs[0].node_pos)
+    outs = []
+    for g in graphs:
+        outs.append(eng.process(g.node_feat, g.senders, g.receivers,
+                                g.edge_feat, g.node_pos))
+    assert len(eng.stats.latencies_s) == 12
+    assert all(np.all(np.isfinite(o)) for o in outs)
+    # compile cache: far fewer programs than graphs
+    assert len(eng._compiled) <= 4
+    s = eng.stats.summary()
+    assert s["throughput_gps"] > 0
+
+
+def test_gnn_training_loss_decreases():
+    """The FlowGNN models are differentiable: fit a tiny GIN to labels."""
+    from repro.core.graph import build_graph_batch
+
+    cfg = PAPER_GNN_CONFIGS["gin"].replace(num_layers=2, hidden_dim=16)
+    model = make_gnn(cfg)
+    params = model.init(jax.random.PRNGKey(0), cfg)
+    graphs = list(molhiv_like(seed=1, n_graphs=16))
+    batches = [
+        (build_graph_batch(g.node_feat, g.senders, g.receivers,
+                           edge_feat=g.edge_feat, node_pad=64, edge_pad=128,
+                           node_pos=g.node_pos), g.label)
+        for g in graphs
+    ]
+
+    def loss_fn(p, g, label):
+        logit = model.apply(p, g, cfg)[0, 0]
+        return jnp.maximum(logit, 0) - logit * label + jnp.log1p(
+            jnp.exp(-jnp.abs(logit)))
+
+    @jax.jit
+    def step(p, g, label):
+        l, grads = jax.value_and_grad(loss_fn)(p, g, label)
+        p = jax.tree.map(lambda a, b: a - 0.05 * b, p, grads)
+        return p, l
+
+    losses = []
+    for epoch in range(12):
+        tot = 0.0
+        for g, label in batches:
+            params, l = step(params, g, jnp.float32(label))
+            tot += float(l)
+        losses.append(tot / len(batches))
+    assert losses[-1] < losses[0] - 0.1, losses
+
+
+def test_serve_gnn_driver():
+    from repro.launch.serve import serve_gnn
+    stats = serve_gnn("gcn", 8, "molhiv")
+    assert stats["count"] == 8
+
+
+def test_serve_lm_driver():
+    from repro.launch.serve import serve_lm
+    stats = serve_lm("qwen1.5-0.5b", 4, batch=2, prompt_len=16, max_len=32)
+    assert stats["decode_tok_per_s"] > 0

@@ -5,12 +5,17 @@ structurally via the roofline, see EXPERIMENTS.md)."""
 
 from __future__ import annotations
 
+import functools
+
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import Csv, time_fn
-from repro.core.message_passing import banked_segment_sum, segment_aggregate
+from benchmarks.common import Csv, time_best, time_fn
+from repro.core.message_passing import (banked_segment_sum, count_edge_passes,
+                                        segment_aggregate,
+                                        segment_multi_aggregate,
+                                        segment_softmax, DataflowConfig)
 
 
 def mp_paths(csv: Csv):
@@ -30,6 +35,90 @@ def mp_paths(csv: Csv):
             m, r, n, num_banks=b, edge_mask=mask))
         t = time_fn(fn, msg, rcv)
         csv.add(f"kernel.mp.banked{banks}", t * 1e6, f"E={e},D={d},N={n}")
+
+
+def multi_agg_paths(csv: Csv):
+    """Single-pass multi-statistic MP unit vs the seed per-kind loop
+    (paper Fig. 5: one sweep over the edge stream, many statistics).
+
+    The seed loop is measured two ways:
+      * ``per_kind``       — each aggregation pass dispatched on its own
+        (separate jit per kind), the true cost of the seed's 7 sweeps over
+        the edge stream — this is what the streaming dataflow replaces;
+      * ``per_kind_fused`` — all kinds under one jit, where XLA CSE already
+        deduplicates the repeated s1/degree scatters (the compiler-rescued
+        lower bound; the single-pass unit still wins on scatter count).
+    """
+    rng = np.random.default_rng(2)
+    e, d, n = 4096, 64, 1024
+    kinds = ("sum", "mean", "max", "std")
+    msg = jnp.asarray(rng.normal(size=(e, d)).astype(np.float32))
+    rcv = jnp.asarray(rng.integers(0, n, size=e).astype(np.int32))
+    mask = jnp.ones(e, bool)
+
+    def per_kind(m, r):
+        return tuple(segment_aggregate(m, r, n, kind=k, edge_mask=mask)
+                     for k in kinds)
+
+    def single_pass(m, r):
+        stats = segment_multi_aggregate(m, r, n, kinds=kinds, edge_mask=mask)
+        return tuple(stats[k] for k in kinds)
+
+    with count_edge_passes() as ps:
+        jax.eval_shape(per_kind, msg, rcv)
+    passes_pk = ps.passes
+    with count_edge_passes() as ps:
+        jax.eval_shape(single_pass, msg, rcv)
+    passes_sp = ps.passes
+
+    kind_fns = [
+        jax.jit(lambda m, r, k=k: segment_aggregate(m, r, n, kind=k,
+                                                    edge_mask=mask))
+        for k in kinds
+    ]
+    best = time_best({
+        "per_kind": lambda m=msg, r=rcv: tuple(f(m, r) for f in kind_fns),
+        "per_kind_fused": functools.partial(jax.jit(per_kind), msg, rcv),
+        "single_pass": functools.partial(jax.jit(single_pass), msg, rcv),
+    }, rounds=7, iters=9)
+    t_pk, t_pkf, t_sp = (best["per_kind"], best["per_kind_fused"],
+                         best["single_pass"])
+    shape = f"E={e},D={d},N={n},kinds={'+'.join(kinds)}"
+    csv.add("kernel.mp.multi_agg.per_kind", t_pk * 1e6,
+            f"{shape};edge_passes={passes_pk}")
+    csv.add("kernel.mp.multi_agg.per_kind_fused", t_pkf * 1e6,
+            f"{shape};edge_passes={passes_pk}")
+    csv.add("kernel.mp.multi_agg.single_pass", t_sp * 1e6,
+            f"{shape};edge_passes={passes_sp};"
+            f"speedup_vs_per_kind={t_pk / t_sp:.2f}x;"
+            f"speedup_vs_per_kind_fused={t_pkf / t_sp:.2f}x")
+
+
+def softmax_paths(csv: Csv):
+    """GAT edge softmax: 3-sweep XLA path (timed) + streaming-kernel pass
+    count (its CPU interpret-mode wall time is not meaningful)."""
+    rng = np.random.default_rng(3)
+    e, h, n = 4096, 4, 1024
+    logits = jnp.asarray(rng.normal(size=(e, h)).astype(np.float32))
+    rcv = jnp.asarray(rng.integers(0, n, size=e).astype(np.int32))
+    mask = jnp.ones(e, bool)
+
+    # count on the unjitted callable (a cached jit trace would count 0)
+    with count_edge_passes() as ps:
+        jax.eval_shape(
+            lambda l, r: segment_softmax(l, r, n, edge_mask=mask),
+            logits, rcv)
+    passes_jnp = ps.passes
+    fn = jax.jit(lambda l, r: segment_softmax(l, r, n, edge_mask=mask))
+    t = time_fn(fn, logits, rcv)
+    dfk = DataflowConfig(impl="kernel")
+    with count_edge_passes() as ps:
+        jax.eval_shape(
+            lambda l, r: segment_softmax(l, r, n, edge_mask=mask,
+                                         dataflow=dfk), logits, rcv)
+    csv.add("kernel.mp.segment_softmax", t * 1e6,
+            f"E={e},H={h},N={n};edge_passes={passes_jnp};"
+            f"kernel_edge_passes={ps.passes}")
 
 
 def attention_paths(csv: Csv):

@@ -3,12 +3,23 @@
 
   PYTHONPATH=src python -m benchmarks.run            # all tables, small sizes
   PYTHONPATH=src python -m benchmarks.run table7     # one table
+  PYTHONPATH=src python -m benchmarks.run kernels    # micro-benchmarks only
+
+Alongside the CSV on stdout, kernel-level rows (``kernel.*``) are written to
+``BENCH_kernels.json`` as a machine-readable ``{name: us_per_call}`` map
+(plus the derived annotations) so the perf trajectory — in particular the
+single-pass vs per-kind multi-aggregation comparison — can be tracked
+across PRs.
 """
 
+import json
 import sys
+from pathlib import Path
 
 from benchmarks.common import Csv
 from benchmarks import kernel_bench, paper_tables
+
+BENCH_JSON = Path(__file__).resolve().parent.parent / "BENCH_kernels.json"
 
 TABLES = {
     "table5": lambda csv: paper_tables.table5_hep_latency(csv, n_graphs=12),
@@ -19,6 +30,8 @@ TABLES = {
     "table7": lambda csv: paper_tables.table7_imbalance(csv),
     "table8": lambda csv: paper_tables.table8_gcn_small(csv),
     "kernels": lambda csv: (kernel_bench.mp_paths(csv),
+                            kernel_bench.multi_agg_paths(csv),
+                            kernel_bench.softmax_paths(csv),
                             kernel_bench.attention_paths(csv)),
 }
 
@@ -30,6 +43,17 @@ def main() -> None:
     for name in names:
         TABLES[name](csv)
     print(f"# {len(csv.rows)} rows")
+
+    kernel_rows = [r for r in csv.records if r["name"].startswith("kernel.")]
+    if kernel_rows:
+        payload = {
+            "us_per_call": {r["name"]: r["us_per_call"] for r in kernel_rows},
+            "derived": {r["name"]: r["derived"] for r in kernel_rows
+                        if r["derived"]},
+        }
+        BENCH_JSON.write_text(json.dumps(payload, indent=2, sort_keys=True)
+                              + "\n")
+        print(f"# wrote {BENCH_JSON.name} ({len(kernel_rows)} kernel rows)")
 
 
 if __name__ == "__main__":

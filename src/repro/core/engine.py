@@ -23,7 +23,8 @@ import jax
 import numpy as np
 
 from repro.core.graph import GraphBatch, build_graph_batch, pad_bucket
-from repro.core.message_passing import DEFAULT_DATAFLOW, DataflowConfig
+from repro.core.message_passing import (DEFAULT_DATAFLOW, DataflowConfig,
+                                        count_edge_passes)
 from repro.core.models import GNNConfig, make_gnn
 
 
@@ -57,6 +58,9 @@ class GraphStreamEngine:
         self.model = make_gnn(cfg)
         self._compiled: Dict[Tuple[int, int], Any] = {}
         self.stats = StreamStats()
+        # passes-over-edges per compiled bucket (the paper's headline
+        # dataflow property), recorded once at trace time per bucket
+        self.edge_passes: Dict[Tuple[int, int], int] = {}
 
     def _program(self, node_pad: int, edge_pad: int):
         key = (node_pad, edge_pad)
@@ -85,6 +89,10 @@ class GraphStreamEngine:
         if edge_feat is None and self.cfg.edge_feat_dim != g.edge_feat.shape[1]:
             raise ValueError("model expects edge features")
         run = self._program(np_, ep_)
+        if (np_, ep_) not in self.edge_passes:
+            with count_edge_passes() as ps:
+                jax.eval_shape(run, self.params, g)
+            self.edge_passes[(np_, ep_)] = ps.passes
         t0 = time.perf_counter()
         out = jax.block_until_ready(run(self.params, g))
         dt = time.perf_counter() - t0

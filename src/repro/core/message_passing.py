@@ -4,32 +4,46 @@
 
 The engine exposes:
 
-  * ``propagate``          — one NT+MP step with pluggable phi / A / gamma,
-  * ``segment_aggregate``  — the MP unit: permutation-invariant aggregation
-                             over raw COO destinations (sum/mean/max/min/std),
-  * ``segment_softmax``    — edge softmax for anisotropic models (GAT),
-  * ``DataflowConfig``     — the paper's four parallelism knobs, remapped to
-                             TPU tile shapes (see DESIGN.md §2), plus the
-                             implementation selector used by the Fig. 9
-                             ablation (twopass / unfused / fused / kernel).
+  * ``propagate``                — one NT+MP step with pluggable phi / A / gamma,
+  * ``segment_aggregate``        — the MP unit: permutation-invariant aggregation
+                                   over raw COO destinations (sum/mean/max/min/std),
+  * ``segment_multi_aggregate``  — the *single-pass* multi-statistic MP unit:
+                                   all requested kinds from one sweep over the
+                                   edge stream (DESIGN.md §3),
+  * ``segment_softmax``          — edge softmax for anisotropic models (GAT),
+  * ``DataflowConfig``           — the paper's four parallelism knobs, remapped to
+                                   TPU tile shapes (see DESIGN.md §2), plus the
+                                   implementation selector used by the Fig. 9
+                                   ablation (twopass / unfused / fused / kernel).
 
 Implementation notes (FPGA -> TPU adaptation):
   * The paper merges scatter and gather into one pass over edges writing into
     an O(N) message buffer. ``segment_aggregate`` is exactly that merged pass;
     XLA lowers it to a single scatter-add (O(N) live memory, messages are
     fused away when ``impl='fused'``).
+  * The paper's MP unit accumulates *all* per-destination statistics while the
+    edge stream flows past once (Fig. 5). ``segment_multi_aggregate`` restores
+    that property on TPU: the moment statistics (sum / count / sum-of-squares)
+    are stacked into one widened segment-sum — a single edge sweep — and
+    mean/var/std are derived algebraically; max/min keep their own combiner.
+    With ``impl='kernel'`` the whole bundle (moments *and* max/min) runs as
+    one Pallas edge-tile stream (kernels/mp_scatter.py::mp_scatter_multi).
   * The multi-queue multicast adapter (each MP unit owns a destination bank)
     becomes the *banked* formulation: destinations are tiled into
     ``num_banks`` contiguous banks; each bank accumulates its own edges with
     dense mask-select math. ``impl='kernel'`` runs it as a Pallas kernel
     (kernels/mp_scatter.py); ``banked_segment_sum`` is the pure-jnp mirror
     used for CPU ablations and as the kernel oracle.
+  * ``count_edge_passes()`` counts sweeps over the edge stream at trace time,
+    so the Fig. 9 ablation can report the paper's headline dataflow property
+    (passes-over-edges) and benchmarks can guard against regressions.
 """
 
 from __future__ import annotations
 
+from contextlib import contextmanager
 from dataclasses import dataclass
-from typing import Callable, Optional, Sequence, Union
+from typing import Callable, Dict, Optional, Sequence, Union
 
 import jax
 import jax.numpy as jnp
@@ -49,6 +63,39 @@ _NEUTRAL = {
 
 AGG_KINDS = tuple(_NEUTRAL.keys())
 
+# Kinds derivable from the streamed moments (sum, count, sum-of-squares).
+MOMENT_KINDS = ("sum", "mean", "var", "std")
+
+
+# ---------------------------------------------------------------------------
+# Edge-pass accounting (trace-time): the paper's "one pass over the stream"
+# property, made measurable. Each segment reduction / kernel launch / full
+# per-edge rewrite that sweeps the (E, ...) stream counts as one pass.
+# ---------------------------------------------------------------------------
+
+@dataclass
+class EdgePassStats:
+    passes: int = 0
+
+
+_EDGE_PASS_STATS = EdgePassStats()
+
+
+def _count_pass(n: int = 1) -> None:
+    _EDGE_PASS_STATS.passes += n
+
+
+@contextmanager
+def count_edge_passes():
+    """Count edge-stream sweeps issued while tracing inside the block.
+
+    Counting happens at Python trace time, so trace the function of interest
+    inside the block (e.g. ``jax.eval_shape(fn, *args)`` or an un-jitted
+    call); cached jit re-executions count nothing. Not reentrant.
+    """
+    _EDGE_PASS_STATS.passes = 0
+    yield _EDGE_PASS_STATS
+
 
 @dataclass(frozen=True)
 class DataflowConfig:
@@ -58,6 +105,11 @@ class DataflowConfig:
     P_edge    -> num_banks    (MP units == destination-node banks)
     P_apply   -> apply_tile   (embedding lanes per NT step)
     P_scatter -> scatter_tile (edge-feature lanes per MP step)
+
+    ``single_pass`` selects the multi-statistic MP unit: when True (default)
+    multi-kind aggregation streams the edges once and derives mean/var/std
+    from shared moments; when False it falls back to the per-kind loop
+    (kept for the Fig. 9 pass-count ablation).
     """
 
     node_tile: int = 8
@@ -66,6 +118,7 @@ class DataflowConfig:
     scatter_tile: int = 128
     edge_tile: int = 128          # edges streamed per MP grid step (kernel)
     impl: str = "fused"           # twopass | unfused | fused | banked | kernel
+    single_pass: bool = True      # fuse multi-kind aggregation into one sweep
 
     def replace(self, **kw) -> "DataflowConfig":
         import dataclasses
@@ -107,6 +160,7 @@ def segment_aggregate(
         edge_mask = jnp.ones(msg.shape[0], dtype=bool)
 
     if dataflow.impl in ("kernel", "banked") and kind == "sum":
+        _count_pass()
         if dataflow.impl == "kernel":
             from repro.kernels import ops as kops
             return kops.mp_scatter(
@@ -119,30 +173,188 @@ def segment_aggregate(
             msg, receivers, num_nodes,
             num_banks=dataflow.num_banks, edge_mask=edge_mask)
 
+    if dataflow.impl == "kernel":
+        # every non-sum kind runs through the multi-statistic kernel so
+        # impl='kernel' covers all of AGG_KINDS with one code path.
+        return segment_multi_aggregate(
+            msg, receivers, num_nodes, kinds=(kind,), edge_mask=edge_mask,
+            dataflow=dataflow, degrees=degrees)[kind]
+
     msgm = _masked(msg, edge_mask, kind)
     if kind == "sum":
+        _count_pass()
         return jax.ops.segment_sum(msgm, receivers, num_segments=num_nodes)
     if kind == "max":
+        _count_pass()
         out = jax.ops.segment_max(msgm, receivers, num_segments=num_nodes)
         return jnp.where(jnp.isfinite(out), out, 0.0)
     if kind == "min":
+        _count_pass()
         out = jax.ops.segment_min(msgm, receivers, num_segments=num_nodes)
         return jnp.where(jnp.isfinite(out), out, 0.0)
 
     # mean / var / std need on-the-fly degrees (no preprocessing).
     if degrees is None:
+        _count_pass()
         degrees = jax.ops.segment_sum(
             edge_mask.astype(msg.dtype), receivers, num_segments=num_nodes)
     denom = jnp.maximum(degrees, 1.0)[:, None]
+    _count_pass()
     s1 = jax.ops.segment_sum(msgm, receivers, num_segments=num_nodes)
     mean = s1 / denom
     if kind == "mean":
         return mean
+    _count_pass()
     s2 = jax.ops.segment_sum(msgm * msgm, receivers, num_segments=num_nodes)
     var = jnp.maximum(s2 / denom - mean * mean, 0.0)
     if kind == "var":
         return var
     return jnp.sqrt(var + 1e-5)
+
+
+def segment_multi_aggregate(
+    msg: Array,
+    receivers: Array,
+    num_nodes: int,
+    *,
+    kinds: Sequence[str],
+    edge_mask: Optional[Array] = None,
+    dataflow: DataflowConfig = DEFAULT_DATAFLOW,
+    degrees: Optional[Array] = None,
+) -> Dict[str, Array]:
+    """All requested statistics from a single pass over the edge stream.
+
+    The single-pass multi-statistic MP unit (paper Fig. 5 / Eq. 2): instead of
+    one edge sweep per aggregation kind, the moment statistics are stacked
+    into one widened segment-sum —
+
+        [ msg | msg*msg | 1 ]  --segment_sum-->  [ s1 | s2 | count ]
+
+    — and mean / var / std are derived algebraically (var = s2/n - mean^2,
+    std = sqrt(var + 1e-5), degree-0 rows are 0). max / min need a different
+    combiner: in the jnp paths they cost one extra sweep each; with
+    ``impl='kernel'`` every statistic is accumulated by one Pallas edge-tile
+    stream (kernels/mp_scatter.py::mp_scatter_multi), preserving the paper's
+    "one stream, many statistics" dataflow exactly.
+
+    Accumulation is float32 regardless of ``msg.dtype``; outputs are cast
+    back to ``msg.dtype``. ``degrees`` (masked in-degrees) may be passed in
+    to share an already-computed count. Returns ``{kind: (N, D) array}``.
+    """
+    kinds = tuple(kinds)
+    if not kinds:
+        raise ValueError("kinds must be non-empty")
+    for k in kinds:
+        if k not in AGG_KINDS:
+            raise ValueError(f"unknown aggregation '{k}'")
+    if msg.ndim != 2:
+        raise ValueError(
+            f"segment_multi_aggregate expects 2-D messages, got {msg.shape}")
+    if edge_mask is None:
+        edge_mask = jnp.ones(msg.shape[0], dtype=bool)
+    out_dtype = msg.dtype
+
+    want_moments = any(k in ("mean", "var", "std") for k in kinds)
+    want_sum = "sum" in kinds or want_moments
+    want_sumsq = any(k in ("var", "std") for k in kinds)
+    want_max = "max" in kinds
+    want_min = "min" in kinds
+    need_count = want_moments and degrees is None
+
+    s1 = s2 = cnt = mx = mn = None
+    if dataflow.impl == "kernel":
+        from repro.kernels import ops as kops
+        raw = kops.mp_scatter_multi(
+            msg, receivers, edge_mask, num_nodes,
+            want_sum=want_sum, want_sumsq=want_sumsq, want_count=need_count,
+            want_max=want_max, want_min=want_min,
+            node_tile=dataflow.node_tile, edge_tile=dataflow.edge_tile,
+            num_banks=dataflow.num_banks)
+        _count_pass()                      # one edge stream, all statistics
+        s1 = raw.get("sum")
+        s2 = raw.get("sumsq")
+        cnt = raw["count"][:, 0] if need_count else None
+        mx = raw.get("max")
+        mn = raw.get("min")
+    else:
+        msgf = msg.astype(jnp.float32)
+        if dataflow.impl == "banked":
+            # banked mirror routes edges by bank-local index; mask with where
+            recv_m = receivers
+            msgf = jnp.where(edge_mask[:, None], msgf, 0.0)
+        else:
+            # divert masked edges to an out-of-range segment: XLA drops
+            # out-of-bound scatter updates, which masks without touching the
+            # (E, D) messages (cheaper than two full-width `where`s)
+            recv_m = jnp.where(edge_mask, receivers, num_nodes)
+        parts = []
+        if want_sum:
+            parts.append(("s1", msgf))
+        if want_sumsq:
+            parts.append(("s2", msgf * msgf))
+        if need_count:
+            # two identical count columns keep the stacked width even
+            # (odd-width scatters vectorize poorly on CPU)
+            parts.append(("cnt", jnp.ones((msg.shape[0], 2), jnp.float32)))
+        if parts:
+            stacked = (jnp.concatenate([p for _, p in parts], axis=-1)
+                       if len(parts) > 1 else parts[0][1])
+            if dataflow.impl == "banked":
+                agg = banked_segment_sum(
+                    stacked, recv_m, num_nodes,
+                    num_banks=dataflow.num_banks, edge_mask=edge_mask)
+            else:
+                agg = jax.ops.segment_sum(
+                    stacked, recv_m, num_segments=num_nodes)
+            _count_pass()                  # the single moment sweep
+            off = 0
+            got = {}
+            for name, p in parts:
+                got[name] = agg[:, off:off + p.shape[-1]]
+                off += p.shape[-1]
+            s1 = got.get("s1")
+            s2 = got.get("s2")
+            cnt = got["cnt"][:, 0] if need_count else None
+        if want_max:
+            _count_pass()
+            if dataflow.impl == "banked":
+                mx = jax.ops.segment_max(
+                    _masked(msgf, edge_mask, "max"), recv_m,
+                    num_segments=num_nodes)
+            else:
+                mx = jax.ops.segment_max(msgf, recv_m,
+                                         num_segments=num_nodes)
+        if want_min:
+            _count_pass()
+            if dataflow.impl == "banked":
+                mn = jax.ops.segment_min(
+                    _masked(msgf, edge_mask, "min"), recv_m,
+                    num_segments=num_nodes)
+            else:
+                mn = jax.ops.segment_min(msgf, recv_m,
+                                         num_segments=num_nodes)
+
+    deg = degrees if degrees is not None else cnt
+    out: Dict[str, Array] = {}
+    if want_moments:
+        rdenom = (1.0 / jnp.maximum(deg, 1.0).astype(jnp.float32))[:, None]
+        mean = s1 * rdenom
+    if want_sumsq:
+        var = jnp.maximum(s2 * rdenom - mean * mean, 0.0)
+    for k in kinds:
+        if k == "sum":
+            out[k] = s1.astype(out_dtype)
+        elif k == "mean":
+            out[k] = mean.astype(out_dtype)
+        elif k == "var":
+            out[k] = var.astype(out_dtype)
+        elif k == "std":
+            out[k] = jnp.sqrt(var + 1e-5).astype(out_dtype)
+        elif k == "max":
+            out[k] = jnp.where(jnp.isfinite(mx), mx, 0.0).astype(out_dtype)
+        elif k == "min":
+            out[k] = jnp.where(jnp.isfinite(mn), mn, 0.0).astype(out_dtype)
+    return out
 
 
 def banked_segment_sum(
@@ -159,7 +371,17 @@ def banked_segment_sum(
     ("MP unit b owns nodes [b*bank, (b+1)*bank)"), exactly the multicast
     ownership rule of Fig. 5. Each bank accumulates only its own edges via a
     dense mask — conflict-free, edge-order independent.
+
+    ``msg`` may be (E, D) or (E,) — 1-D messages (e.g. softmax denominators,
+    edge weights) are aggregated per-scalar and returned as (N,).
     """
+    if msg.ndim not in (1, 2):
+        raise ValueError(
+            f"banked_segment_sum expects (E,) or (E, D) messages, got "
+            f"shape {msg.shape}")
+    squeeze = msg.ndim == 1
+    if squeeze:
+        msg = msg[:, None]
     if edge_mask is None:
         edge_mask = jnp.ones(msg.shape[0], dtype=bool)
     if num_nodes % num_banks != 0:
@@ -175,7 +397,8 @@ def banked_segment_sum(
             jnp.where(own[:, None], msgm, 0.0), local, num_segments=bank)
 
     banks = jax.vmap(one_bank)(jnp.arange(num_banks))  # (B, bank, D)
-    return banks.reshape(num_nodes, msg.shape[1])
+    out = banks.reshape(num_nodes, msg.shape[1])
+    return out[:, 0] if squeeze else out
 
 
 def segment_softmax(
@@ -184,21 +407,37 @@ def segment_softmax(
     num_nodes: int,
     *,
     edge_mask: Optional[Array] = None,
+    dataflow: Optional[DataflowConfig] = None,
 ) -> Array:
     """Per-destination softmax over incoming edges (GAT attention weights).
 
     logits: (E,) or (E, H). Returns normalized weights of the same shape.
+
+    With ``dataflow.impl == 'kernel'`` this runs the two-pass streaming
+    Pallas kernel (kernels/seg_softmax.py): pass 1 keeps a per-bank running
+    max + online-rescaled denominator, pass 2 exp-normalizes each edge tile —
+    2 edge sweeps instead of the 3 sweeps (segment_max, segment_sum,
+    normalize-with-gathers) the XLA path below issues.
     """
     if edge_mask is None:
         edge_mask = jnp.ones(logits.shape[0], dtype=bool)
+    if dataflow is not None and dataflow.impl == "kernel":
+        from repro.kernels import ops as kops
+        _count_pass(2)
+        return kops.seg_softmax(
+            logits, receivers, edge_mask, num_nodes,
+            edge_tile=dataflow.edge_tile, num_banks=dataflow.num_banks)
     m = edge_mask if logits.ndim == 1 else edge_mask[:, None]
     neg = jnp.where(m, logits, -jnp.inf)
+    _count_pass()
     seg_max = jax.ops.segment_max(neg, receivers, num_segments=num_nodes)
     seg_max = jnp.where(jnp.isfinite(seg_max), seg_max, 0.0)
     shifted = jnp.where(m, logits - seg_max[receivers], -jnp.inf)
     e = jnp.where(m, jnp.exp(shifted), 0.0)
+    _count_pass()
     denom = jax.ops.segment_sum(e, receivers, num_segments=num_nodes)
     denom = jnp.maximum(denom, 1e-16)
+    _count_pass()
     return e / denom[receivers]
 
 
@@ -222,6 +461,11 @@ def propagate(
     aggregate                    -> A           # gather phase (merged)
     update_fn(x, m)              -> (N, D_out)  # gamma — node transformation
 
+    Multi-kind ``aggregate`` (the PNA path) runs through the single-pass
+    multi-statistic MP unit by default (``dataflow.single_pass``): one edge
+    sweep for the moment statistics, shared degrees, max/min alongside —
+    instead of one full sweep (plus degree/moment side-sweeps) per kind.
+
     ``impl='twopass'`` mimics the paper's *non-pipelined* baseline (Fig. 4a):
     the full message matrix is forced to materialize (optimization barrier)
     before aggregation. The default fused path lets XLA fuse phi into the
@@ -236,13 +480,24 @@ def propagate(
         msg = jax.lax.optimization_barrier(msg)
 
     kinds = (aggregate,) if isinstance(aggregate, str) else tuple(aggregate)
-    aggs = [
-        segment_aggregate(
+    if len(kinds) == 1:
+        m = segment_aggregate(
             msg, graph.receivers, graph.n_node_pad,
-            kind=k, edge_mask=graph.edge_mask, dataflow=dataflow)
-        for k in kinds
-    ]
-    m = aggs[0] if len(aggs) == 1 else jnp.concatenate(aggs, axis=-1)
+            kind=kinds[0], edge_mask=graph.edge_mask, dataflow=dataflow)
+    elif dataflow.single_pass:
+        stats = segment_multi_aggregate(
+            msg, graph.receivers, graph.n_node_pad,
+            kinds=kinds, edge_mask=graph.edge_mask, dataflow=dataflow)
+        m = jnp.concatenate([stats[k] for k in kinds], axis=-1)
+    else:
+        # legacy per-kind loop, kept for the Fig. 9 pass-count ablation
+        aggs = [
+            segment_aggregate(
+                msg, graph.receivers, graph.n_node_pad,
+                kind=k, edge_mask=graph.edge_mask, dataflow=dataflow)
+            for k in kinds
+        ]
+        m = jnp.concatenate(aggs, axis=-1)
     out = update_fn(x, m)
     return jnp.where(graph.node_mask[:, None], out, 0.0)
 

@@ -24,6 +24,7 @@ from repro.core.message_passing import (
     global_pool,
     propagate,
     segment_aggregate,
+    segment_multi_aggregate,
     segment_softmax,
 )
 
@@ -256,7 +257,8 @@ def gat_apply(params, graph: GraphBatch, cfg: GNNConfig,
             alpha_src[graph.senders] + alpha_dst[graph.receivers],
             negative_slope=0.2)                                   # (E, H)
         att = segment_softmax(logits, graph.receivers, N,
-                              edge_mask=graph.edge_mask)          # (E, H)
+                              edge_mask=graph.edge_mask,
+                              dataflow=dataflow)                  # (E, H)
         msg = h[graph.senders] * att[..., None]                   # (E, H, Dh)
         agg = segment_aggregate(
             msg.reshape(-1, H * Dh), graph.receivers, N,
@@ -345,26 +347,28 @@ def dgn_apply(params, graph: GraphBatch, cfg: GNNConfig,
     """
     x = jax.nn.relu(_dense(params["node_enc"], graph.node_feat.astype(cfg.dtype)))
     N = graph.n_node_pad
+    d = cfg.hidden_dim
     pos = graph.node_pos[:, 0]
     dpos = pos[graph.senders] - pos[graph.receivers]          # field along edge
     absnorm = segment_aggregate(
         jnp.abs(dpos)[:, None], graph.receivers, N, kind="sum",
-        edge_mask=graph.edge_mask)[:, 0]
+        edge_mask=graph.edge_mask, dataflow=dataflow)[:, 0]
     w = dpos / jnp.maximum(absnorm[graph.receivers], 1e-6)     # (E,)
 
     for p in params["layers"]:
-        def message(src, dst, ee):
-            return src
-
-        m_mean = segment_aggregate(
-            x[graph.senders], graph.receivers, N, kind="mean",
+        # single-pass multi-statistic MP unit: the mean aggregator, the
+        # directional sum, and the field normalizer all come out of ONE
+        # sweep over [x_src | x_src*w | w] (was 3 separate segment passes
+        # plus a degree pass).
+        x_src = x[graph.senders]
+        stacked = jnp.concatenate(
+            [x_src, x_src * w[:, None], w[:, None]], axis=-1)
+        stats = segment_multi_aggregate(
+            stacked, graph.receivers, N, kinds=("sum", "mean"),
             edge_mask=graph.edge_mask, dataflow=dataflow)
-        m_dir = segment_aggregate(
-            x[graph.senders] * w[:, None], graph.receivers, N, kind="sum",
-            edge_mask=graph.edge_mask, dataflow=dataflow)
-        w_sum = segment_aggregate(
-            w[:, None], graph.receivers, N, kind="sum",
-            edge_mask=graph.edge_mask)[:, 0]
+        m_mean = stats["mean"][:, :d]
+        m_dir = stats["sum"][:, d:2 * d]
+        w_sum = stats["sum"][:, 2 * d]
         m_dx = jnp.abs(m_dir - x * w_sum[:, None])            # |B_dx X|
         h = _dense(p["post"], jnp.concatenate([x, m_mean, m_dx], -1))
         x = jnp.where(graph.node_mask[:, None], jax.nn.relu(h), 0.0)

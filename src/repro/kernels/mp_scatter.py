@@ -1,4 +1,4 @@
-"""Pallas TPU kernel: the FlowGNN MP unit (dest-banked scatter-aggregate).
+"""Pallas TPU kernels: the FlowGNN MP unit (dest-banked scatter-aggregate).
 
 FPGA -> TPU adaptation of the paper's multi-queue multicast (Fig. 5):
 
@@ -16,8 +16,21 @@ FPGA -> TPU adaptation of the paper's multi-queue multicast (Fig. 5):
     revisited); Pallas double-buffers the edge-block DMA against the matmul,
     which is the TPU analogue of the NT->MP FIFO decoupling.
 
+``mp_scatter`` is the plain scatter-sum unit. ``mp_scatter_multi`` is the
+single-pass *multi-statistic* unit (DESIGN.md §3): the same edge-tile stream
+feeds several VMEM accumulators at once — f32 sum and sum-of-squares through
+the MXU routing matmul, per-destination count from the route column sums, and
+max/min through mask-select — so every statistic a PNA-style layer needs
+comes out of ONE sweep over the raw edge stream, exactly the paper's
+"one stream, many statistics" MP-unit dataflow.
+
 Block shapes map the paper's knobs: num_banks = P_edge, edge_tile = edges per
 MP step, and the (bank_size x D) accumulator tile realizes P_scatter lanes.
+Accumulation is always float32; outputs are cast back to ``msg.dtype``.
+
+VMEM note: the max/min mask-select materializes an
+(edge_tile, bank_size, D) select per step; size banks/tiles so
+``edge_tile * bank_size * D * 4B`` fits alongside the accumulators.
 """
 
 from __future__ import annotations
@@ -29,6 +42,41 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 Array = jax.Array
+
+# Statistic names in the fixed output order of mp_scatter_multi.
+MULTI_STATS = ("sum", "sumsq", "count", "max", "min")
+
+
+def _route_matrix(recv, mask, bank, bank_size, edge_tile):
+    """Boolean one-hot routing matrix (edge_tile, bank_size) for this bank."""
+    local = recv - bank * bank_size
+    own = (local >= 0) & (local < bank_size) & (mask != 0)
+    lanes = jax.lax.broadcasted_iota(jnp.int32, (edge_tile, bank_size), 1)
+    return (lanes == local[:, None]) & own[:, None]
+
+
+def _ceil_to(x: int, mult: int) -> int:
+    return -(-x // mult) * mult
+
+
+def pad_edge_stream(msg: Array, receivers: Array, edge_mask: Array,
+                    edge_tile: int):
+    """Pad the raw edge stream to a multiple of ``edge_tile``.
+
+    Extra slots get masked-out edges pointing at node 0. Returns
+    (msg, recv2, mask2, e_pad) with receivers/mask already int32-reshaped
+    to the (E_pad, 1) layout the kernels stream.
+    """
+    e = msg.shape[0]
+    e_pad = _ceil_to(e, edge_tile)
+    if e_pad != e:
+        pad = e_pad - e
+        msg = jnp.pad(msg, ((0, pad), (0, 0)))
+        receivers = jnp.pad(receivers, (0, pad))
+        edge_mask = jnp.pad(edge_mask.astype(bool), (0, pad))
+    recv2 = receivers.astype(jnp.int32).reshape(e_pad, 1)
+    mask2 = edge_mask.astype(jnp.int32).reshape(e_pad, 1)
+    return msg, recv2, mask2, e_pad
 
 
 def _mp_scatter_kernel(recv_ref, mask_ref, msg_ref, out_ref, *,
@@ -43,11 +91,7 @@ def _mp_scatter_kernel(recv_ref, mask_ref, msg_ref, out_ref, *,
     recv = recv_ref[...].reshape(edge_tile)           # (edge_tile,)
     mask = mask_ref[...].reshape(edge_tile)
 
-    local = recv - bank * bank_size
-    own = (local >= 0) & (local < bank_size) & (mask != 0)
-    # one-hot routing matrix (edge_tile, bank_size) -> MXU matmul scatter
-    lanes = jax.lax.broadcasted_iota(jnp.int32, (edge_tile, bank_size), 1)
-    route = (lanes == local[:, None]) & own[:, None]
+    route = _route_matrix(recv, mask, bank, bank_size, edge_tile)
     out_ref[...] += jax.lax.dot_general(
         route.astype(jnp.float32), msg,
         dimension_numbers=(((0,), (0,)), ((), ())),   # route^T @ msg
@@ -65,19 +109,16 @@ def mp_scatter(msg: Array, receivers: Array, edge_mask: Array,
                num_banks: int = 4, interpret: bool = True) -> Array:
     """Scatter-sum `msg` (E, D) into (num_nodes, D) via dest-banked routing.
 
-    Requirements (enforced by padding at the call site):
-      E % edge_tile == 0, num_nodes % num_banks == 0.
+    Accumulates in float32, returns ``msg.dtype``. E is padded internally to
+    a multiple of ``edge_tile`` (masked edges) and ``num_nodes`` to a
+    multiple of ``num_banks`` (unaddressed rows), so uneven sizes are fine.
     """
     e, d = msg.shape
-    if e % edge_tile != 0:
-        raise ValueError(f"E={e} must be a multiple of edge_tile={edge_tile}")
-    if num_nodes % num_banks != 0:
-        raise ValueError("num_nodes must divide num_banks")
-    bank_size = num_nodes // num_banks
-    n_edge_blocks = e // edge_tile
-
-    recv2 = receivers.astype(jnp.int32).reshape(e, 1)
-    mask2 = edge_mask.astype(jnp.int32).reshape(e, 1)
+    msg, recv2, mask2, e_pad = pad_edge_stream(
+        msg, receivers, edge_mask, edge_tile)
+    n_pad = _ceil_to(num_nodes, num_banks)
+    bank_size = n_pad // num_banks
+    n_edge_blocks = e_pad // edge_tile
 
     kernel = functools.partial(
         _mp_scatter_kernel, bank_size=bank_size, edge_tile=edge_tile)
@@ -91,7 +132,113 @@ def mp_scatter(msg: Array, receivers: Array, edge_mask: Array,
             pl.BlockSpec((edge_tile, d), lambda b, t: (t, 0)),   # messages
         ],
         out_specs=pl.BlockSpec((bank_size, d), lambda b, t: (b, 0)),
-        out_shape=jax.ShapeDtypeStruct((num_nodes, d), jnp.float32),
+        out_shape=jax.ShapeDtypeStruct((n_pad, d), jnp.float32),
         interpret=interpret,
     )(recv2, mask2, msg)
-    return out
+    return out[:num_nodes].astype(msg.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Single-pass multi-statistic MP unit
+# ---------------------------------------------------------------------------
+
+def _mp_scatter_multi_kernel(recv_ref, mask_ref, msg_ref, *out_refs,
+                             bank_size: int, edge_tile: int, stats):
+    bank = pl.program_id(0)
+    refs = dict(zip(stats, out_refs))
+
+    @pl.when(pl.program_id(1) == 0)
+    def _init():
+        for name, ref in refs.items():
+            if name == "max":
+                ref[...] = jnp.full_like(ref, -jnp.inf)
+            elif name == "min":
+                ref[...] = jnp.full_like(ref, jnp.inf)
+            else:
+                ref[...] = jnp.zeros_like(ref)
+
+    msg = msg_ref[...].astype(jnp.float32)            # (edge_tile, D)
+    recv = recv_ref[...].reshape(edge_tile)
+    mask = mask_ref[...].reshape(edge_tile)
+
+    route_b = _route_matrix(recv, mask, bank, bank_size, edge_tile)
+    route = route_b.astype(jnp.float32)
+    dn = (((0,), (0,)), ((), ()))                     # route^T @ rhs
+
+    if "sum" in refs:
+        refs["sum"][...] += jax.lax.dot_general(
+            route, msg, dimension_numbers=dn,
+            preferred_element_type=jnp.float32)
+    if "sumsq" in refs:
+        refs["sumsq"][...] += jax.lax.dot_general(
+            route, msg * msg, dimension_numbers=dn,
+            preferred_element_type=jnp.float32)
+    if "count" in refs:
+        refs["count"][...] += jnp.sum(route, axis=0)[:, None]
+    if "max" in refs or "min" in refs:
+        sel = route_b[:, :, None]                     # (edge_tile, bank, 1)
+        if "max" in refs:
+            tile = jnp.where(sel, msg[:, None, :], -jnp.inf)
+            refs["max"][...] = jnp.maximum(refs["max"][...],
+                                           jnp.max(tile, axis=0))
+        if "min" in refs:
+            tile = jnp.where(sel, msg[:, None, :], jnp.inf)
+            refs["min"][...] = jnp.minimum(refs["min"][...],
+                                           jnp.min(tile, axis=0))
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("num_nodes", "node_tile", "edge_tile", "num_banks",
+                     "stats", "interpret"),
+)
+def mp_scatter_multi(msg: Array, receivers: Array, edge_mask: Array,
+                     num_nodes: int, *, stats, node_tile: int = 8,
+                     edge_tile: int = 128, num_banks: int = 4,
+                     interpret: bool = True):
+    """One edge-stream sweep feeding multiple per-node accumulators.
+
+    ``stats`` is a subset of MULTI_STATS. Returns ``{name: f32 array}``:
+    sum/sumsq/max/min are (num_nodes, D), count is (num_nodes, 1). max/min
+    of empty destinations come back +-inf (callers substitute their neutral).
+
+    Unlike ``mp_scatter`` this wrapper pads internally: E is padded to a
+    multiple of ``edge_tile`` with masked edges and ``num_nodes`` to a
+    multiple of ``num_banks`` with unaddressed rows, so uneven bank/tile
+    sizes are fine.
+    """
+    stats = tuple(s for s in MULTI_STATS if s in stats)
+    if not stats:
+        raise ValueError("stats must name at least one accumulator")
+    e, d = msg.shape
+    msg, recv2, mask2, e_pad = pad_edge_stream(
+        msg, receivers, edge_mask, edge_tile)
+    n_pad = _ceil_to(num_nodes, num_banks)
+    bank_size = n_pad // num_banks
+    n_edge_blocks = e_pad // edge_tile
+
+    widths = {"sum": d, "sumsq": d, "count": 1, "max": d, "min": d}
+    out_shapes = [jax.ShapeDtypeStruct((n_pad, widths[s]), jnp.float32)
+                  for s in stats]
+    out_specs = [
+        pl.BlockSpec((bank_size, widths[s]), lambda b, t: (b, 0))
+        for s in stats
+    ]
+
+    kernel = functools.partial(
+        _mp_scatter_multi_kernel, bank_size=bank_size, edge_tile=edge_tile,
+        stats=stats)
+
+    outs = pl.pallas_call(
+        kernel,
+        grid=(num_banks, n_edge_blocks),
+        in_specs=[
+            pl.BlockSpec((edge_tile, 1), lambda b, t: (t, 0)),   # receivers
+            pl.BlockSpec((edge_tile, 1), lambda b, t: (t, 0)),   # mask
+            pl.BlockSpec((edge_tile, d), lambda b, t: (t, 0)),   # messages
+        ],
+        out_specs=out_specs,
+        out_shape=out_shapes,
+        interpret=interpret,
+    )(recv2, mask2, msg)
+    return {s: o[:num_nodes] for s, o in zip(stats, outs)}

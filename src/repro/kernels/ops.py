@@ -17,7 +17,9 @@ from repro.kernels import ref as _ref
 from repro.kernels.flash_attention import flash_attention as _flash
 from repro.kernels.fused_nt_scatter import fused_nt_scatter as _fused
 from repro.kernels.mp_scatter import mp_scatter as _mp_scatter
+from repro.kernels.mp_scatter import mp_scatter_multi as _mp_scatter_multi
 from repro.kernels.nt_mlp import nt_mlp as _nt_mlp
+from repro.kernels.seg_softmax import seg_softmax as _seg_softmax
 
 Array = jax.Array
 
@@ -32,6 +34,28 @@ def mp_scatter(msg, receivers, edge_mask, num_nodes, *, node_tile=8,
     return _mp_scatter(msg, receivers, edge_mask, num_nodes,
                        node_tile=node_tile, edge_tile=edge_tile,
                        num_banks=num_banks, interpret=_interpret())
+
+
+def mp_scatter_multi(msg, receivers, edge_mask, num_nodes, *,
+                     want_sum=False, want_sumsq=False, want_count=False,
+                     want_max=False, want_min=False, node_tile=8,
+                     edge_tile=128, num_banks=4) -> dict:
+    """Single-pass multi-statistic MP unit; returns raw f32 accumulators."""
+    stats = tuple(
+        name for name, want in (
+            ("sum", want_sum), ("sumsq", want_sumsq), ("count", want_count),
+            ("max", want_max), ("min", want_min)) if want)
+    return _mp_scatter_multi(msg, receivers, edge_mask, num_nodes,
+                             stats=stats, node_tile=node_tile,
+                             edge_tile=edge_tile, num_banks=num_banks,
+                             interpret=_interpret())
+
+
+def seg_softmax(logits, receivers, edge_mask, num_nodes, *, edge_tile=128,
+                num_banks=4) -> Array:
+    return _seg_softmax(logits, receivers, edge_mask, num_nodes,
+                        edge_tile=edge_tile, num_banks=num_banks,
+                        interpret=_interpret())
 
 
 def nt_mlp(x, w1, b1, w2, b2, *, node_tile=128, k_tile=128) -> Array:
@@ -54,6 +78,8 @@ def flash_attention(q, k, v, *, causal=True, window: Optional[int] = None,
 
 # oracles re-exported for tests/benchmarks
 mp_scatter_ref = _ref.mp_scatter_ref
+mp_scatter_multi_ref = _ref.mp_scatter_multi_ref
+segment_softmax_ref = _ref.segment_softmax_ref
 nt_mlp_ref = _ref.nt_mlp_ref
 fused_nt_scatter_ref = _ref.fused_nt_scatter_ref
 mha_ref = _ref.mha_ref

@@ -20,6 +20,51 @@ def mp_scatter_ref(msg: Array, receivers: Array, edge_mask: Array,
     return jax.ops.segment_sum(m, receivers, num_segments=num_nodes)
 
 
+def mp_scatter_multi_ref(msg: Array, receivers: Array, edge_mask: Array,
+                         num_nodes: int, stats) -> dict:
+    """Per-statistic reference for the single-pass multi-aggregation unit.
+
+    Returns raw f32 accumulators keyed by name (sum/sumsq/count/max/min);
+    max/min of empty destinations are +-inf, matching the kernel contract.
+    """
+    m32 = msg.astype(jnp.float32)
+    zero = jnp.where(edge_mask[:, None], m32, 0.0)
+    out = {}
+    if "sum" in stats:
+        out["sum"] = jax.ops.segment_sum(zero, receivers,
+                                         num_segments=num_nodes)
+    if "sumsq" in stats:
+        out["sumsq"] = jax.ops.segment_sum(zero * zero, receivers,
+                                           num_segments=num_nodes)
+    if "count" in stats:
+        out["count"] = jax.ops.segment_sum(
+            edge_mask.astype(jnp.float32)[:, None], receivers,
+            num_segments=num_nodes)
+    if "max" in stats:
+        out["max"] = jax.ops.segment_max(
+            jnp.where(edge_mask[:, None], m32, -jnp.inf), receivers,
+            num_segments=num_nodes)
+    if "min" in stats:
+        out["min"] = jax.ops.segment_min(
+            jnp.where(edge_mask[:, None], m32, jnp.inf), receivers,
+            num_segments=num_nodes)
+    return out
+
+
+def segment_softmax_ref(logits: Array, receivers: Array, edge_mask: Array,
+                        num_nodes: int) -> Array:
+    """Per-destination softmax oracle. logits: (E,) or (E, H)."""
+    m = edge_mask if logits.ndim == 1 else edge_mask[:, None]
+    l32 = logits.astype(jnp.float32)
+    neg = jnp.where(m, l32, -jnp.inf)
+    seg_max = jax.ops.segment_max(neg, receivers, num_segments=num_nodes)
+    seg_max = jnp.where(jnp.isfinite(seg_max), seg_max, 0.0)
+    e = jnp.where(m, jnp.exp(l32 - seg_max[receivers]), 0.0)
+    denom = jnp.maximum(
+        jax.ops.segment_sum(e, receivers, num_segments=num_nodes), 1e-16)
+    return (e / denom[receivers]).astype(logits.dtype)
+
+
 def nt_mlp_ref(x: Array, w1: Array, b1: Array, w2: Array, b2: Array) -> Array:
     """Node transformation: 2-layer MLP with ReLU (f32 accumulation)."""
     h = jax.nn.relu(x.astype(jnp.float32) @ w1.astype(jnp.float32) + b1)

@@ -1,6 +1,7 @@
 import os
 import subprocess
 import sys
+import types
 from pathlib import Path
 
 import numpy as np
@@ -11,7 +12,48 @@ SRC = str(REPO / "src")
 if SRC not in sys.path:
     sys.path.insert(0, SRC)
 
-from hypothesis import settings
+try:
+    from hypothesis import settings
+except ModuleNotFoundError:
+    # hypothesis is optional (see requirements.txt). On machines without it,
+    # install a stub module so test files importing `given`/`settings`/
+    # `strategies` still collect; property tests are skipped.
+    class _NoopSettings:
+        def __init__(self, *args, **kwargs):
+            pass
+
+        def __call__(self, fn):
+            return fn
+
+        @staticmethod
+        def register_profile(*args, **kwargs):
+            pass
+
+        @staticmethod
+        def load_profile(*args, **kwargs):
+            pass
+
+    def _skip_given(*args, **kwargs):
+        def deco(fn):
+            return pytest.mark.skip(reason="hypothesis not installed")(fn)
+        return deco
+
+    class _AnyStrategy:
+        def __call__(self, *args, **kwargs):
+            return self
+
+        def __getattr__(self, name):
+            return self
+
+    _hyp = types.ModuleType("hypothesis")
+    _st = types.ModuleType("hypothesis.strategies")
+    _st.__getattr__ = lambda name: _AnyStrategy()  # PEP 562
+    _hyp.settings = _NoopSettings
+    _hyp.given = _skip_given
+    _hyp.strategies = _st
+    sys.modules["hypothesis"] = _hyp
+    sys.modules["hypothesis.strategies"] = _st
+    settings = _NoopSettings
 
 # CPU container: keep hypothesis light and undeadlined
 settings.register_profile("ci", max_examples=12, deadline=None,

@@ -93,9 +93,13 @@ def test_padding_invariance():
     np.testing.assert_allclose(outs[0], outs[2], atol=1e-4)
 
 
-def test_kernel_impl_matches_fused():
-    """The Pallas dest-banked MP engine == plain segment-sum path."""
-    cfg = small_cfg("gin")
+@pytest.mark.parametrize("name", ["gin", "gat", "pna", "dgn"])
+def test_kernel_impl_matches_fused(name):
+    """The Pallas MP engine (scatter, multi-statistic unit, streaming
+    softmax) == the plain jnp paths — for every aggregation family:
+    gin (sum), gat (softmax + sum), pna (multi-kind), dgn (multi via
+    stacked sum/mean)."""
+    cfg = small_cfg(name)
     model = make_gnn(cfg)
     params = model.init(jax.random.PRNGKey(4), cfg)
     g = example_graph(seed=1)
@@ -104,6 +108,18 @@ def test_kernel_impl_matches_fused():
                        DataflowConfig(impl="kernel", num_banks=4,
                                       edge_tile=32))
     np.testing.assert_allclose(base, kern, atol=1e-4, rtol=1e-4)
+
+
+def test_pna_single_pass_matches_per_kind_loop():
+    """The single-pass multi-statistic MP unit is numerically transparent
+    at the model level (PNA = the paper's multi-aggregator workload)."""
+    cfg = small_cfg("pna")
+    model = make_gnn(cfg)
+    params = model.init(jax.random.PRNGKey(6), cfg)
+    g = example_graph(seed=2)
+    sp = model.apply(params, g, cfg, DataflowConfig(single_pass=True))
+    pk = model.apply(params, g, cfg, DataflowConfig(single_pass=False))
+    np.testing.assert_allclose(sp, pk, atol=1e-5, rtol=1e-5)
 
 
 # ---------------------------------------------------------------------------

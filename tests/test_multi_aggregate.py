@@ -1,0 +1,302 @@
+"""Single-pass multi-statistic MP unit: oracle equivalence, permutation
+invariance, kernel (interpret-mode) parity, and the pass-count contract.
+
+Covers the edge cases the paper's zero-preprocessing guarantee implies:
+uneven bank/tile sizes, fully-masked banks, and isolated (degree-0) nodes
+for mean/max/min.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.graph import build_graph_batch
+from repro.core.message_passing import (AGG_KINDS, DataflowConfig,
+                                        banked_segment_sum,
+                                        count_edge_passes, propagate,
+                                        segment_aggregate,
+                                        segment_multi_aggregate,
+                                        segment_softmax)
+from repro.kernels import ops as kops
+
+RNG = np.random.default_rng(11)
+ALL_KINDS = tuple(AGG_KINDS)            # sum mean max min std var
+
+
+def _problem(e=96, d=8, n=24, mask_p=0.8, seed=0):
+    r = np.random.default_rng(seed)
+    msg = jnp.asarray(r.normal(size=(e, d)).astype(np.float32))
+    # leave some nodes isolated (degree 0) by restricting destinations
+    rcv = jnp.asarray(r.integers(0, max(n - 4, 1), size=e).astype(np.int32))
+    mask = jnp.asarray(r.random(e) < mask_p)
+    return msg, rcv, mask
+
+
+# ---------------------------------------------------------------------------
+# segment_multi_aggregate (jnp paths)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("impl", ["fused", "banked"])
+def test_multi_aggregate_matches_per_kind(impl):
+    msg, rcv, mask = _problem()
+    n = 24
+    df = DataflowConfig(impl=impl, num_banks=4)
+    stats = segment_multi_aggregate(msg, rcv, n, kinds=ALL_KINDS,
+                                    edge_mask=mask, dataflow=df)
+    for k in ALL_KINDS:
+        ref = segment_aggregate(msg, rcv, n, kind=k, edge_mask=mask)
+        np.testing.assert_allclose(stats[k], ref, atol=1e-5, rtol=1e-5,
+                                   err_msg=k)
+
+
+def test_multi_aggregate_isolated_nodes_and_full_mask():
+    # all edges masked == every node isolated: statistics take their neutral
+    # value (0 everywhere; std is sqrt(eps), matching the seed's + the dense
+    # PNA oracle's empty-segment semantics)
+    msg, rcv, _ = _problem()
+    n = 24
+    stats = segment_multi_aggregate(
+        msg, rcv, n, kinds=ALL_KINDS,
+        edge_mask=jnp.zeros(msg.shape[0], bool))
+    for k in ALL_KINDS:
+        if k == "std":
+            np.testing.assert_allclose(stats[k], np.sqrt(1e-5), atol=1e-7)
+        else:
+            assert np.all(np.asarray(stats[k]) == 0.0), k
+
+
+def test_multi_aggregate_permutation_invariance():
+    msg, rcv, mask = _problem(seed=3)
+    n = 24
+    stats = segment_multi_aggregate(msg, rcv, n, kinds=ALL_KINDS,
+                                    edge_mask=mask)
+    perm = np.random.default_rng(1).permutation(msg.shape[0])
+    stats_p = segment_multi_aggregate(msg[perm], rcv[perm], n,
+                                      kinds=ALL_KINDS, edge_mask=mask[perm])
+    for k in ALL_KINDS:
+        np.testing.assert_allclose(stats[k], stats_p[k], atol=1e-5,
+                                   rtol=1e-5, err_msg=k)
+
+
+def test_multi_aggregate_shared_degrees():
+    msg, rcv, mask = _problem(seed=5)
+    n = 24
+    deg = jax.ops.segment_sum(mask.astype(jnp.float32), rcv, num_segments=n)
+    with_deg = segment_multi_aggregate(msg, rcv, n, kinds=("mean", "std"),
+                                       edge_mask=mask, degrees=deg)
+    without = segment_multi_aggregate(msg, rcv, n, kinds=("mean", "std"),
+                                      edge_mask=mask)
+    for k in ("mean", "std"):
+        np.testing.assert_allclose(with_deg[k], without[k], atol=1e-6)
+
+
+def test_multi_aggregate_dtype_roundtrip():
+    msg, rcv, mask = _problem()
+    stats = segment_multi_aggregate(msg.astype(jnp.bfloat16), rcv, 24,
+                                    kinds=("sum", "mean"), edge_mask=mask)
+    assert stats["sum"].dtype == jnp.bfloat16
+    assert stats["mean"].dtype == jnp.bfloat16
+
+
+def test_multi_aggregate_rejects_bad_input():
+    msg, rcv, mask = _problem()
+    with pytest.raises(ValueError):
+        segment_multi_aggregate(msg, rcv, 24, kinds=("sum", "huh"))
+    with pytest.raises(ValueError):
+        segment_multi_aggregate(msg, rcv, 24, kinds=())
+    with pytest.raises(ValueError):
+        segment_multi_aggregate(msg[:, 0], rcv, 24, kinds=("sum",))
+
+
+# ---------------------------------------------------------------------------
+# mp_scatter_multi kernel (interpret mode) vs oracles
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("e,d,n,edge_tile,banks", [
+    (128, 16, 32, 32, 2),
+    (200, 8, 30, 64, 4),         # uneven: E % tile != 0, N % banks != 0
+    (96, 24, 17, 32, 5),         # uneven bank sizes
+])
+def test_mp_scatter_multi_all_stats(e, d, n, edge_tile, banks):
+    r = np.random.default_rng(e + n)
+    msg = jnp.asarray(r.normal(size=(e, d)).astype(np.float32))
+    rcv = jnp.asarray(r.integers(0, n, size=e).astype(np.int32))
+    mask = jnp.asarray(r.random(e) < 0.8)
+    out = kops.mp_scatter_multi(
+        msg, rcv, mask, n, want_sum=True, want_sumsq=True, want_count=True,
+        want_max=True, want_min=True, edge_tile=edge_tile, num_banks=banks)
+    ref = kops.mp_scatter_multi_ref(
+        msg, rcv, mask, n, ("sum", "sumsq", "count", "max", "min"))
+    for name in ("sum", "sumsq", "count", "max", "min"):
+        np.testing.assert_allclose(out[name], ref[name], atol=2e-5,
+                                   rtol=2e-5, err_msg=name)
+
+
+def test_mp_scatter_multi_fully_masked_bank():
+    """Bank 1 (nodes 8..15) receives no valid edges: neutral everywhere."""
+    e, d, n = 64, 4, 16
+    r = np.random.default_rng(0)
+    msg = jnp.asarray(r.normal(size=(e, d)).astype(np.float32))
+    rcv = jnp.asarray(r.integers(0, 8, size=e).astype(np.int32))  # bank 0 only
+    mask = jnp.ones(e, bool)
+    out = kops.mp_scatter_multi(msg, rcv, mask, n, want_sum=True,
+                                want_max=True, want_min=True,
+                                edge_tile=32, num_banks=2)
+    assert np.all(np.asarray(out["sum"][8:]) == 0.0)
+    assert np.all(np.asarray(out["max"][8:]) == -np.inf)
+    assert np.all(np.asarray(out["min"][8:]) == np.inf)
+
+
+@pytest.mark.parametrize("kind", sorted(AGG_KINDS))
+def test_kernel_impl_every_kind(kind):
+    """impl='kernel' covers every AGG_KINDS member via the multi unit."""
+    msg, rcv, mask = _problem(e=128, d=8, n=32)
+    df = DataflowConfig(impl="kernel", num_banks=4, edge_tile=32)
+    out = segment_aggregate(msg, rcv, 32, kind=kind, edge_mask=mask,
+                            dataflow=df)
+    ref = segment_aggregate(msg, rcv, 32, kind=kind, edge_mask=mask)
+    np.testing.assert_allclose(out, ref, atol=1e-5, rtol=1e-5)
+
+
+def test_kernel_impl_multi_kind_list():
+    msg, rcv, mask = _problem(e=128, d=8, n=32)
+    df = DataflowConfig(impl="kernel", num_banks=4, edge_tile=32)
+    stats = segment_multi_aggregate(msg, rcv, 32, kinds=ALL_KINDS,
+                                    edge_mask=mask, dataflow=df)
+    for k in ALL_KINDS:
+        ref = segment_aggregate(msg, rcv, 32, kind=k, edge_mask=mask)
+        np.testing.assert_allclose(stats[k], ref, atol=1e-5, rtol=1e-5,
+                                   err_msg=k)
+
+
+def test_mp_scatter_multi_permutation_invariance():
+    msg, rcv, mask = _problem(e=128, d=8, n=32, seed=9)
+    out = kops.mp_scatter_multi(msg, rcv, mask, 32, want_sum=True,
+                                want_max=True, edge_tile=32, num_banks=4)
+    perm = np.random.default_rng(2).permutation(128)
+    out_p = kops.mp_scatter_multi(msg[perm], rcv[perm], mask[perm], 32,
+                                  want_sum=True, want_max=True,
+                                  edge_tile=32, num_banks=4)
+    np.testing.assert_allclose(out["sum"], out_p["sum"], atol=1e-5)
+    np.testing.assert_allclose(out["max"], out_p["max"], atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# streaming segment softmax kernel (interpret mode)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("shape,edge_tile,banks", [
+    ((128,), 32, 4),
+    ((128, 4), 32, 4),
+    ((200, 3), 64, 5),           # uneven edge tiles and bank sizes
+])
+def test_seg_softmax_kernel_matches_oracle(shape, edge_tile, banks):
+    r = np.random.default_rng(shape[0])
+    n = 24
+    logits = jnp.asarray(r.normal(size=shape).astype(np.float32) * 3)
+    rcv = jnp.asarray(r.integers(0, n - 3, size=shape[0]).astype(np.int32))
+    mask = jnp.asarray(r.random(shape[0]) < 0.8)
+    out = kops.seg_softmax(logits, rcv, mask, n, edge_tile=edge_tile,
+                           num_banks=banks)
+    ref = kops.segment_softmax_ref(logits, rcv, mask, n)
+    assert out.shape == logits.shape
+    np.testing.assert_allclose(out, ref, atol=1e-5, rtol=1e-5)
+
+
+def test_seg_softmax_kernel_fully_masked():
+    e, n = 64, 16
+    logits = jnp.ones((e, 2))
+    rcv = jnp.zeros(e, jnp.int32)
+    out = kops.seg_softmax(logits, rcv, jnp.zeros(e, bool), n)
+    assert np.all(np.asarray(out) == 0.0)
+
+
+def test_segment_softmax_dataflow_dispatch():
+    """segment_softmax(dataflow=kernel) == jnp path, (E,) and (E, H)."""
+    r = np.random.default_rng(4)
+    e, n = 96, 20
+    rcv = jnp.asarray(r.integers(0, n, size=e).astype(np.int32))
+    mask = jnp.asarray(r.random(e) < 0.85)
+    dfk = DataflowConfig(impl="kernel", num_banks=4, edge_tile=32)
+    for shape in [(e,), (e, 4)]:
+        logits = jnp.asarray(r.normal(size=shape).astype(np.float32))
+        ref = segment_softmax(logits, rcv, n, edge_mask=mask)
+        out = segment_softmax(logits, rcv, n, edge_mask=mask, dataflow=dfk)
+        np.testing.assert_allclose(out, ref, atol=1e-5, rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# regressions: dtype, 1-D banked messages, pass counting, propagate paths
+# ---------------------------------------------------------------------------
+
+def test_mp_scatter_preserves_dtype_and_parity():
+    """Satellite: mp_scatter emits msg.dtype (f32 accumulation inside)."""
+    msg, rcv, mask = _problem(e=128, d=8, n=32)
+    for dtype, tol in [(jnp.float32, 1e-5), (jnp.bfloat16, 5e-2)]:
+        m = msg.astype(dtype)
+        out = kops.mp_scatter(m, rcv, mask, 32, edge_tile=32, num_banks=4)
+        assert out.dtype == dtype
+        ref = segment_aggregate(m, rcv, 32, kind="sum", edge_mask=mask)
+        np.testing.assert_allclose(out.astype(jnp.float32),
+                                   ref.astype(jnp.float32), atol=tol,
+                                   rtol=tol)
+
+
+def test_banked_segment_sum_1d_messages():
+    """Regression: 1-D messages (softmax denominators) used to crash."""
+    r = np.random.default_rng(7)
+    v = jnp.asarray(r.normal(size=(64,)).astype(np.float32))
+    rcv = jnp.asarray(r.integers(0, 16, size=64).astype(np.int32))
+    mask = jnp.asarray(r.random(64) < 0.9)
+    out = banked_segment_sum(v, rcv, 16, num_banks=4, edge_mask=mask)
+    assert out.shape == (16,)
+    ref = jax.ops.segment_sum(jnp.where(mask, v, 0.0), rcv, num_segments=16)
+    np.testing.assert_allclose(out, ref, atol=1e-5)
+    with pytest.raises(ValueError):
+        banked_segment_sum(v.reshape(4, 4, 4), rcv[:4], 16, num_banks=4)
+
+
+def test_multi_kind_moments_single_pass_count():
+    """The acceptance contract: sum/mean/std moments cost ONE edge sweep
+    (plus one for max); the kernel path streams everything in one."""
+    msg, rcv, mask = _problem()
+    kinds = ("sum", "mean", "max", "std")
+    with count_edge_passes() as st:
+        segment_multi_aggregate(msg, rcv, 24, kinds=kinds, edge_mask=mask)
+    assert st.passes == 2                       # 1 moment sweep + 1 max
+    with count_edge_passes() as st:
+        segment_multi_aggregate(
+            msg, rcv, 24, kinds=kinds, edge_mask=mask,
+            dataflow=DataflowConfig(impl="kernel", num_banks=4,
+                                    edge_tile=32))
+    assert st.passes == 1                       # one stream, all statistics
+    with count_edge_passes() as st:
+        for k in kinds:
+            segment_aggregate(msg, rcv, 24, kind=k, edge_mask=mask)
+    assert st.passes == 7                       # the seed per-kind cost
+
+
+def test_propagate_single_pass_matches_per_kind_loop():
+    g_raw_nodes = 16
+    r = np.random.default_rng(0)
+    feats = r.normal(size=(g_raw_nodes, 4)).astype(np.float32)
+    snd = r.integers(0, g_raw_nodes, size=40).astype(np.int32)
+    rcv = r.integers(0, g_raw_nodes, size=40).astype(np.int32)
+    g = build_graph_batch(feats, snd, rcv, node_pad=32, edge_pad=64)
+
+    def message(src, dst, e):
+        return src
+
+    def update(x, m):
+        return m
+
+    kinds = ("sum", "mean", "max", "std")
+    x = g.node_feat
+    out_sp = propagate(g, x, message_fn=message, update_fn=update,
+                       aggregate=kinds,
+                       dataflow=DataflowConfig(single_pass=True))
+    out_pk = propagate(g, x, message_fn=message, update_fn=update,
+                       aggregate=kinds,
+                       dataflow=DataflowConfig(single_pass=False))
+    np.testing.assert_allclose(out_sp, out_pk, atol=1e-5, rtol=1e-5)

@@ -14,7 +14,7 @@ import numpy as np
 
 from benchmarks.common import Csv, time_fn
 from repro.core.engine import GraphStreamEngine
-from repro.core.graph import build_graph_batch
+from repro.core.graph import build_graph_batch, concat_raw_graphs
 from repro.core.message_passing import DataflowConfig, count_edge_passes
 from repro.core.models import PAPER_GNN_CONFIGS, make_gnn
 from repro.core.pyg_ref import DENSE_REFS
@@ -84,18 +84,11 @@ def fig7_batch_sweep(csv: Csv, batches=(1, 4, 16, 64)):
     params = model.init(jax.random.PRNGKey(0), cfg)
     graphs = list(molhiv_like(seed=0, n_graphs=max(batches)))
     for bs in batches:
-        node_pad, edge_pad = 64 * bs, 128 * bs
-        feats = np.concatenate([g.node_feat for g in graphs[:bs]])
-        offs, snd, rcv, ef = [0], [], [], []
-        for g in graphs[:bs]:
-            snd.append(g.senders + offs[-1])
-            rcv.append(g.receivers + offs[-1])
-            ef.append(g.edge_feat)
-            offs.append(offs[-1] + g.node_feat.shape[0])
+        raw = concat_raw_graphs(graphs[:bs])
         gb = build_graph_batch(
-            feats, np.concatenate(snd), np.concatenate(rcv),
-            edge_feat=np.concatenate(ef), node_pad=node_pad,
-            edge_pad=edge_pad, graph_offsets=np.array(offs), graph_pad=bs)
+            raw["node_feat"], raw["senders"], raw["receivers"],
+            edge_feat=raw["edge_feat"], node_pad=64 * bs, edge_pad=128 * bs,
+            graph_offsets=raw["graph_offsets"], graph_pad=bs)
         fn = jax.jit(lambda p, g: model.apply(p, g, cfg))
         t = time_fn(fn, params, gb)
         csv.add(f"fig7.molhiv.gin.batch{bs}", t / bs * 1e6,

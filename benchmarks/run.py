@@ -4,12 +4,15 @@
   PYTHONPATH=src python -m benchmarks.run            # all tables, small sizes
   PYTHONPATH=src python -m benchmarks.run table7     # one table
   PYTHONPATH=src python -m benchmarks.run kernels    # micro-benchmarks only
+  PYTHONPATH=src python -m benchmarks.run stream     # serving engine sweep
 
 Alongside the CSV on stdout, kernel-level rows (``kernel.*``) are written to
 ``BENCH_kernels.json`` as a machine-readable ``{name: us_per_call}`` map
 (plus the derived annotations) so the perf trajectory — in particular the
 single-pass vs per-kind multi-aggregation comparison — can be tracked
-across PRs.
+across PRs. The ``stream`` target additionally writes ``BENCH_stream.json``
+(p50/p99 latency and batch-aware graphs/s at batch sizes 1/8/64/256, plus
+the per-bucket autotuned dataflow knobs).
 """
 
 import json
@@ -17,9 +20,18 @@ import sys
 from pathlib import Path
 
 from benchmarks.common import Csv
-from benchmarks import kernel_bench, paper_tables
+from benchmarks import kernel_bench, paper_tables, stream_bench
 
-BENCH_JSON = Path(__file__).resolve().parent.parent / "BENCH_kernels.json"
+_ROOT = Path(__file__).resolve().parent.parent
+BENCH_JSON = _ROOT / "BENCH_kernels.json"
+BENCH_STREAM_JSON = _ROOT / "BENCH_stream.json"
+
+_STREAM_PAYLOAD = {}
+
+
+def _run_stream(csv: Csv) -> None:
+    _STREAM_PAYLOAD.update(stream_bench.stream_sweep(csv))
+
 
 TABLES = {
     "table5": lambda csv: paper_tables.table5_hep_latency(csv, n_graphs=12),
@@ -33,6 +45,7 @@ TABLES = {
                             kernel_bench.multi_agg_paths(csv),
                             kernel_bench.softmax_paths(csv),
                             kernel_bench.attention_paths(csv)),
+    "stream": _run_stream,
 }
 
 
@@ -54,6 +67,12 @@ def main() -> None:
         BENCH_JSON.write_text(json.dumps(payload, indent=2, sort_keys=True)
                               + "\n")
         print(f"# wrote {BENCH_JSON.name} ({len(kernel_rows)} kernel rows)")
+
+    if _STREAM_PAYLOAD:
+        BENCH_STREAM_JSON.write_text(
+            json.dumps(_STREAM_PAYLOAD, indent=2, sort_keys=True) + "\n")
+        print(f"# wrote {BENCH_STREAM_JSON.name} "
+              f"(batches {sorted(_STREAM_PAYLOAD['batch'], key=int)})")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,87 @@
+"""Multi-queue serving-engine benchmark: the paper's Fig. 7 sweep, live.
+
+Feeds a MolHIV-like stream through the async ``GraphStreamEngine`` at
+several ``max_batch`` settings and reports per-graph latency percentiles
+and batch-aware throughput (graphs/s of device-busy time). Results are
+written to ``BENCH_stream.json`` (alongside ``BENCH_kernels.json``) so the
+serving-path perf trajectory is tracked across PRs, including the
+per-bucket ``(num_banks, edge_tile)`` the autotuner picked.
+
+Methodology: a full unrecorded warm pass runs first, so bucket compiles and
+the autotune candidate search stay out of the measured window. The measured
+pass is *open-loop with full backlog* (every graph submitted up front, then
+drained): throughput is the steady-state packed-serving figure, while the
+latency percentiles include queue wait under that backlog — compare them
+against ``queue_wait_mean_ms``, not against single-graph device time.
+
+  PYTHONPATH=src python -m benchmarks.run stream
+"""
+
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+
+from benchmarks.common import Csv
+from repro.core.engine import GraphStreamEngine
+from repro.core.models import PAPER_GNN_CONFIGS, make_gnn
+from repro.data.graphs import molhiv_like
+
+STREAM_BATCHES = (1, 8, 64, 256)
+
+
+def stream_sweep(csv: Csv, model_name: str = "gin", n_graphs: int = 256,
+                 batches=STREAM_BATCHES, autotune: bool = True) -> Dict:
+    """Serve the same stream at each max_batch; collect the summary map."""
+    cfg = PAPER_GNN_CONFIGS[model_name]
+    model = make_gnn(cfg)
+    params = model.init(jax.random.PRNGKey(0), cfg)
+    graphs = list(molhiv_like(seed=0, n_graphs=n_graphs))
+
+    payload: Dict = {"model": model_name, "n_graphs": n_graphs,
+                     "batch": {}, "autotune": {}}
+    for bs in batches:
+        eng = GraphStreamEngine(
+            cfg, params, max_batch=bs, max_wait_ms=20.0,
+            max_nodes_per_batch=64 * bs, max_edges_per_batch=128 * bs,
+            # deadline-driven flushing only: measure *packed* batches, not
+            # the ramp-up the eager idle-flush path would produce
+            eager_flush=(bs == 1), autotune=autotune)
+        try:
+            # unrecorded warm pass: compiles (and autotunes) every bucket
+            # this stream hits, so the measured pass is compile-free
+            warm = [eng.submit(g.node_feat, g.senders, g.receivers,
+                               g.edge_feat, g.node_pos, record=False)
+                    for g in graphs]
+            eng.drain(timeout=600)
+            for f in warm:
+                f.result(timeout=1)
+            futs = [eng.submit(g.node_feat, g.senders, g.receivers,
+                               g.edge_feat, g.node_pos) for g in graphs]
+            eng.drain(timeout=600)
+            for f in futs:
+                f.result(timeout=1)
+            s = eng.stats.summary()
+            payload["batch"][str(bs)] = {
+                "p50_ms": s["p50_ms"],
+                "p99_ms": s["p99_ms"],
+                "graphs_per_s": s["throughput_gps"],
+                "mean_batch_size": s.get("mean_batch_size", 1.0),
+                "queue_wait_mean_ms": s.get("queue_wait_mean_ms", 0.0),
+            }
+            payload["autotune"].update(eng.autotune_report())
+            csv.add(f"stream.molhiv.{model_name}.batch{bs}",
+                    s["p50_ms"] * 1e3,
+                    f"graphs_per_s={s['throughput_gps']:.1f};"
+                    f"p99_ms={s['p99_ms']:.2f};"
+                    f"mean_batch={s.get('mean_batch_size', 1.0):.1f}")
+        finally:
+            eng.close()
+
+    b1 = payload["batch"].get("1")
+    b64 = payload["batch"].get("64")
+    if b1 and b64:
+        payload["batch64_speedup_vs_batch1"] = (
+            b64["graphs_per_s"] / max(b1["graphs_per_s"], 1e-9))
+    return payload

@@ -135,6 +135,51 @@ def build_graph_batch(
     )
 
 
+def concat_raw_graphs(graphs) -> dict:
+    """Concatenate raw COO graphs (host-side numpy) for packed batching.
+
+    ``graphs`` is a sequence of objects with ``node_feat / senders /
+    receivers`` and optional ``edge_feat / node_pos`` attributes (e.g.
+    ``repro.data.graphs.RawGraph`` or ``packing.PackItem``). Edge indices are
+    shifted by each graph's node offset; returns the keyword arguments for
+    :func:`build_graph_batch` (minus the padding sizes)::
+
+        {node_feat, senders, receivers, edge_feat, node_pos, graph_offsets}
+
+    ``edge_feat`` / ``node_pos`` are None when absent from every input.
+    When only some graphs carry them, the gaps are zero-filled at the width
+    the other graphs use — the same semantics ``build_graph_batch`` applies
+    to a lone graph without them — so one bare graph cannot poison an
+    entire pack. Width mismatches across graphs still fail loudly.
+    """
+    if not graphs:
+        raise ValueError("cannot concatenate an empty graph list")
+
+    def gather(attr: str, rows_of) -> Optional[np.ndarray]:
+        vals = [getattr(g, attr, None) for g in graphs]
+        if not any(v is not None for v in vals):
+            return None
+        width = next(v.shape[1] for v in vals if v is not None)
+        return np.concatenate([
+            v if v is not None else np.zeros((rows_of(g), width), np.float32)
+            for g, v in zip(graphs, vals)
+        ])
+
+    offs = np.zeros(len(graphs) + 1, dtype=np.int64)
+    for i, g in enumerate(graphs):
+        offs[i + 1] = offs[i] + g.node_feat.shape[0]
+    return {
+        "node_feat": np.concatenate([g.node_feat for g in graphs]),
+        "senders": np.concatenate(
+            [g.senders + offs[i] for i, g in enumerate(graphs)]),
+        "receivers": np.concatenate(
+            [g.receivers + offs[i] for i, g in enumerate(graphs)]),
+        "edge_feat": gather("edge_feat", lambda g: g.senders.shape[0]),
+        "node_pos": gather("node_pos", lambda g: g.node_feat.shape[0]),
+        "graph_offsets": offs,
+    }
+
+
 def pad_bucket(n: int, buckets=(32, 64, 128, 256, 512, 1024, 4096, 16384)) -> int:
     """Smallest padding bucket holding ``n`` (streaming engine jits one program
     per bucket so arbitrary arriving graphs reuse compiled code)."""

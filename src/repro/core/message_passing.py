@@ -11,6 +11,10 @@ The engine exposes:
                                    all requested kinds from one sweep over the
                                    edge stream (DESIGN.md §3),
   * ``segment_softmax``          — edge softmax for anisotropic models (GAT),
+  * ``PrecomputedGraphStats``    — per-graph structure statistics (degrees,
+                                   normalizers, PNA scalers, DGN field
+                                   weights) computed once per forward pass
+                                   and shared across layers (DESIGN.md §5),
   * ``DataflowConfig``           — the paper's four parallelism knobs, remapped to
                                    TPU tile shapes (see DESIGN.md §2), plus the
                                    implementation selector used by the Fig. 9
@@ -95,6 +99,87 @@ def count_edge_passes():
     """
     _EDGE_PASS_STATS.passes = 0
     yield _EDGE_PASS_STATS
+
+
+@jax.tree_util.register_dataclass
+@dataclass(frozen=True)
+class PrecomputedGraphStats:
+    """Graph-level statistics computed once per forward pass.
+
+    The paper's MP unit accumulates per-destination state on the fly; several
+    models additionally need *graph structure* statistics (degrees, degree
+    normalizers, PNA scalers, the DGN field weights) that are functions of the
+    topology only — recomputing them per layer costs one edge sweep each time.
+    This bundle is produced once by :func:`precompute_graph_stats` and threaded
+    through ``propagate`` (and directly into ``segment_multi_aggregate``) so
+    every layer shares the same arrays.
+
+    All fields are optional: a model requests only what it uses, and ``None``
+    fields vanish from the pytree (no dead device buffers).
+
+      degrees       (N,)   masked in-degree per destination node
+      inv_sqrt_deg  (N,)   1/sqrt(degree + 1) — GCN's self-loop normalizer
+      pna_scalers   (N, 3) [identity, amplification, attenuation] (Eq. 3)
+      dgn_weights   (E,)   normalized directional field weight per edge
+      dgn_wsum      (N,)   per-destination sum of dgn_weights (layer-invariant
+                           part of the |B_dx X| derivative)
+    """
+
+    degrees: Optional[Array] = None
+    inv_sqrt_deg: Optional[Array] = None
+    pna_scalers: Optional[Array] = None
+    dgn_weights: Optional[Array] = None
+    dgn_wsum: Optional[Array] = None
+
+
+def precompute_graph_stats(
+    graph: GraphBatch,
+    *,
+    with_degrees: bool = True,
+    with_self_loop_norm: bool = False,
+    pna_delta: Optional[float] = None,
+    with_dgn_field: bool = False,
+) -> PrecomputedGraphStats:
+    """Compute the per-graph statistics bundle (one sweep per family).
+
+    ``pna_delta`` is the PNA normalization constant (``cfg.avg_log_degree``).
+    Sweeps issued here are counted by ``count_edge_passes`` — they are real
+    passes over the edge stream, just hoisted out of the layer loop.
+    """
+    degrees = None
+    need_deg = with_degrees or with_self_loop_norm or pna_delta is not None
+    if need_deg:
+        _count_pass()
+        degrees = jax.ops.segment_sum(
+            graph.edge_mask.astype(jnp.float32), graph.receivers,
+            num_segments=graph.n_node_pad)
+    inv_sqrt_deg = None
+    if with_self_loop_norm:
+        inv_sqrt_deg = jax.lax.rsqrt(degrees + 1.0)
+    pna_scalers = None
+    if pna_delta is not None:
+        log_deg = jnp.log(degrees + 1.0)
+        pna_scalers = jnp.stack([
+            jnp.ones_like(log_deg),
+            log_deg / pna_delta,
+            pna_delta / jnp.maximum(log_deg, 1e-3),
+        ], axis=-1)
+    dgn_weights = dgn_wsum = None
+    if with_dgn_field:
+        pos = graph.node_pos[:, 0]
+        dpos = pos[graph.senders] - pos[graph.receivers]
+        _count_pass()
+        absnorm = jax.ops.segment_sum(
+            jnp.where(graph.edge_mask, jnp.abs(dpos), 0.0), graph.receivers,
+            num_segments=graph.n_node_pad)
+        dgn_weights = dpos / jnp.maximum(absnorm[graph.receivers], 1e-6)
+        _count_pass()
+        dgn_wsum = jax.ops.segment_sum(
+            jnp.where(graph.edge_mask, dgn_weights, 0.0), graph.receivers,
+            num_segments=graph.n_node_pad)
+    return PrecomputedGraphStats(
+        degrees=degrees, inv_sqrt_deg=inv_sqrt_deg, pna_scalers=pna_scalers,
+        dgn_weights=dgn_weights, dgn_wsum=dgn_wsum)
 
 
 @dataclass(frozen=True)
@@ -454,12 +539,17 @@ def propagate(
     aggregate: Union[str, Sequence[str]] = "sum",
     edge_feat: Optional[Array] = None,
     dataflow: DataflowConfig = DEFAULT_DATAFLOW,
+    stats: Optional[PrecomputedGraphStats] = None,
 ) -> Array:
     """One message-passing layer.
 
     message_fn(x_src, x_dst, e)  -> (E, D)      # phi — scatter phase
     aggregate                    -> A           # gather phase (merged)
     update_fn(x, m)              -> (N, D_out)  # gamma — node transformation
+
+    ``stats`` (see :class:`PrecomputedGraphStats`) shares per-graph degrees
+    across layers: degree-normalized kinds (mean/var/std) then skip their
+    per-layer count sweep / count columns entirely.
 
     Multi-kind ``aggregate`` (the PNA path) runs through the single-pass
     multi-statistic MP unit by default (``dataflow.single_pass``): one edge
@@ -479,22 +569,26 @@ def propagate(
     if dataflow.impl == "twopass":
         msg = jax.lax.optimization_barrier(msg)
 
+    degrees = stats.degrees if stats is not None else None
     kinds = (aggregate,) if isinstance(aggregate, str) else tuple(aggregate)
     if len(kinds) == 1:
         m = segment_aggregate(
             msg, graph.receivers, graph.n_node_pad,
-            kind=kinds[0], edge_mask=graph.edge_mask, dataflow=dataflow)
+            kind=kinds[0], edge_mask=graph.edge_mask, dataflow=dataflow,
+            degrees=degrees)
     elif dataflow.single_pass:
-        stats = segment_multi_aggregate(
+        agg_stats = segment_multi_aggregate(
             msg, graph.receivers, graph.n_node_pad,
-            kinds=kinds, edge_mask=graph.edge_mask, dataflow=dataflow)
-        m = jnp.concatenate([stats[k] for k in kinds], axis=-1)
+            kinds=kinds, edge_mask=graph.edge_mask, dataflow=dataflow,
+            degrees=degrees)
+        m = jnp.concatenate([agg_stats[k] for k in kinds], axis=-1)
     else:
         # legacy per-kind loop, kept for the Fig. 9 pass-count ablation
         aggs = [
             segment_aggregate(
                 msg, graph.receivers, graph.n_node_pad,
-                kind=k, edge_mask=graph.edge_mask, dataflow=dataflow)
+                kind=k, edge_mask=graph.edge_mask, dataflow=dataflow,
+                degrees=degrees)
             for k in kinds
         ]
         m = jnp.concatenate(aggs, axis=-1)

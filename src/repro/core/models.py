@@ -21,7 +21,9 @@ from repro.core.graph import GraphBatch
 from repro.core.message_passing import (
     DEFAULT_DATAFLOW,
     DataflowConfig,
+    PrecomputedGraphStats,
     global_pool,
+    precompute_graph_stats,
     propagate,
     segment_aggregate,
     segment_multi_aggregate,
@@ -120,10 +122,12 @@ def gcn_init(key, cfg: GNNConfig) -> Params:
 
 
 def gcn_apply(params, graph: GraphBatch, cfg: GNNConfig,
-              dataflow: DataflowConfig = DEFAULT_DATAFLOW) -> Array:
+              dataflow: DataflowConfig = DEFAULT_DATAFLOW,
+              stats: Optional[PrecomputedGraphStats] = None) -> Array:
     x = graph.node_feat.astype(cfg.dtype)
-    deg = graph.in_degrees() + 1.0          # self-loop degree, on the fly
-    inv_sqrt = jax.lax.rsqrt(deg)
+    if stats is None or stats.inv_sqrt_deg is None:
+        stats = precompute_graph_stats(graph, with_self_loop_norm=True)
+    inv_sqrt = stats.inv_sqrt_deg           # 1/sqrt(deg+1), once per graph
 
     for l, p in enumerate(params["layers"]):
         def message(src, dst, e, _inv=inv_sqrt, _g=graph):
@@ -136,7 +140,7 @@ def gcn_apply(params, graph: GraphBatch, cfg: GNNConfig,
             return h if last else jax.nn.relu(h)
 
         x = propagate(graph, x, message_fn=message, update_fn=update,
-                      aggregate="sum", dataflow=dataflow)
+                      aggregate="sum", dataflow=dataflow, stats=stats)
     return _readout(params["head"], cfg, graph, x)
 
 
@@ -167,7 +171,7 @@ def gin_init(key, cfg: GNNConfig) -> Params:
     }
 
 
-def _gin_layer(p, graph, x, dataflow):
+def _gin_layer(p, graph, x, dataflow, stats=None):
     e = _dense(p["edge_enc"], graph.edge_feat)   # per-layer bond encoder
 
     def message(src, dst, ee, _e=e):
@@ -177,14 +181,15 @@ def _gin_layer(p, graph, x, dataflow):
         return _mlp(_p["mlp"], (1.0 + _p["eps"]) * xx + m)
 
     return propagate(graph, x, message_fn=message, update_fn=update,
-                     aggregate="sum", dataflow=dataflow)
+                     aggregate="sum", dataflow=dataflow, stats=stats)
 
 
 def gin_apply(params, graph: GraphBatch, cfg: GNNConfig,
-              dataflow: DataflowConfig = DEFAULT_DATAFLOW) -> Array:
+              dataflow: DataflowConfig = DEFAULT_DATAFLOW,
+              stats: Optional[PrecomputedGraphStats] = None) -> Array:
     x = jax.nn.relu(_dense(params["node_enc"], graph.node_feat.astype(cfg.dtype)))
     for p in params["layers"]:
-        x = _gin_layer(p, graph, x, dataflow)
+        x = _gin_layer(p, graph, x, dataflow, stats)
     return _readout(params["head"], cfg, graph, x)
 
 
@@ -202,7 +207,8 @@ def gin_vn_init(key, cfg: GNNConfig) -> Params:
 
 
 def gin_vn_apply(params, graph: GraphBatch, cfg: GNNConfig,
-                 dataflow: DataflowConfig = DEFAULT_DATAFLOW) -> Array:
+                 dataflow: DataflowConfig = DEFAULT_DATAFLOW,
+                 stats: Optional[PrecomputedGraphStats] = None) -> Array:
     """GIN with a virtual node per packed graph.
 
     The VN's O(N) edges are never materialized: its incoming aggregation is a
@@ -215,7 +221,7 @@ def gin_vn_apply(params, graph: GraphBatch, cfg: GNNConfig,
     for l, p in enumerate(params["layers"]):
         x = x + vn[graph.graph_ids]                       # VN -> all nodes
         x = jnp.where(graph.node_mask[:, None], x, 0.0)
-        x = _gin_layer(p, graph, x, dataflow)
+        x = _gin_layer(p, graph, x, dataflow, stats)
         if l < n_layers - 1:                              # all nodes -> VN
             pooled = global_pool(graph, x, kind="sum")
             vn = _mlp(params["vn_mlps"][l], vn + pooled)
@@ -233,18 +239,22 @@ def gat_init(key, cfg: GNNConfig) -> Params:
     layers = []
     for l in range(cfg.num_layers):
         d_in = cfg.node_feat_dim if l == 0 else d_hid
-        kw, ka = jax.random.split(keys[l])
+        # fresh keys per layer for w AND both attention halves (a_dst used to
+        # be drawn from the shared keys[-2], making every layer's destination
+        # attention identical)
+        kw, ka_src, ka_dst = jax.random.split(keys[l], 3)
         layers.append({
             "w": _dense_init(kw, d_in, d_hid, cfg.dtype),
             # attention vectors a = [a_src ; a_dst], one per head
-            "a_src": jax.random.normal(ka, (cfg.heads, cfg.head_dim), cfg.dtype) * 0.1,
-            "a_dst": jax.random.normal(keys[-2], (cfg.heads, cfg.head_dim), cfg.dtype) * 0.1,
+            "a_src": jax.random.normal(ka_src, (cfg.heads, cfg.head_dim), cfg.dtype) * 0.1,
+            "a_dst": jax.random.normal(ka_dst, (cfg.heads, cfg.head_dim), cfg.dtype) * 0.1,
         })
     return {"layers": layers, "head": _head_init(keys[-1], cfg, d_hid)}
 
 
 def gat_apply(params, graph: GraphBatch, cfg: GNNConfig,
-              dataflow: DataflowConfig = DEFAULT_DATAFLOW) -> Array:
+              dataflow: DataflowConfig = DEFAULT_DATAFLOW,
+              stats: Optional[PrecomputedGraphStats] = None) -> Array:
     x = graph.node_feat.astype(cfg.dtype)
     H, Dh = cfg.heads, cfg.head_dim
     N = graph.n_node_pad
@@ -291,17 +301,15 @@ def pna_init(key, cfg: GNNConfig) -> Params:
 
 
 def pna_apply(params, graph: GraphBatch, cfg: GNNConfig,
-              dataflow: DataflowConfig = DEFAULT_DATAFLOW) -> Array:
+              dataflow: DataflowConfig = DEFAULT_DATAFLOW,
+              stats: Optional[PrecomputedGraphStats] = None) -> Array:
     x = jax.nn.relu(_dense(params["node_enc"], graph.node_feat.astype(cfg.dtype)))
     N = graph.n_node_pad
-    deg = graph.in_degrees()
-    log_deg = jnp.log(deg + 1.0)
-    delta = cfg.avg_log_degree
-    scalers = jnp.stack([
-        jnp.ones_like(log_deg),
-        log_deg / delta,
-        delta / jnp.maximum(log_deg, 1e-3),
-    ], axis=-1)                                               # (N, 3)
+    if stats is None or stats.pna_scalers is None:
+        # one degree sweep for the whole network: the shared degrees feed the
+        # scalers AND every layer's mean/std (no per-layer count columns)
+        stats = precompute_graph_stats(graph, pna_delta=cfg.avg_log_degree)
+    scalers = stats.pna_scalers                               # (N, 3)
 
     for p in params["layers"]:
         e = _dense(p["edge_enc"], graph.edge_feat)
@@ -316,7 +324,8 @@ def pna_apply(params, graph: GraphBatch, cfg: GNNConfig,
             return jax.nn.relu(h)
 
         x = propagate(graph, x, message_fn=message, update_fn=update,
-                      aggregate=("mean", "std", "max", "min"), dataflow=dataflow)
+                      aggregate=("mean", "std", "max", "min"),
+                      dataflow=dataflow, stats=stats)
     return _readout(params["head"], cfg, graph, x)
 
 
@@ -338,37 +347,36 @@ def dgn_init(key, cfg: GNNConfig) -> Params:
 
 
 def dgn_apply(params, graph: GraphBatch, cfg: GNNConfig,
-              dataflow: DataflowConfig = DEFAULT_DATAFLOW) -> Array:
+              dataflow: DataflowConfig = DEFAULT_DATAFLOW,
+              stats: Optional[PrecomputedGraphStats] = None) -> Array:
     """mean + directional-derivative aggregators: Y = [D^-1 A X ; |B_dx X|].
 
     B_dx rows are built on the fly from the per-node field ``node_pos``
     (the paper feeds precomputed Laplacian eigenvectors as kernel inputs; our
     streaming generator attaches the field to each graph the same way).
+    The field weights, their per-destination sums, and the degrees are all
+    layer-invariant — computed once in ``precompute_graph_stats`` and shared.
     """
     x = jax.nn.relu(_dense(params["node_enc"], graph.node_feat.astype(cfg.dtype)))
     N = graph.n_node_pad
     d = cfg.hidden_dim
-    pos = graph.node_pos[:, 0]
-    dpos = pos[graph.senders] - pos[graph.receivers]          # field along edge
-    absnorm = segment_aggregate(
-        jnp.abs(dpos)[:, None], graph.receivers, N, kind="sum",
-        edge_mask=graph.edge_mask, dataflow=dataflow)[:, 0]
-    w = dpos / jnp.maximum(absnorm[graph.receivers], 1e-6)     # (E,)
+    if stats is None or stats.dgn_weights is None:
+        stats = precompute_graph_stats(graph, with_dgn_field=True)
+    w = stats.dgn_weights                                      # (E,)
+    w_sum = stats.dgn_wsum                                     # (N,)
 
     for p in params["layers"]:
-        # single-pass multi-statistic MP unit: the mean aggregator, the
-        # directional sum, and the field normalizer all come out of ONE
-        # sweep over [x_src | x_src*w | w] (was 3 separate segment passes
-        # plus a degree pass).
+        # single-pass multi-statistic MP unit: the mean aggregator and the
+        # directional sum come out of ONE sweep over [x_src | x_src*w]
+        # (degrees and the field normalizer come precomputed via ``stats``).
         x_src = x[graph.senders]
-        stacked = jnp.concatenate(
-            [x_src, x_src * w[:, None], w[:, None]], axis=-1)
-        stats = segment_multi_aggregate(
+        stacked = jnp.concatenate([x_src, x_src * w[:, None]], axis=-1)
+        agg = segment_multi_aggregate(
             stacked, graph.receivers, N, kinds=("sum", "mean"),
-            edge_mask=graph.edge_mask, dataflow=dataflow)
-        m_mean = stats["mean"][:, :d]
-        m_dir = stats["sum"][:, d:2 * d]
-        w_sum = stats["sum"][:, 2 * d]
+            edge_mask=graph.edge_mask, dataflow=dataflow,
+            degrees=stats.degrees)
+        m_mean = agg["mean"][:, :d]
+        m_dir = agg["sum"][:, d:2 * d]
         m_dx = jnp.abs(m_dir - x * w_sum[:, None])            # |B_dx X|
         h = _dense(p["post"], jnp.concatenate([x, m_mean, m_dx], -1))
         x = jnp.where(graph.node_mask[:, None], jax.nn.relu(h), 0.0)

@@ -1,0 +1,212 @@
+"""Adaptive graph packing for the multi-queue serving engine.
+
+The paper's Fig. 7 shows one dataflow serving batch sizes 1..1024 by packing
+multiple arriving graphs into one padded batch. This module makes that a
+serving-path policy instead of a benchmark-only code path:
+
+  * ``GraphPacker`` keeps a small set of *open batches* and first-fits each
+    arriving graph into the first batch with room (node budget, edge budget,
+    graph-count budget). A batch is flushed — handed back to the caller as a
+    ``PackedBatch`` — when it is full or when its oldest graph has waited
+    longer than ``max_wait_s``.
+  * Flush shapes are bucketed: ``node_pad``/``edge_pad`` come from the same
+    bucket table the batch-1 engine uses (``pad_bucket``), and ``graph_pad``
+    is pinned to ``max_batch``, so the number of distinct compiled programs
+    stays small regardless of how full each batch happens to be.
+  * Packing uses the existing ``graph_offsets`` machinery of
+    ``build_graph_batch``; per-graph results are recovered from the slot
+    order (graph-level tasks) or ``PackedBatch.node_span_of`` (node-level).
+
+The packer is deliberately free of threads, clocks, and device code: the
+engine owns time (it passes ``now`` into ``poll``) and owns dispatch. That
+keeps the flush policy unit-testable in isolation.
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.graph import (GraphBatch, build_graph_batch,
+                              concat_raw_graphs, pad_bucket)
+
+DEFAULT_BUCKETS = (32, 64, 128, 256, 512, 1024)
+
+
+@dataclass
+class PackItem:
+    """One arriving graph plus the caller's opaque payload (e.g. a Future)."""
+
+    node_feat: np.ndarray
+    senders: np.ndarray
+    receivers: np.ndarray
+    edge_feat: Optional[np.ndarray] = None
+    node_pos: Optional[np.ndarray] = None
+    payload: Any = None
+    t_arrival: float = field(default_factory=time.perf_counter)
+
+    @property
+    def num_nodes(self) -> int:
+        return int(self.node_feat.shape[0])
+
+    @property
+    def num_edges(self) -> int:
+        return int(self.senders.shape[0])
+
+
+@dataclass
+class PackedBatch:
+    """A flushed batch: items in pack order plus the padded bucket shapes."""
+
+    items: List[PackItem]
+    node_pad: int
+    edge_pad: int
+    graph_pad: int
+
+    @property
+    def num_graphs(self) -> int:
+        return len(self.items)
+
+    @property
+    def bucket(self) -> Tuple[int, int, int]:
+        return (self.node_pad, self.edge_pad, self.graph_pad)
+
+    def graph_offsets(self) -> np.ndarray:
+        offs = np.zeros(len(self.items) + 1, dtype=np.int64)
+        for i, it in enumerate(self.items):
+            offs[i + 1] = offs[i] + it.num_nodes
+        return offs
+
+    def node_span_of(self, slot: int) -> Tuple[int, int]:
+        """(start, end) node rows of graph ``slot`` inside the packed batch."""
+        offs = self.graph_offsets()
+        return int(offs[slot]), int(offs[slot + 1])
+
+    def build(self, *, pos_dim: int = 1) -> GraphBatch:
+        """Concatenate + pad into a device-ready ``GraphBatch`` (numpy work)."""
+        raw = concat_raw_graphs(self.items)
+        return build_graph_batch(
+            raw["node_feat"], raw["senders"], raw["receivers"],
+            edge_feat=raw["edge_feat"], node_pad=self.node_pad,
+            edge_pad=self.edge_pad, graph_offsets=raw["graph_offsets"],
+            graph_pad=self.graph_pad, node_pos=raw["node_pos"],
+            pos_dim=pos_dim)
+
+
+class _OpenBatch:
+    __slots__ = ("items", "n_nodes", "n_edges", "deadline")
+
+    def __init__(self, deadline: float):
+        self.items: List[PackItem] = []
+        self.n_nodes = 0
+        self.n_edges = 0
+        self.deadline = deadline
+
+    def add(self, item: PackItem) -> None:
+        self.items.append(item)
+        self.n_nodes += item.num_nodes
+        self.n_edges += item.num_edges
+
+
+class GraphPacker:
+    """First-fit packing of arriving graphs into bucketed open batches.
+
+    Parameters
+    ----------
+    max_batch : graphs per packed batch (== ``graph_pad`` of every flush).
+    max_wait_s : deadline from a batch's FIRST graph arrival to its flush;
+        the engine polls expired batches out. 0 disables waiting entirely
+        (every graph flushes alone unless others are already queued).
+    buckets : the node/edge bucket table used for flush shapes.
+    max_nodes / max_edges : capacity of one open batch. Defaults scale with
+        ``max_batch`` assuming small streaming graphs (the paper's molecule /
+        HEP regime); a single oversized graph still gets its own batch.
+    """
+
+    def __init__(self, *, max_batch: int = 8, max_wait_s: float = 2e-3,
+                 buckets: Tuple[int, ...] = DEFAULT_BUCKETS,
+                 max_nodes: Optional[int] = None,
+                 max_edges: Optional[int] = None):
+        if max_batch < 1:
+            raise ValueError("max_batch must be >= 1")
+        self.max_batch = max_batch
+        self.max_wait_s = max_wait_s
+        self.buckets = tuple(buckets)
+        self.max_nodes = max_nodes if max_nodes is not None else 64 * max_batch
+        self.max_edges = max_edges if max_edges is not None else 256 * max_batch
+        self._open: List[_OpenBatch] = []
+
+    # -- state ------------------------------------------------------------
+
+    @property
+    def open_batches(self) -> int:
+        return len(self._open)
+
+    @property
+    def pending_graphs(self) -> int:
+        return sum(len(b.items) for b in self._open)
+
+    def next_deadline(self) -> Optional[float]:
+        return min((b.deadline for b in self._open), default=None)
+
+    # -- packing ----------------------------------------------------------
+
+    def _fits(self, b: _OpenBatch, item: PackItem) -> bool:
+        return (len(b.items) < self.max_batch
+                and b.n_nodes + item.num_nodes <= self.max_nodes
+                and b.n_edges + item.num_edges <= self.max_edges)
+
+    def _seal(self, b: _OpenBatch) -> PackedBatch:
+        return PackedBatch(
+            items=b.items,
+            node_pad=pad_bucket(max(b.n_nodes, 1), self.buckets),
+            edge_pad=pad_bucket(max(b.n_edges, 1), self.buckets),
+            graph_pad=self.max_batch,
+        )
+
+    def add(self, item: PackItem, now: Optional[float] = None
+            ) -> List[PackedBatch]:
+        """Route one graph; return any batches that became full."""
+        now = time.perf_counter() if now is None else now
+        target = None
+        for b in self._open:                      # first fit, arrival order
+            if self._fits(b, item):
+                target = b
+                break
+        if target is None:
+            target = _OpenBatch(deadline=now + self.max_wait_s)
+            self._open.append(target)
+        target.add(item)
+        flushed = []
+        # full on any budget: count is exact; node/edge budgets are "no
+        # further typical graph fits" heuristics resolved lazily by _fits,
+        # so only the count budget forces an eager flush here.
+        if len(target.items) >= self.max_batch:
+            self._open.remove(target)
+            flushed.append(self._seal(target))
+        return flushed
+
+    def poll(self, now: Optional[float] = None) -> List[PackedBatch]:
+        """Flush every open batch whose deadline has expired."""
+        now = time.perf_counter() if now is None else now
+        expired = [b for b in self._open if b.deadline <= now]
+        for b in expired:
+            self._open.remove(b)
+        return [self._seal(b) for b in expired]
+
+    def flush_all(self) -> List[PackedBatch]:
+        """Flush every open batch regardless of deadline (drain/shutdown)."""
+        out = [self._seal(b) for b in self._open]
+        self._open = []
+        return out
+
+    def flush_oldest(self) -> Optional[PackedBatch]:
+        """Flush the batch with the earliest deadline (idle-device path)."""
+        if not self._open:
+            return None
+        b = min(self._open, key=lambda ob: ob.deadline)
+        self._open.remove(b)
+        return self._seal(b)

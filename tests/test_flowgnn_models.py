@@ -110,6 +110,18 @@ def test_kernel_impl_matches_fused(name):
     np.testing.assert_allclose(base, kern, atol=1e-4, rtol=1e-4)
 
 
+def test_gat_layers_have_distinct_attention_vectors():
+    """Regression: every layer's a_dst used to be drawn from the same key,
+    so all layers shared identical destination-attention vectors."""
+    cfg = PAPER_GNN_CONFIGS["gat"].replace(num_layers=3)
+    params = make_gnn(cfg).init(jax.random.PRNGKey(0), cfg)
+    for a in ("a_src", "a_dst"):
+        vecs = [np.asarray(l[a]) for l in params["layers"]]
+        for i in range(len(vecs)):
+            for j in range(i + 1, len(vecs)):
+                assert not np.allclose(vecs[i], vecs[j]), (a, i, j)
+
+
 def test_pna_single_pass_matches_per_kind_loop():
     """The single-pass multi-statistic MP unit is numerically transparent
     at the model level (PNA = the paper's multi-aggregator workload)."""

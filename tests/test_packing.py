@@ -1,0 +1,204 @@
+"""Packing invariance: a graph's prediction must not depend on what it is
+co-batched with — the contract that makes adaptive batching safe.
+
+Covers the packer policy (first-fit, flush on max-batch, deadlines) and the
+numerical contract: per-bucket, a graph served alone is BITWISE identical to
+the same graph packed with arbitrary co-batched graphs, including co-packs
+with permuted edge order and degree-0 nodes.
+"""
+
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core.graph import build_graph_batch, concat_raw_graphs
+from repro.core.models import PAPER_GNN_CONFIGS, make_gnn
+from repro.core.packing import GraphPacker, PackItem
+from repro.data.graphs import RawGraph, molhiv_like
+
+MODELS = sorted(PAPER_GNN_CONFIGS)
+
+
+def small_cfg(name):
+    cfg = PAPER_GNN_CONFIGS[name]
+    return cfg.replace(num_layers=2, hidden_dim=16,
+                       head_mlp=(8,) if cfg.head_mlp else ())
+
+
+def _item(n=8, e=16, seed=0, node_dim=4):
+    r = np.random.default_rng(seed)
+    return PackItem(
+        node_feat=r.normal(size=(n, node_dim)).astype(np.float32),
+        senders=r.integers(0, n, size=e).astype(np.int32),
+        receivers=r.integers(0, n, size=e).astype(np.int32))
+
+
+def _degree0_graph(seed=5) -> RawGraph:
+    """4 nodes, last one fully isolated (no in- or out-edges)."""
+    r = np.random.default_rng(seed)
+    return RawGraph(
+        node_feat=r.normal(size=(4, 9)).astype(np.float32),
+        senders=np.array([0, 1, 2], np.int32),
+        receivers=np.array([1, 2, 0], np.int32),
+        edge_feat=r.normal(size=(3, 3)).astype(np.float32),
+        node_pos=r.normal(size=(4, 1)).astype(np.float32),
+        label=0.0)
+
+
+# ---------------------------------------------------------------------------
+# packer policy
+# ---------------------------------------------------------------------------
+
+def test_first_fit_flushes_on_max_batch():
+    p = GraphPacker(max_batch=3, max_wait_s=10.0)
+    assert p.add(_item(seed=1)) == []
+    assert p.add(_item(seed=2)) == []
+    flushed = p.add(_item(seed=3))
+    assert len(flushed) == 1
+    pb = flushed[0]
+    assert pb.num_graphs == 3 and pb.graph_pad == 3
+    assert pb.node_pad >= 24 and pb.edge_pad >= 48
+    assert p.open_batches == 0
+
+
+def test_deadline_poll_and_flush_all():
+    p = GraphPacker(max_batch=8, max_wait_s=10.0)
+    p.add(_item(seed=1), now=100.0)
+    p.add(_item(seed=2), now=105.0)       # fits the same open batch
+    assert p.poll(now=105.0) == []        # deadline is 110 (first arrival)
+    expired = p.poll(now=110.5)
+    assert len(expired) == 1 and expired[0].num_graphs == 2
+    p.add(_item(seed=3), now=120.0)
+    rest = p.flush_all()
+    assert len(rest) == 1 and p.pending_graphs == 0
+
+
+def test_budgets_open_second_batch_and_oversize_gets_own():
+    p = GraphPacker(max_batch=8, max_wait_s=10.0, max_nodes=20, max_edges=100)
+    p.add(_item(n=12, seed=1))
+    p.add(_item(n=12, seed=2))            # 24 > 20 nodes: second open batch
+    assert p.open_batches == 2
+    # a graph larger than the whole budget still gets (its own) batch
+    p.add(_item(n=50, e=10, seed=3))
+    assert p.open_batches == 3
+    shapes = {pb.num_graphs for pb in p.flush_all()}
+    assert shapes == {1}
+
+
+def test_packed_batch_build_offsets():
+    p = GraphPacker(max_batch=2, max_wait_s=10.0)
+    a, b = _item(n=5, e=7, seed=1), _item(n=9, e=4, seed=2)
+    (pb,) = p.add(a) + p.add(b)
+    assert pb.node_span_of(0) == (0, 5) and pb.node_span_of(1) == (5, 14)
+    g = pb.build()
+    assert g.n_graph_pad == 2
+    gids = np.asarray(g.graph_ids)[np.asarray(g.node_mask)]
+    assert (gids[:5] == 0).all() and (gids[5:] == 1).all()
+    # edge indices shifted into each graph's node range
+    snd = np.asarray(g.senders)[np.asarray(g.edge_mask)]
+    assert (snd[:7] < 5).all() and (snd[7:] >= 5).all()
+
+
+def test_concat_raw_graphs_zero_fills_mixed_optionals():
+    """A graph without edge_feat/node_pos must not poison a pack that has
+    them: the gap is zero-filled (build_graph_batch's lone-graph semantics),
+    while width mismatches still fail."""
+    a = _item(seed=1)
+    b = _item(seed=2)
+    b.edge_feat = np.ones((b.num_edges, 3), np.float32)
+    raw = concat_raw_graphs([a, b])
+    assert raw["edge_feat"].shape == (a.num_edges + b.num_edges, 3)
+    assert (raw["edge_feat"][:a.num_edges] == 0).all()
+    assert (raw["edge_feat"][a.num_edges:] == 1).all()
+    assert raw["node_pos"] is None
+    a.edge_feat = np.ones((a.num_edges, 5), np.float32)   # width mismatch
+    with pytest.raises(ValueError):
+        concat_raw_graphs([a, b])
+
+
+# ---------------------------------------------------------------------------
+# numerical invariance: alone == packed, per bucket
+# ---------------------------------------------------------------------------
+
+def _packed_and_alone(target: RawGraph, co, node_pad=128, edge_pad=256,
+                      graph_pad=4):
+    raw = concat_raw_graphs([target] + list(co))
+    packed = build_graph_batch(
+        raw["node_feat"], raw["senders"], raw["receivers"],
+        edge_feat=raw["edge_feat"], node_pad=node_pad, edge_pad=edge_pad,
+        graph_offsets=raw["graph_offsets"], graph_pad=graph_pad,
+        node_pos=raw["node_pos"])
+    alone = build_graph_batch(
+        target.node_feat, target.senders, target.receivers,
+        edge_feat=target.edge_feat, node_pad=node_pad, edge_pad=edge_pad,
+        graph_pad=graph_pad, node_pos=target.node_pos)
+    return packed, alone
+
+
+@pytest.mark.parametrize("name", MODELS)
+def test_packed_prediction_bitwise_equals_alone(name):
+    """Same bucket, same slot: packing co-graphs (including one with a
+    degree-0 node) must not change graph 0's prediction AT ALL."""
+    cfg = small_cfg(name)
+    model = make_gnn(cfg)
+    params = model.init(jax.random.PRNGKey(0), cfg)
+    graphs = list(molhiv_like(seed=0, n_graphs=3))
+    packed, alone = _packed_and_alone(graphs[0],
+                                      [graphs[1], _degree0_graph()])
+    fn = jax.jit(lambda p, g: model.apply(p, g, cfg))
+    out_packed = np.asarray(fn(params, packed))
+    out_alone = np.asarray(fn(params, alone))
+    np.testing.assert_array_equal(out_packed[0], out_alone[0])
+    assert np.isfinite(out_packed[0]).all()
+
+
+@pytest.mark.parametrize("name", MODELS)
+def test_packed_prediction_invariant_to_copack_edge_order(name):
+    """Permuting a CO-PACKED graph's edges leaves the target's prediction
+    bitwise unchanged (its own adds are untouched); permuting the target's
+    own edges changes only summation order (allclose)."""
+    cfg = small_cfg(name)
+    model = make_gnn(cfg)
+    params = model.init(jax.random.PRNGKey(1), cfg)
+    graphs = list(molhiv_like(seed=7, n_graphs=2))
+    tgt, co = graphs
+
+    r = np.random.default_rng(0)
+    perm_co = r.permutation(co.senders.shape[0])
+    co_perm = dataclasses.replace(
+        co, senders=co.senders[perm_co], receivers=co.receivers[perm_co],
+        edge_feat=co.edge_feat[perm_co])
+    packed, _ = _packed_and_alone(tgt, [co])
+    packed_p, alone = _packed_and_alone(tgt, [co_perm])
+    fn = jax.jit(lambda p, g: model.apply(p, g, cfg))
+    base = np.asarray(fn(params, packed))
+    np.testing.assert_array_equal(base[0],
+                                  np.asarray(fn(params, packed_p))[0])
+
+    perm_t = r.permutation(tgt.senders.shape[0])
+    tgt_perm = dataclasses.replace(
+        tgt, senders=tgt.senders[perm_t], receivers=tgt.receivers[perm_t],
+        edge_feat=tgt.edge_feat[perm_t])
+    packed_tp, _ = _packed_and_alone(tgt_perm, [co])
+    np.testing.assert_allclose(base[0],
+                               np.asarray(fn(params, packed_tp))[0],
+                               atol=1e-4, rtol=1e-4)
+    np.testing.assert_allclose(base[0], np.asarray(fn(params, alone))[0],
+                               atol=1e-4, rtol=1e-4)
+
+
+def test_degree0_graph_alone_is_finite_everywhere():
+    """Degree-0 nodes exercise every neutral-element path (mean/std/max/min,
+    softmax denominators, DGN normalizers)."""
+    g = _degree0_graph()
+    for name in MODELS:
+        cfg = small_cfg(name)
+        model = make_gnn(cfg)
+        params = model.init(jax.random.PRNGKey(2), cfg)
+        gb = build_graph_batch(g.node_feat, g.senders, g.receivers,
+                               edge_feat=g.edge_feat, node_pad=32,
+                               edge_pad=32, node_pos=g.node_pos)
+        out = np.asarray(model.apply(params, gb, cfg))
+        assert np.isfinite(out).all(), name

@@ -43,6 +43,7 @@ TABLES = {
     "table8": lambda csv: paper_tables.table8_gcn_small(csv),
     "kernels": lambda csv: (kernel_bench.mp_paths(csv),
                             kernel_bench.multi_agg_paths(csv),
+                            kernel_bench.pipeline_paths(csv),
                             kernel_bench.softmax_paths(csv),
                             kernel_bench.attention_paths(csv)),
     "stream": _run_stream,

@@ -18,9 +18,10 @@ engine is the software analogue of that serving frontend:
     and resolves futures; per-graph latency / queue-wait and per-batch
     device time are recorded (warm-up excluded);
   * each (node_pad, edge_pad, graph_pad) bucket gets a jit program compiled
-    once and — with ``autotune=True`` — its own ``(num_banks, edge_tile)``
-    dataflow picked by timing a few candidates on the first batch; winners
-    persist to a JSON cache so restarts skip the search.
+    once and — with ``autotune=True`` — its own ``(num_banks, edge_tile,
+    impl)`` dataflow picked by timing a few candidates on the first batch
+    (including the fused gather-phi-scatter ``impl='pipeline'`` edge
+    phase); winners persist to a JSON cache so restarts skip the search.
 
 ``process`` keeps the original synchronous batch-1 API (submit + wait), and
 ``drain``/``close`` give callers backpressure and shutdown. ``warmup_all``
@@ -486,8 +487,15 @@ class GraphStreamEngine:
             tile = max(8, min(tile, edge_pad))
             if (banks, tile) not in seen:
                 seen.append((banks, tile))
-        return [self.dataflow.replace(num_banks=b, edge_tile=t)
-                for b, t in seen[:3]]
+        cands = [self.dataflow.replace(num_banks=b, edge_tile=t)
+                 for b, t in seen[:3]]
+        if self.dataflow.impl != "pipeline":
+            # the fused gather-phi-scatter edge pipeline (DESIGN.md §6):
+            # fusable models run their whole edge phase as one launch;
+            # non-fusable ones silently fall back to 'fused', so the
+            # candidate is always safe to time
+            cands.append(cands[0].replace(impl="pipeline"))
+        return cands
 
     def _run_autotune(self, key: BucketKey, g: GraphBatch) -> DataflowConfig:
         """Time 2-3 (num_banks, edge_tile) candidates on the first batch of
@@ -501,7 +509,10 @@ class GraphStreamEngine:
                 t = min(self._time_once(run, g) for _ in range(3))
             except Exception:
                 continue                   # candidate invalid for this shape
-            timings[f"banks{df.num_banks}_tile{df.edge_tile}"] = t * 1e6
+            name = f"banks{df.num_banks}_tile{df.edge_tile}"
+            if df.impl != self.dataflow.impl:
+                name += f"_{df.impl}"
+            timings[name] = t * 1e6
             if t < best_t:
                 best_df, best_t = df, t
         if best_df is None:                # every candidate failed: fall back
@@ -548,7 +559,8 @@ class GraphStreamEngine:
                     continue
                 self._tuned[key] = self.dataflow.replace(
                     num_banks=int(val["num_banks"]),
-                    edge_tile=int(val["edge_tile"]))
+                    edge_tile=int(val["edge_tile"]),
+                    impl=str(val.get("impl", self.dataflow.impl)))
             except (KeyError, ValueError):
                 continue
         self._tune_log.clear()      # cached winners are not re-timed
@@ -567,7 +579,8 @@ class GraphStreamEngine:
                 existing = {}
         existing[self._cache_fingerprint()] = {
             "x".join(map(str, key)): {"num_banks": df.num_banks,
-                                      "edge_tile": df.edge_tile}
+                                      "edge_tile": df.edge_tile,
+                                      "impl": df.impl}
             for key, df in self._tuned.items()
         }
         tmp = f"{path}.tmp.{os.getpid()}"

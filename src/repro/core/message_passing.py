@@ -11,6 +11,11 @@ The engine exposes:
                                    all requested kinds from one sweep over the
                                    edge stream (DESIGN.md §3),
   * ``segment_softmax``          — edge softmax for anisotropic models (GAT),
+  * ``FusableMessage`` / ``fused_edge_aggregate`` — the *pipeline* contract:
+                                   phi described as a per-edge linear combine
+                                   so the whole edge phase (gather + phi +
+                                   every statistic) runs as one launch with
+                                   no (E, D) message buffer (DESIGN.md §6),
   * ``PrecomputedGraphStats``    — per-graph structure statistics (degrees,
                                    normalizers, PNA scalers, DGN field
                                    weights) computed once per forward pass
@@ -45,6 +50,7 @@ Implementation notes (FPGA -> TPU adaptation):
 
 from __future__ import annotations
 
+import threading
 from contextlib import contextmanager
 from dataclasses import dataclass
 from typing import Callable, Dict, Optional, Sequence, Union
@@ -74,7 +80,9 @@ MOMENT_KINDS = ("sum", "mean", "var", "std")
 # ---------------------------------------------------------------------------
 # Edge-pass accounting (trace-time): the paper's "one pass over the stream"
 # property, made measurable. Each segment reduction / kernel launch / full
-# per-edge rewrite that sweeps the (E, ...) stream counts as one pass.
+# per-edge rewrite of the x-dependent message stream counts as one pass
+# (x-independent side streams — edge encodings, attention lanes, field
+# weights — are NT-side stream preparation and are not counted).
 # ---------------------------------------------------------------------------
 
 @dataclass
@@ -82,11 +90,20 @@ class EdgePassStats:
     passes: int = 0
 
 
-_EDGE_PASS_STATS = EdgePassStats()
+class _EdgePassScope(threading.local):
+    """Per-thread active counter (None when no block is open)."""
+
+    def __init__(self):
+        self.active: Optional[EdgePassStats] = None
+
+
+_EDGE_PASS_SCOPE = _EdgePassScope()
 
 
 def _count_pass(n: int = 1) -> None:
-    _EDGE_PASS_STATS.passes += n
+    st = _EDGE_PASS_SCOPE.active
+    if st is not None:
+        st.passes += n
 
 
 @contextmanager
@@ -95,10 +112,36 @@ def count_edge_passes():
 
     Counting happens at Python trace time, so trace the function of interest
     inside the block (e.g. ``jax.eval_shape(fn, *args)`` or an un-jitted
-    call); cached jit re-executions count nothing. Not reentrant.
+    call); cached jit re-executions count nothing.
+
+    Counters are *thread-local*: concurrent traces (e.g. the
+    ``GraphStreamEngine`` dispatcher thread compiling a bucket while user
+    code counts its own trace) never corrupt each other. Nesting in one
+    thread is rejected — a nested block would silently steal the outer
+    block's sweeps, so it raises instead.
     """
-    _EDGE_PASS_STATS.passes = 0
-    yield _EDGE_PASS_STATS
+    if _EDGE_PASS_SCOPE.active is not None:
+        raise RuntimeError(
+            "count_edge_passes() does not nest: a counting block is "
+            "already open in this thread")
+    st = EdgePassStats()
+    _EDGE_PASS_SCOPE.active = st
+    try:
+        yield st
+    finally:
+        _EDGE_PASS_SCOPE.active = None
+
+
+@contextmanager
+def _uncounted():
+    """Suspend pass counting (one fused launch = one pass, whatever the
+    mirror implementation issues internally)."""
+    st = _EDGE_PASS_SCOPE.active
+    _EDGE_PASS_SCOPE.active = None
+    try:
+        yield
+    finally:
+        _EDGE_PASS_SCOPE.active = st
 
 
 @jax.tree_util.register_dataclass
@@ -123,6 +166,9 @@ class PrecomputedGraphStats:
       dgn_weights   (E,)   normalized directional field weight per edge
       dgn_wsum      (N,)   per-destination sum of dgn_weights (layer-invariant
                            part of the |B_dx X| derivative)
+      graph_node_counts (G_pad,)  valid nodes per packed graph — shared by
+                           every mean readout (``global_pool``) instead of
+                           re-issuing a node-mask segment-sum per pool
     """
 
     degrees: Optional[Array] = None
@@ -130,6 +176,7 @@ class PrecomputedGraphStats:
     pna_scalers: Optional[Array] = None
     dgn_weights: Optional[Array] = None
     dgn_wsum: Optional[Array] = None
+    graph_node_counts: Optional[Array] = None
 
 
 def precompute_graph_stats(
@@ -139,6 +186,7 @@ def precompute_graph_stats(
     with_self_loop_norm: bool = False,
     pna_delta: Optional[float] = None,
     with_dgn_field: bool = False,
+    with_graph_counts: bool = False,
 ) -> PrecomputedGraphStats:
     """Compute the per-graph statistics bundle (one sweep per family).
 
@@ -177,9 +225,16 @@ def precompute_graph_stats(
         dgn_wsum = jax.ops.segment_sum(
             jnp.where(graph.edge_mask, dgn_weights, 0.0), graph.receivers,
             num_segments=graph.n_node_pad)
+    graph_node_counts = None
+    if with_graph_counts:
+        # node-stream sweep (not an edge pass): valid nodes per packed graph
+        graph_node_counts = jax.ops.segment_sum(
+            graph.node_mask.astype(jnp.float32), graph.graph_ids,
+            num_segments=graph.n_graph_pad)
     return PrecomputedGraphStats(
         degrees=degrees, inv_sqrt_deg=inv_sqrt_deg, pna_scalers=pna_scalers,
-        dgn_weights=dgn_weights, dgn_wsum=dgn_wsum)
+        dgn_weights=dgn_weights, dgn_wsum=dgn_wsum,
+        graph_node_counts=graph_node_counts)
 
 
 @dataclass(frozen=True)
@@ -195,6 +250,12 @@ class DataflowConfig:
     multi-kind aggregation streams the edges once and derives mean/var/std
     from shared moments; when False it falls back to the per-kind loop
     (kept for the Fig. 9 pass-count ablation).
+
+    ``impl='pipeline'`` is the fused gather-phi-scatter edge pipeline
+    (DESIGN.md §6): layers that describe phi through ``FusableMessage``
+    run their whole edge phase — gather, transform, every statistic — as
+    one launch with no (E, D) message buffer (1 edge pass). Layers with an
+    arbitrary ``message_fn`` fall back to the ``fused`` behaviour.
     """
 
     node_tile: int = 8
@@ -202,7 +263,7 @@ class DataflowConfig:
     apply_tile: int = 128
     scatter_tile: int = 128
     edge_tile: int = 128          # edges streamed per MP grid step (kernel)
-    impl: str = "fused"           # twopass | unfused | fused | banked | kernel
+    impl: str = "fused"   # twopass | unfused | fused | banked | kernel | pipeline
     single_pass: bool = True      # fuse multi-kind aggregation into one sweep
 
     def replace(self, **kw) -> "DataflowConfig":
@@ -211,6 +272,169 @@ class DataflowConfig:
 
 
 DEFAULT_DATAFLOW = DataflowConfig()
+
+
+@dataclass(frozen=True)
+class FusableMessage:
+    """A phi the pipeline kernel can apply in-register (DESIGN.md §6).
+
+    Describes the message transform as a per-edge linear combine of the
+    gathered source row and an edge-feature term, plus bias and activation:
+
+        phi_e = act( node_input[senders[e]] * src_weight[e]
+                     + edge_term[e] + bias )
+
+    All fields optional; ``None`` terms vanish. This covers the whole model
+    zoo: GCN (per-edge scalar norm), GIN (additive edge embedding + relu),
+    PNA (the pre-linear split into a node-side transform + edge-side term),
+    GAT's attention-weighted scatter, and DGN's stacked directional columns.
+    Arbitrary ``message_fn``s that don't fit stay on the unfused path —
+    ``propagate`` falls back automatically when ``fusable`` is ``None``.
+
+      node_input  (N, D)  pre-transformed node buffer (defaults to ``x``);
+                          node-side matmuls (PNA's W_src) belong here — NT
+                          work on N rows instead of E rows
+      src_weight  (E,) or (E, D)  multiplicative per-edge weight on the
+                          gathered row (GCN norm, GAT attention lanes)
+      edge_term   (E, D)  additive per-edge term (edge embeddings); an
+                          x-independent input stream, not a message buffer
+      bias        (D,)    additive bias
+      activation  str     'none' | 'relu'
+    """
+
+    node_input: Optional[Array] = None
+    src_weight: Optional[Array] = None
+    edge_term: Optional[Array] = None
+    bias: Optional[Array] = None
+    activation: str = "none"
+
+
+# Test hook: force the Pallas pipeline kernel (interpret mode off-TPU)
+# instead of the jnp mirror in fused_edge_aggregate.
+_FORCE_PIPELINE_KERNEL = False
+
+
+def _pipeline_uses_kernel() -> bool:
+    return _FORCE_PIPELINE_KERNEL or jax.default_backend() == "tpu"
+
+
+def fused_edge_aggregate(
+    graph: GraphBatch,
+    x: Array,
+    fusable: FusableMessage,
+    *,
+    kinds: Sequence[str],
+    dataflow: DataflowConfig = DEFAULT_DATAFLOW,
+    stats: Optional[PrecomputedGraphStats] = None,
+) -> Dict[str, Array]:
+    """The fused gather-phi-scatter edge phase: ONE pass, no (E, D) buffer.
+
+    On TPU this is one ``mp_pipeline`` kernel launch (gather matmul from
+    the resident node buffer, phi in-register, all statistics accumulated
+    — DESIGN.md §6). Elsewhere it runs the fused jnp mirror: the identical
+    op sequence under the caller's trace, which XLA fuses and which stays
+    bitwise-equal to the unfused path for the same phi formulation.
+
+    Returns ``{kind: (N, D) array}`` like ``segment_multi_aggregate``.
+    """
+    kinds = tuple(kinds)
+    if not kinds:
+        raise ValueError("kinds must be non-empty")
+    for k in kinds:
+        if k not in AGG_KINDS:
+            raise ValueError(f"unknown aggregation '{k}'")
+    y = x if fusable.node_input is None else fusable.node_input
+    degrees = stats.degrees if stats is not None else None
+    out_dtype = y.dtype
+
+    _count_pass()                 # the whole edge phase is one launch
+    with _uncounted():
+        if _pipeline_uses_kernel():
+            return _pipeline_kernel_stats(
+                graph, y, fusable, kinds, dataflow, degrees, out_dtype)
+        from repro.kernels.mp_pipeline import apply_fusable_phi
+        msg = apply_fusable_phi(
+            y, graph.senders, src_weight=fusable.src_weight,
+            edge_term=fusable.edge_term, bias=fusable.bias,
+            activation=fusable.activation).astype(out_dtype)
+        inner = dataflow.replace(impl="fused")
+        if len(kinds) == 1:
+            return {kinds[0]: segment_aggregate(
+                msg, graph.receivers, graph.n_node_pad, kind=kinds[0],
+                edge_mask=graph.edge_mask, dataflow=inner, degrees=degrees)}
+        return segment_multi_aggregate(
+            msg, graph.receivers, graph.n_node_pad, kinds=kinds,
+            edge_mask=graph.edge_mask, dataflow=inner, degrees=degrees)
+
+
+def _pipeline_kernel_stats(graph, y, fusable, kinds, dataflow, degrees,
+                           out_dtype) -> Dict[str, Array]:
+    """Run mp_pipeline and derive the requested kinds from raw accumulators."""
+    from repro.kernels import ops as kops
+    from repro.kernels.mp_pipeline import BIG
+
+    want_moments = any(k in ("mean", "var", "std") for k in kinds)
+    want = {
+        "sum": "sum" in kinds or want_moments,
+        "sumsq": any(k in ("var", "std") for k in kinds),
+        "max": "max" in kinds,
+        "min": "min" in kinds,
+        # count doubles as empty-destination validity for max/min when no
+        # precomputed degrees are shared
+        "count": degrees is None and (want_moments or "max" in kinds
+                                      or "min" in kinds),
+    }
+    raw = kops.mp_pipeline(
+        y, graph.senders, graph.receivers, graph.edge_mask,
+        graph.n_node_pad, stats=tuple(s for s, w in want.items() if w),
+        src_weight=fusable.src_weight, edge_term=fusable.edge_term,
+        bias=fusable.bias, activation=fusable.activation,
+        edge_tile=dataflow.edge_tile, num_banks=dataflow.num_banks)
+    deg = degrees if degrees is not None else raw.get("count")
+    if deg is not None and deg.ndim == 2:
+        deg = deg[:, 0]
+    mx, mn = raw.get("max"), raw.get("min")
+    # keyed accumulators are finite: empty destinations sit at the ∓BIG
+    # neutral and validity comes from the count/degrees stream
+    nonempty = None if deg is None else (deg > 0)[:, None]
+    return _derive_kinds(
+        kinds, s1=raw.get("sum"), s2=raw.get("sumsq"), deg=deg,
+        mx=mx, mn=mn,
+        mx_valid=None if mx is None else nonempty & (mx > -BIG),
+        mn_valid=None if mn is None else nonempty & (mn < BIG),
+        out_dtype=out_dtype)
+
+
+def _derive_kinds(kinds, *, s1, s2, deg, mx, mn, mx_valid, mn_valid,
+                  out_dtype) -> Dict[str, Array]:
+    """Derive the requested statistics from raw f32 accumulators.
+
+    Shared finalization tail of ``segment_multi_aggregate`` and the
+    pipeline kernel path, so the moment algebra (mean/var/std epsilon) and
+    the empty-destination neutralization can never diverge between them.
+    ``mx_valid``/``mn_valid`` mark destinations whose max/min is real (the
+    ±inf paths use isfinite, the keyed kernel uses count/degrees > 0).
+    """
+    out: Dict[str, Array] = {}
+    if any(k in ("mean", "var", "std") for k in kinds):
+        rdenom = (1.0 / jnp.maximum(deg, 1.0).astype(jnp.float32))[:, None]
+        mean = s1 * rdenom
+    if any(k in ("var", "std") for k in kinds):
+        var = jnp.maximum(s2 * rdenom - mean * mean, 0.0)
+    for k in kinds:
+        if k == "sum":
+            out[k] = s1.astype(out_dtype)
+        elif k == "mean":
+            out[k] = mean.astype(out_dtype)
+        elif k == "var":
+            out[k] = var.astype(out_dtype)
+        elif k == "std":
+            out[k] = jnp.sqrt(var + 1e-5).astype(out_dtype)
+        elif k == "max":
+            out[k] = jnp.where(mx_valid, mx, 0.0).astype(out_dtype)
+        elif k == "min":
+            out[k] = jnp.where(mn_valid, mn, 0.0).astype(out_dtype)
+    return out
 
 
 # ---------------------------------------------------------------------------
@@ -420,26 +644,11 @@ def segment_multi_aggregate(
                                          num_segments=num_nodes)
 
     deg = degrees if degrees is not None else cnt
-    out: Dict[str, Array] = {}
-    if want_moments:
-        rdenom = (1.0 / jnp.maximum(deg, 1.0).astype(jnp.float32))[:, None]
-        mean = s1 * rdenom
-    if want_sumsq:
-        var = jnp.maximum(s2 * rdenom - mean * mean, 0.0)
-    for k in kinds:
-        if k == "sum":
-            out[k] = s1.astype(out_dtype)
-        elif k == "mean":
-            out[k] = mean.astype(out_dtype)
-        elif k == "var":
-            out[k] = var.astype(out_dtype)
-        elif k == "std":
-            out[k] = jnp.sqrt(var + 1e-5).astype(out_dtype)
-        elif k == "max":
-            out[k] = jnp.where(jnp.isfinite(mx), mx, 0.0).astype(out_dtype)
-        elif k == "min":
-            out[k] = jnp.where(jnp.isfinite(mn), mn, 0.0).astype(out_dtype)
-    return out
+    return _derive_kinds(
+        kinds, s1=s1, s2=s2, deg=deg, mx=mx, mn=mn,
+        mx_valid=None if mx is None else jnp.isfinite(mx),
+        mn_valid=None if mn is None else jnp.isfinite(mn),
+        out_dtype=out_dtype)
 
 
 def banked_segment_sum(
@@ -540,6 +749,7 @@ def propagate(
     edge_feat: Optional[Array] = None,
     dataflow: DataflowConfig = DEFAULT_DATAFLOW,
     stats: Optional[PrecomputedGraphStats] = None,
+    fusable: Optional[FusableMessage] = None,
 ) -> Array:
     """One message-passing layer.
 
@@ -556,21 +766,37 @@ def propagate(
     sweep for the moment statistics, shared degrees, max/min alongside —
     instead of one full sweep (plus degree/moment side-sweeps) per kind.
 
+    ``fusable`` (see :class:`FusableMessage`) is the pipeline contract:
+    with ``impl='pipeline'`` the whole edge phase — gather, phi, every
+    statistic — runs as one launch and the (E, D) message matrix never
+    materializes (1 edge pass). Without a fusable description the layer
+    falls back to the unfused path below, whose gather + phi per-edge
+    rewrite costs its own pass over the stream.
+
     ``impl='twopass'`` mimics the paper's *non-pipelined* baseline (Fig. 4a):
     the full message matrix is forced to materialize (optimization barrier)
     before aggregation. The default fused path lets XLA fuse phi into the
     scatter epilogue — the compiler-level analogue of NT/MP overlap.
     """
+    kinds = (aggregate,) if isinstance(aggregate, str) else tuple(aggregate)
+    if dataflow.impl == "pipeline" and fusable is not None:
+        agg_stats = fused_edge_aggregate(
+            graph, x, fusable, kinds=kinds, dataflow=dataflow, stats=stats)
+        m = (agg_stats[kinds[0]] if len(kinds) == 1 else
+             jnp.concatenate([agg_stats[k] for k in kinds], axis=-1))
+        out = update_fn(x, m)
+        return jnp.where(graph.node_mask[:, None], out, 0.0)
+
     ef = graph.edge_feat if edge_feat is None else edge_feat
     src = jnp.take(x, graph.senders, axis=0)
     dst = jnp.take(x, graph.receivers, axis=0)
     msg = message_fn(src, dst, ef)
+    _count_pass()                 # the gather + phi (E, D) message rewrite
 
     if dataflow.impl == "twopass":
         msg = jax.lax.optimization_barrier(msg)
 
     degrees = stats.degrees if stats is not None else None
-    kinds = (aggregate,) if isinstance(aggregate, str) else tuple(aggregate)
     if len(kinds) == 1:
         m = segment_aggregate(
             msg, graph.receivers, graph.n_node_pad,
@@ -596,13 +822,22 @@ def propagate(
     return jnp.where(graph.node_mask[:, None], out, 0.0)
 
 
-def global_pool(graph: GraphBatch, x: Array, *, kind: str = "mean") -> Array:
-    """Graph-level readout: pool node embeddings per packed graph (G_pad, D)."""
+def global_pool(graph: GraphBatch, x: Array, *, kind: str = "mean",
+                stats: Optional[PrecomputedGraphStats] = None) -> Array:
+    """Graph-level readout: pool node embeddings per packed graph (G_pad, D).
+
+    ``stats.graph_node_counts`` (when shared) supplies the per-graph node
+    counts for the mean, so repeated pools in one forward pass stop
+    re-issuing the node-mask segment-sum.
+    """
     xm = jnp.where(graph.node_mask[:, None], x, 0.0)
     s = jax.ops.segment_sum(xm, graph.graph_ids, num_segments=graph.n_graph_pad)
     if kind == "sum":
         return s
-    cnt = jax.ops.segment_sum(
-        graph.node_mask.astype(x.dtype), graph.graph_ids,
-        num_segments=graph.n_graph_pad)
+    if stats is not None and stats.graph_node_counts is not None:
+        cnt = stats.graph_node_counts.astype(x.dtype)
+    else:
+        cnt = jax.ops.segment_sum(
+            graph.node_mask.astype(x.dtype), graph.graph_ids,
+            num_segments=graph.n_graph_pad)
     return s / jnp.maximum(cnt, 1.0)[:, None]

@@ -21,7 +21,10 @@ from repro.core.graph import GraphBatch
 from repro.core.message_passing import (
     DEFAULT_DATAFLOW,
     DataflowConfig,
+    FusableMessage,
     PrecomputedGraphStats,
+    _count_pass,
+    fused_edge_aggregate,
     global_pool,
     precompute_graph_stats,
     propagate,
@@ -99,10 +102,11 @@ def _head_init(key, cfg: GNNConfig, d_in: int) -> list:
     return _mlp_init(key, dims, cfg.dtype)
 
 
-def _readout(head, cfg: GNNConfig, graph: GraphBatch, x: Array) -> Array:
+def _readout(head, cfg: GNNConfig, graph: GraphBatch, x: Array,
+             stats: Optional[PrecomputedGraphStats] = None) -> Array:
     if cfg.task == "node":
         return _mlp(head, x)
-    pooled = global_pool(graph, x, kind="mean")
+    pooled = global_pool(graph, x, kind="mean", stats=stats)
     out = _mlp(head, pooled)
     return jnp.where(graph.graph_mask[:, None], out, 0.0)
 
@@ -126,8 +130,16 @@ def gcn_apply(params, graph: GraphBatch, cfg: GNNConfig,
               stats: Optional[PrecomputedGraphStats] = None) -> Array:
     x = graph.node_feat.astype(cfg.dtype)
     if stats is None or stats.inv_sqrt_deg is None:
-        stats = precompute_graph_stats(graph, with_self_loop_norm=True)
+        stats = precompute_graph_stats(graph, with_self_loop_norm=True,
+                                       with_graph_counts=cfg.task == "graph")
     inv_sqrt = stats.inv_sqrt_deg           # 1/sqrt(deg+1), once per graph
+
+    # fusable phi: the symmetric norm is a per-edge scalar stream, shared
+    # by every layer (layer-invariant — computed once per forward pass)
+    fusable = None
+    if dataflow.impl == "pipeline":
+        fusable = FusableMessage(
+            src_weight=inv_sqrt[graph.senders] * inv_sqrt[graph.receivers])
 
     for l, p in enumerate(params["layers"]):
         def message(src, dst, e, _inv=inv_sqrt, _g=graph):
@@ -140,8 +152,9 @@ def gcn_apply(params, graph: GraphBatch, cfg: GNNConfig,
             return h if last else jax.nn.relu(h)
 
         x = propagate(graph, x, message_fn=message, update_fn=update,
-                      aggregate="sum", dataflow=dataflow, stats=stats)
-    return _readout(params["head"], cfg, graph, x)
+                      aggregate="sum", dataflow=dataflow, stats=stats,
+                      fusable=fusable)
+    return _readout(params["head"], cfg, graph, x, stats)
 
 
 # ---------------------------------------------------------------------------
@@ -180,17 +193,24 @@ def _gin_layer(p, graph, x, dataflow, stats=None):
     def update(xx, m, _p=p):
         return _mlp(_p["mlp"], (1.0 + _p["eps"]) * xx + m)
 
+    # fusable phi: the bond embedding is an additive edge-side input stream
+    fusable = (FusableMessage(edge_term=e, activation="relu")
+               if dataflow.impl == "pipeline" else None)
     return propagate(graph, x, message_fn=message, update_fn=update,
-                     aggregate="sum", dataflow=dataflow, stats=stats)
+                     aggregate="sum", dataflow=dataflow, stats=stats,
+                     fusable=fusable)
 
 
 def gin_apply(params, graph: GraphBatch, cfg: GNNConfig,
               dataflow: DataflowConfig = DEFAULT_DATAFLOW,
               stats: Optional[PrecomputedGraphStats] = None) -> Array:
     x = jax.nn.relu(_dense(params["node_enc"], graph.node_feat.astype(cfg.dtype)))
+    if stats is None and cfg.task == "graph":
+        stats = precompute_graph_stats(graph, with_degrees=False,
+                                       with_graph_counts=True)
     for p in params["layers"]:
         x = _gin_layer(p, graph, x, dataflow, stats)
-    return _readout(params["head"], cfg, graph, x)
+    return _readout(params["head"], cfg, graph, x, stats)
 
 
 def gin_vn_init(key, cfg: GNNConfig) -> Params:
@@ -216,6 +236,9 @@ def gin_vn_apply(params, graph: GraphBatch, cfg: GNNConfig,
     balances automatically (paper Fig. 6, strictly cheaper here).
     """
     x = jax.nn.relu(_dense(params["node_enc"], graph.node_feat.astype(cfg.dtype)))
+    if stats is None and cfg.task == "graph":
+        stats = precompute_graph_stats(graph, with_degrees=False,
+                                       with_graph_counts=True)
     vn = jnp.zeros((graph.n_graph_pad, cfg.hidden_dim), cfg.dtype)
     n_layers = len(params["layers"])
     for l, p in enumerate(params["layers"]):
@@ -226,7 +249,7 @@ def gin_vn_apply(params, graph: GraphBatch, cfg: GNNConfig,
             pooled = global_pool(graph, x, kind="sum")
             vn = _mlp(params["vn_mlps"][l], vn + pooled)
             vn = jnp.where(graph.graph_mask[:, None], vn, 0.0)
-    return _readout(params["head"], cfg, graph, x)
+    return _readout(params["head"], cfg, graph, x, stats)
 
 
 # ---------------------------------------------------------------------------
@@ -258,6 +281,9 @@ def gat_apply(params, graph: GraphBatch, cfg: GNNConfig,
     x = graph.node_feat.astype(cfg.dtype)
     H, Dh = cfg.heads, cfg.head_dim
     N = graph.n_node_pad
+    if stats is None and cfg.task == "graph":
+        stats = precompute_graph_stats(graph, with_degrees=False,
+                                       with_graph_counts=True)
     for l, p in enumerate(params["layers"]):
         h = _dense(p["w"], x).reshape(N, H, Dh)
         # per-node attention halves (computed once per node — NT side)
@@ -269,13 +295,23 @@ def gat_apply(params, graph: GraphBatch, cfg: GNNConfig,
         att = segment_softmax(logits, graph.receivers, N,
                               edge_mask=graph.edge_mask,
                               dataflow=dataflow)                  # (E, H)
-        msg = h[graph.senders] * att[..., None]                   # (E, H, Dh)
-        agg = segment_aggregate(
-            msg.reshape(-1, H * Dh), graph.receivers, N,
-            kind="sum", edge_mask=graph.edge_mask, dataflow=dataflow)
+        if dataflow.impl == "pipeline":
+            # the softmax pre-pass stays, but the h[senders] * att scatter
+            # fuses: attention expands to per-lane weights on the gathered
+            # row (an x-derived side stream, not a message buffer)
+            agg = fused_edge_aggregate(
+                graph, h.reshape(N, H * Dh),
+                FusableMessage(src_weight=jnp.repeat(att, Dh, axis=-1)),
+                kinds=("sum",), dataflow=dataflow, stats=stats)["sum"]
+        else:
+            msg = h[graph.senders] * att[..., None]               # (E, H, Dh)
+            _count_pass()         # the gather + weight message rewrite
+            agg = segment_aggregate(
+                msg.reshape(-1, H * Dh), graph.receivers, N,
+                kind="sum", edge_mask=graph.edge_mask, dataflow=dataflow)
         x = agg if l == cfg.num_layers - 1 else jax.nn.elu(agg)
         x = jnp.where(graph.node_mask[:, None], x, 0.0)
-    return _readout(params["head"], cfg, graph, x)
+    return _readout(params["head"], cfg, graph, x, stats)
 
 
 # ---------------------------------------------------------------------------
@@ -305,10 +341,12 @@ def pna_apply(params, graph: GraphBatch, cfg: GNNConfig,
               stats: Optional[PrecomputedGraphStats] = None) -> Array:
     x = jax.nn.relu(_dense(params["node_enc"], graph.node_feat.astype(cfg.dtype)))
     N = graph.n_node_pad
+    d = cfg.hidden_dim
     if stats is None or stats.pna_scalers is None:
         # one degree sweep for the whole network: the shared degrees feed the
         # scalers AND every layer's mean/std (no per-layer count columns)
-        stats = precompute_graph_stats(graph, pna_delta=cfg.avg_log_degree)
+        stats = precompute_graph_stats(graph, pna_delta=cfg.avg_log_degree,
+                                       with_graph_counts=cfg.task == "graph")
     scalers = stats.pna_scalers                               # (N, 3)
 
     for p in params["layers"]:
@@ -323,10 +361,20 @@ def pna_apply(params, graph: GraphBatch, cfg: GNNConfig,
             h = _dense(_p["post"], jnp.concatenate([xx, scaled], -1))
             return jax.nn.relu(h)
 
+        # fusable phi: the pre-linear splits into a node-side transform
+        # (N rows, not E) plus an edge-side term — phi = relu(x@Ws[snd]
+        # + e@We + b), exactly the per-edge linear-combine contract
+        fusable = None
+        if dataflow.impl == "pipeline":
+            w_pre, b_pre = p["pre"]["w"], p["pre"]["b"]
+            fusable = FusableMessage(
+                node_input=x @ w_pre[:d], edge_term=e @ w_pre[d:],
+                bias=b_pre, activation="relu")
+
         x = propagate(graph, x, message_fn=message, update_fn=update,
                       aggregate=("mean", "std", "max", "min"),
-                      dataflow=dataflow, stats=stats)
-    return _readout(params["head"], cfg, graph, x)
+                      dataflow=dataflow, stats=stats, fusable=fusable)
+    return _readout(params["head"], cfg, graph, x, stats)
 
 
 # ---------------------------------------------------------------------------
@@ -361,26 +409,46 @@ def dgn_apply(params, graph: GraphBatch, cfg: GNNConfig,
     N = graph.n_node_pad
     d = cfg.hidden_dim
     if stats is None or stats.dgn_weights is None:
-        stats = precompute_graph_stats(graph, with_dgn_field=True)
+        stats = precompute_graph_stats(graph, with_dgn_field=True,
+                                       with_graph_counts=cfg.task == "graph")
     w = stats.dgn_weights                                      # (E,)
     w_sum = stats.dgn_wsum                                     # (N,)
 
+    # fusable phi for the pipeline: [x_src | x_src*w] is the gathered row of
+    # the duplicated node buffer scaled by per-lane weights [1 | w] — the
+    # weight stream is layer-invariant (field only), built once per forward
+    lane_w = None
+    if dataflow.impl == "pipeline":
+        e_pad = graph.n_edge_pad
+        lane_w = jnp.concatenate(
+            [jnp.ones((e_pad, d), x.dtype),
+             jnp.broadcast_to(w[:, None], (e_pad, d))], axis=-1)
+
     for p in params["layers"]:
-        # single-pass multi-statistic MP unit: the mean aggregator and the
-        # directional sum come out of ONE sweep over [x_src | x_src*w]
-        # (degrees and the field normalizer come precomputed via ``stats``).
-        x_src = x[graph.senders]
-        stacked = jnp.concatenate([x_src, x_src * w[:, None]], axis=-1)
-        agg = segment_multi_aggregate(
-            stacked, graph.receivers, N, kinds=("sum", "mean"),
-            edge_mask=graph.edge_mask, dataflow=dataflow,
-            degrees=stats.degrees)
+        if dataflow.impl == "pipeline":
+            agg = fused_edge_aggregate(
+                graph, x, FusableMessage(
+                    node_input=jnp.concatenate([x, x], axis=-1),
+                    src_weight=lane_w),
+                kinds=("sum", "mean"), dataflow=dataflow, stats=stats)
+        else:
+            # single-pass multi-statistic MP unit: the mean aggregator and
+            # the directional sum come out of ONE sweep over
+            # [x_src | x_src*w] (degrees and the field normalizer come
+            # precomputed via ``stats``).
+            x_src = x[graph.senders]
+            stacked = jnp.concatenate([x_src, x_src * w[:, None]], axis=-1)
+            _count_pass()         # the gather + stacking message rewrite
+            agg = segment_multi_aggregate(
+                stacked, graph.receivers, N, kinds=("sum", "mean"),
+                edge_mask=graph.edge_mask, dataflow=dataflow,
+                degrees=stats.degrees)
         m_mean = agg["mean"][:, :d]
         m_dir = agg["sum"][:, d:2 * d]
         m_dx = jnp.abs(m_dir - x * w_sum[:, None])            # |B_dx X|
         h = _dense(p["post"], jnp.concatenate([x, m_mean, m_dx], -1))
         x = jnp.where(graph.node_mask[:, None], jax.nn.relu(h), 0.0)
-    return _readout(params["head"], cfg, graph, x)
+    return _readout(params["head"], cfg, graph, x, stats)
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,285 @@
+"""Pallas TPU kernel: the fused gather-phi-scatter edge pipeline.
+
+This is the whole edge phase of a FlowGNN layer in ONE kernel launch
+(DESIGN.md §6). The paper's NT and MP units are decoupled by FIFOs and
+overlap fully, so an edge is gathered, transformed by phi, and scattered
+without the message matrix ever reaching off-chip memory (Fig. 4b/5). The
+unfused TPU path loses that: ``x[senders]`` materializes an (E, D) gather,
+``message_fn`` writes an (E, D) message buffer, and the scatter kernel
+reads it back — three HBM round-trips over the edge stream where the paper
+does zero. Here, per edge tile:
+
+  1. **gather** — source rows are pulled from the *resident* (N, D) node
+     buffer (held in VMEM across all grid steps) via a one-hot gather
+     matmul on the MXU: ``src = onehot_src @ y``;
+  2. **phi** — the fusable message transform (DESIGN.md §6: per-edge scale
+     of the gathered row, an additive per-edge term, a bias, and an
+     activation) is applied in-register;
+  3. **scatter** — the multi-statistic accumulators of the single-pass MP
+     unit are fed directly: sum / sum-of-squares through the dest-banked
+     routing matmul, count from the route column sums, and max / min via
+     the *keyed* routing formulation below.
+
+The (E, D) message matrix never exists; ``count_edge_passes()`` sees one
+pass for the whole layer step.
+
+Keyed max/min (closes the ROADMAP item): instead of the ±inf boolean
+mask-select of ``mp_scatter_multi``, the routing matrix doubles as a finite
+*additive key* — ``key = (route - 1) · BIG`` is 0 for owned edges and
+``-BIG`` otherwise, so ``max_e(msg[e, d] + key[e, n])`` selects the owned
+maximum with a broadcast add that shares the already-built route matrix,
+keeps all arithmetic finite (no -inf · 0 hazards), and lets empty
+destinations be recovered from the streamed count / precomputed degrees
+rather than an ``isfinite`` sweep. Exact while |msg| stays far below BIG
+(1e30; any value below ulp(BIG)/2 ≈ 7e22 is absorbed exactly).
+
+VMEM sizing rule (DESIGN.md §6): a grid step holds the resident node
+buffer (N_pad × D), the gather route (edge_tile × N_pad), and — when max or
+min is requested — the keyed select working set (edge_tile × bank_size × D),
+all f32. Size ``edge_tile`` / ``num_banks`` so
+``4B · edge_tile · (N_pad + bank_size · D)`` fits alongside the
+accumulators; the gather is re-issued per bank (dense compute traded for
+zero HBM traffic, the same trade as DESIGN.md §2).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.mp_scatter import (MULTI_STATS, _ceil_to, _route_matrix,
+                                      pad_edge_stream)
+
+Array = jax.Array
+
+# Finite keyed-select offset. Messages must stay well below ulp(BIG)/2
+# (≈ 7e22) in magnitude for the keyed max/min to be exact — comfortably
+# true for any finite activation a GNN layer produces.
+BIG = 1e30
+
+
+def _mp_pipeline_kernel(*refs, bank_size: int, edge_tile: int, n_pad: int,
+                        stats, sw_mode: str, has_et: bool, has_bias: bool,
+                        activation: str):
+    it = iter(refs)
+    snd_ref, recv_ref, mask_ref = next(it), next(it), next(it)
+    sw_ref = next(it) if sw_mode != "none" else None
+    et_ref = next(it) if has_et else None
+    b_ref = next(it) if has_bias else None
+    y_ref = next(it)
+    out = dict(zip(stats, it))
+
+    bank = pl.program_id(0)
+
+    @pl.when(pl.program_id(1) == 0)
+    def _init():
+        for name, ref in out.items():
+            if name == "max":
+                ref[...] = jnp.full_like(ref, -BIG)
+            elif name == "min":
+                ref[...] = jnp.full_like(ref, BIG)
+            else:
+                ref[...] = jnp.zeros_like(ref)
+
+    snd = snd_ref[...].reshape(edge_tile)
+    recv = recv_ref[...].reshape(edge_tile)
+    mask = mask_ref[...].reshape(edge_tile)
+    valid = mask != 0
+
+    # --- gather: one-hot matmul against the resident node buffer (MXU).
+    # Masked edges get an all-zero route row, so they gather zeros.
+    lanes = jax.lax.broadcasted_iota(jnp.int32, (edge_tile, n_pad), 1)
+    g_route = ((lanes == snd[:, None]) & valid[:, None]).astype(jnp.float32)
+    src = jax.lax.dot(g_route, y_ref[...].astype(jnp.float32),
+                      preferred_element_type=jnp.float32)   # (edge_tile, D)
+
+    # --- phi, in-register (masked rows may hold garbage from the additive
+    # terms; the scatter routes and keys below exclude them everywhere).
+    msg = src
+    if sw_mode != "none":
+        msg = msg * sw_ref[...].astype(jnp.float32)  # (tile,1) broadcasts
+    if has_et:
+        msg = msg + et_ref[...].astype(jnp.float32)
+    if has_bias:
+        msg = msg + b_ref[...]
+    if activation == "relu":
+        msg = jnp.maximum(msg, 0.0)
+
+    # --- scatter: dest-banked multi-statistic accumulation.
+    route_b = _route_matrix(recv, mask, bank, bank_size, edge_tile)
+    route = route_b.astype(jnp.float32)
+    dn = (((0,), (0,)), ((), ()))                    # route^T @ rhs
+    if "sum" in out:
+        out["sum"][...] += jax.lax.dot_general(
+            route, msg, dimension_numbers=dn,
+            preferred_element_type=jnp.float32)
+    if "sumsq" in out:
+        out["sumsq"][...] += jax.lax.dot_general(
+            route, msg * msg, dimension_numbers=dn,
+            preferred_element_type=jnp.float32)
+    if "count" in out:
+        out["count"][...] += jnp.sum(route, axis=0)[:, None]
+    if "max" in out or "min" in out:
+        # keyed select: 0 for owned lanes, -BIG otherwise — shares the
+        # route matrix, stays finite, and the broadcast *add* replaces the
+        # ±inf boolean mask-select of mp_scatter_multi.
+        key = (route - 1.0) * BIG                    # (edge_tile, bank)
+        if "max" in out:
+            out["max"][...] = jnp.maximum(
+                out["max"][...],
+                jnp.max(msg[:, None, :] + key[:, :, None], axis=0))
+        if "min" in out:
+            out["min"][...] = jnp.minimum(
+                out["min"][...],
+                jnp.min(msg[:, None, :] - key[:, :, None], axis=0))
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("num_nodes", "stats", "activation", "edge_tile",
+                     "num_banks", "interpret"),
+)
+def mp_pipeline(x: Array, senders: Array, receivers: Array, edge_mask: Array,
+                num_nodes: int, *, stats, src_weight: Array = None,
+                edge_term: Array = None, bias: Array = None,
+                activation: str = "none", edge_tile: int = 128,
+                num_banks: int = 4, interpret: bool = True):
+    """One-launch edge phase: gather + fusable phi + multi-stat scatter.
+
+    ``x`` is the (num_nodes, D) node buffer; phi for edge e is
+
+        act( x[senders[e]] * src_weight[e] + edge_term[e] + bias )
+
+    with ``src_weight`` either per-edge scalars (E,) or full-width (E, D),
+    and each of the three terms optional. ``stats`` is a subset of
+    MULTI_STATS; returns ``{name: f32 array}`` with sum/sumsq/max/min of
+    shape (num_nodes, D) and count (num_nodes, 1). max/min of empty
+    destinations come back ∓BIG (finite; recover validity from count or
+    degrees — see the module docstring). Uneven E / num_nodes are padded
+    internally, like ``mp_scatter_multi``.
+    """
+    stats = tuple(s for s in MULTI_STATS if s in stats)
+    if not stats:
+        raise ValueError("stats must name at least one accumulator")
+    if activation not in ("none", "relu"):
+        raise ValueError(f"unsupported activation '{activation}'")
+    n, d = x.shape
+    if n != num_nodes:
+        raise ValueError(f"node buffer has {n} rows, expected {num_nodes}")
+    e = senders.shape[0]
+    e_pad = _ceil_to(e, edge_tile)
+    n_pad = _ceil_to(num_nodes, num_banks)
+    bank_size = n_pad // num_banks
+
+    # pad the edge streams (masked slots) and the node buffer (zero rows)
+    _, snd2, _, _ = pad_edge_stream(senders, senders, edge_mask, edge_tile)
+    _, recv2, mask2, _ = pad_edge_stream(
+        receivers, receivers, edge_mask, edge_tile)
+    if n_pad != n:
+        x = jnp.pad(x, ((0, n_pad - n), (0, 0)))
+
+    sw_mode = "none"
+    inputs = [snd2, recv2, mask2]
+    in_specs = [pl.BlockSpec((edge_tile, 1), lambda b, t: (t, 0))] * 3
+    if src_weight is not None:
+        sw2 = pad_edge_stream(src_weight, receivers, edge_mask, edge_tile)[0]
+        sw_mode = "scalar" if src_weight.ndim == 1 else "full"
+        if sw_mode == "full" and src_weight.shape[1] != d:
+            raise ValueError("full-width src_weight must match D")
+        inputs.append(sw2)
+        in_specs.append(
+            pl.BlockSpec((edge_tile, sw2.shape[1]), lambda b, t: (t, 0)))
+    if edge_term is not None:
+        et2 = pad_edge_stream(edge_term, receivers, edge_mask, edge_tile)[0]
+        inputs.append(et2)
+        in_specs.append(pl.BlockSpec((edge_tile, d), lambda b, t: (t, 0)))
+    if bias is not None:
+        inputs.append(bias.astype(jnp.float32).reshape(1, d))
+        in_specs.append(pl.BlockSpec((1, d), lambda b, t: (0, 0)))
+    inputs.append(x)                                   # resident node buffer
+    in_specs.append(pl.BlockSpec((n_pad, d), lambda b, t: (0, 0)))
+
+    widths = {"sum": d, "sumsq": d, "count": 1, "max": d, "min": d}
+    out_shapes = [jax.ShapeDtypeStruct((n_pad, widths[s]), jnp.float32)
+                  for s in stats]
+    out_specs = [pl.BlockSpec((bank_size, widths[s]), lambda b, t: (b, 0))
+                 for s in stats]
+
+    kernel = functools.partial(
+        _mp_pipeline_kernel, bank_size=bank_size, edge_tile=edge_tile,
+        n_pad=n_pad, stats=stats, sw_mode=sw_mode,
+        has_et=edge_term is not None, has_bias=bias is not None,
+        activation=activation)
+
+    outs = pl.pallas_call(
+        kernel,
+        grid=(num_banks, e_pad // edge_tile),
+        in_specs=in_specs,
+        out_specs=out_specs,
+        out_shape=out_shapes,
+        interpret=interpret,
+    )(*inputs)
+    return {s: o[:num_nodes] for s, o in zip(stats, outs)}
+
+
+def mp_pipeline_ref(x: Array, senders: Array, receivers: Array,
+                    edge_mask: Array, num_nodes: int, stats, *,
+                    src_weight: Array = None, edge_term: Array = None,
+                    bias: Array = None, activation: str = "none"):
+    """Pure-jnp oracle for ``mp_pipeline`` (raw f32 accumulators).
+
+    Mirrors the kernel contract exactly, including the finite ∓BIG
+    neutral for empty-destination max/min.
+    """
+    msg = apply_fusable_phi(x, senders, src_weight=src_weight,
+                            edge_term=edge_term, bias=bias,
+                            activation=activation)
+    own = edge_mask[:, None]
+    out = {}
+    if "sum" in stats:
+        out["sum"] = jax.ops.segment_sum(
+            jnp.where(own, msg, 0.0), receivers, num_segments=num_nodes)
+    if "sumsq" in stats:
+        m0 = jnp.where(own, msg, 0.0)
+        out["sumsq"] = jax.ops.segment_sum(
+            m0 * m0, receivers, num_segments=num_nodes)
+    if "count" in stats:
+        out["count"] = jax.ops.segment_sum(
+            edge_mask.astype(jnp.float32)[:, None], receivers,
+            num_segments=num_nodes)
+    if "max" in stats:
+        mx = jax.ops.segment_max(
+            jnp.where(own, msg, -BIG), receivers, num_segments=num_nodes)
+        out["max"] = jnp.maximum(mx, -BIG)     # untouched rows: -inf -> -BIG
+    if "min" in stats:
+        mn = jax.ops.segment_min(
+            jnp.where(own, msg, BIG), receivers, num_segments=num_nodes)
+        out["min"] = jnp.minimum(mn, BIG)
+    return out
+
+
+def apply_fusable_phi(x: Array, senders: Array, *, src_weight: Array = None,
+                      edge_term: Array = None, bias: Array = None,
+                      activation: str = "none") -> Array:
+    """The fusable phi as plain jnp: act(x[snd] * sw + et + b), in f32.
+
+    Shared by ``mp_pipeline_ref`` and the CPU mirror of the pipeline path
+    in ``core.message_passing.fused_edge_aggregate`` so both sides apply
+    the terms in the identical order (bitwise-parity contract).
+    """
+    msg = jnp.take(x, senders, axis=0).astype(jnp.float32)
+    if src_weight is not None:
+        sw = src_weight.astype(jnp.float32)
+        msg = msg * (sw[:, None] if sw.ndim == 1 else sw)
+    if edge_term is not None:
+        msg = msg + edge_term.astype(jnp.float32)
+    if bias is not None:
+        msg = msg + bias.astype(jnp.float32)
+    if activation == "relu":
+        msg = jnp.maximum(msg, 0.0)
+    elif activation != "none":
+        raise ValueError(f"unsupported activation '{activation}'")
+    return msg

@@ -63,17 +63,26 @@ def pad_edge_stream(msg: Array, receivers: Array, edge_mask: Array,
                     edge_tile: int):
     """Pad the raw edge stream to a multiple of ``edge_tile``.
 
-    Extra slots get masked-out edges pointing at node 0. Returns
-    (msg, recv2, mask2, e_pad) with receivers/mask already int32-reshaped
-    to the (E_pad, 1) layout the kernels stream.
+    Extra slots get masked-out edges pointing at node 0. ``msg`` may be
+    (E, D) or a 1-D (E,) stream (per-edge scalars: softmax logits, edge
+    weights) — 1-D streams come back in the (E_pad, 1) layout the kernels
+    expect. Returns (msg, recv2, mask2, e_pad) with receivers/mask already
+    int32-reshaped to (E_pad, 1).
     """
+    if msg.ndim not in (1, 2):
+        raise ValueError(
+            f"pad_edge_stream expects (E,) or (E, D) streams, got "
+            f"shape {msg.shape}")
     e = msg.shape[0]
     e_pad = _ceil_to(e, edge_tile)
     if e_pad != e:
         pad = e_pad - e
-        msg = jnp.pad(msg, ((0, pad), (0, 0)))
+        msg = jnp.pad(msg, (0, pad) if msg.ndim == 1
+                      else ((0, pad), (0, 0)))
         receivers = jnp.pad(receivers, (0, pad))
         edge_mask = jnp.pad(edge_mask.astype(bool), (0, pad))
+    if msg.ndim == 1:
+        msg = msg.reshape(e_pad, 1)
     recv2 = receivers.astype(jnp.int32).reshape(e_pad, 1)
     mask2 = edge_mask.astype(jnp.int32).reshape(e_pad, 1)
     return msg, recv2, mask2, e_pad

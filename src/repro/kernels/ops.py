@@ -3,7 +3,7 @@
 On TPU the kernels run compiled; everywhere else they run in interpret mode
 (the kernel body executed step-by-step on CPU), which is how this repo's
 tests validate them. The pure-JAX fallbacks in ref.py are what the dry-run
-lowers for GSPMD compilation (see DESIGN.md §7).
+lowers for GSPMD compilation (see DESIGN.md §8).
 """
 
 from __future__ import annotations
@@ -16,6 +16,8 @@ import jax
 from repro.kernels import ref as _ref
 from repro.kernels.flash_attention import flash_attention as _flash
 from repro.kernels.fused_nt_scatter import fused_nt_scatter as _fused
+from repro.kernels.mp_pipeline import mp_pipeline as _mp_pipeline
+from repro.kernels.mp_pipeline import mp_pipeline_ref as _mp_pipeline_ref
 from repro.kernels.mp_scatter import mp_scatter as _mp_scatter
 from repro.kernels.mp_scatter import mp_scatter_multi as _mp_scatter_multi
 from repro.kernels.nt_mlp import nt_mlp as _nt_mlp
@@ -51,6 +53,17 @@ def mp_scatter_multi(msg, receivers, edge_mask, num_nodes, *,
                              interpret=_interpret())
 
 
+def mp_pipeline(x, senders, receivers, edge_mask, num_nodes, *, stats,
+                src_weight=None, edge_term=None, bias=None,
+                activation="none", edge_tile=128, num_banks=4) -> dict:
+    """Fused gather-phi-scatter edge pipeline; returns raw f32 accumulators."""
+    return _mp_pipeline(x, senders, receivers, edge_mask, num_nodes,
+                        stats=stats, src_weight=src_weight,
+                        edge_term=edge_term, bias=bias,
+                        activation=activation, edge_tile=edge_tile,
+                        num_banks=num_banks, interpret=_interpret())
+
+
 def seg_softmax(logits, receivers, edge_mask, num_nodes, *, edge_tile=128,
                 num_banks=4) -> Array:
     return _seg_softmax(logits, receivers, edge_mask, num_nodes,
@@ -77,6 +90,7 @@ def flash_attention(q, k, v, *, causal=True, window: Optional[int] = None,
 
 
 # oracles re-exported for tests/benchmarks
+mp_pipeline_ref = _mp_pipeline_ref
 mp_scatter_ref = _ref.mp_scatter_ref
 mp_scatter_multi_ref = _ref.mp_scatter_multi_ref
 segment_softmax_ref = _ref.segment_softmax_ref

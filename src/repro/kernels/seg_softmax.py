@@ -100,11 +100,11 @@ def seg_softmax(logits: Array, receivers: Array, edge_mask: Array,
                 interpret: bool = True) -> Array:
     """Streaming per-destination softmax. logits: (E,) or (E, H)."""
     squeeze = logits.ndim == 1
-    if squeeze:
-        logits = logits[:, None]
-    e, h = logits.shape
+    e = logits.shape[0]
+    # 1-D logit streams are normalized to (E_pad, 1) by pad_edge_stream
     logits, recv2, mask2, e_pad = pad_edge_stream(
         logits, receivers, edge_mask, edge_tile)
+    h = logits.shape[1]
     n_pad = _ceil_to(num_nodes, num_banks)
     bank_size = n_pad // num_banks
     n_edge_blocks = e_pad // edge_tile

@@ -1,0 +1,351 @@
+"""The fused gather-phi-scatter edge pipeline (DESIGN.md §6).
+
+Covers: the Pallas kernel vs its raw jnp oracle (uneven tiles/banks, every
+phi form, keyed max/min), the pipeline path vs the unfused jnp path for all
+six models (alone and packed — bitwise where the fusable form is
+op-identical), the 1-edge-pass contract, thread-safe/reentrancy-guarded
+pass counting, 1-D edge-stream padding, and graph-count sharing in the
+mean readout.
+"""
+
+import threading
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import message_passing as mp
+from repro.core.graph import build_graph_batch, concat_raw_graphs
+from repro.core.message_passing import (DataflowConfig, FusableMessage,
+                                        count_edge_passes,
+                                        fused_edge_aggregate, global_pool,
+                                        precompute_graph_stats, propagate)
+from repro.core.models import PAPER_GNN_CONFIGS, make_gnn
+from repro.data.graphs import molhiv_like
+from repro.kernels import ops as kops
+from repro.kernels.mp_pipeline import BIG, apply_fusable_phi
+from repro.kernels.mp_scatter import pad_edge_stream
+
+MODELS = sorted(PAPER_GNN_CONFIGS)
+ALL_STATS = ("sum", "sumsq", "count", "max", "min")
+
+
+def small_cfg(name):
+    cfg = PAPER_GNN_CONFIGS[name]
+    return cfg.replace(num_layers=2, hidden_dim=16,
+                       head_mlp=(8,) if cfg.head_mlp else ())
+
+
+def _problem(e=200, d=8, n=30, seed=0, mask_p=0.8):
+    r = np.random.default_rng(seed)
+    x = jnp.asarray(r.normal(size=(n, d)).astype(np.float32))
+    snd = jnp.asarray(r.integers(0, n, size=e).astype(np.int32))
+    # leave some nodes isolated so empty-destination handling is exercised
+    rcv = jnp.asarray(r.integers(0, max(n - 4, 1), size=e).astype(np.int32))
+    mask = jnp.asarray(r.random(e) < mask_p)
+    return x, snd, rcv, mask
+
+
+def _graph(seed=0, node_pad=64, edge_pad=128, n_graphs=1, graph_pad=None):
+    graphs = list(molhiv_like(seed=seed, n_graphs=n_graphs))
+    raw = concat_raw_graphs(graphs)
+    return build_graph_batch(
+        raw["node_feat"], raw["senders"], raw["receivers"],
+        edge_feat=raw["edge_feat"], node_pos=raw["node_pos"],
+        graph_offsets=raw["graph_offsets"], node_pad=node_pad,
+        edge_pad=edge_pad, graph_pad=graph_pad or n_graphs)
+
+
+# ---------------------------------------------------------------------------
+# mp_pipeline kernel (interpret mode) vs raw oracle
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("e,d,n,edge_tile,banks", [
+    (128, 16, 32, 32, 2),
+    (200, 8, 30, 64, 4),         # uneven: E % tile != 0, N % banks != 0
+    (96, 24, 17, 32, 5),         # uneven bank sizes
+])
+def test_mp_pipeline_kernel_all_stats(e, d, n, edge_tile, banks):
+    r = np.random.default_rng(e + n)
+    x, snd, rcv, mask = _problem(e, d, n, seed=e + n)
+    et = jnp.asarray(r.normal(size=(e, d)).astype(np.float32))
+    sw = jnp.asarray(r.normal(size=(e,)).astype(np.float32))
+    out = kops.mp_pipeline(
+        x, snd, rcv, mask, n, stats=ALL_STATS, src_weight=sw, edge_term=et,
+        activation="relu", edge_tile=edge_tile, num_banks=banks)
+    ref = kops.mp_pipeline_ref(
+        x, snd, rcv, mask, n, ALL_STATS, src_weight=sw, edge_term=et,
+        activation="relu")
+    for name in ALL_STATS:
+        np.testing.assert_allclose(out[name], ref[name], atol=2e-5,
+                                   rtol=2e-5, err_msg=name)
+
+
+@pytest.mark.parametrize("phi", [
+    dict(),
+    dict(edge_term=True, activation="relu"),
+    dict(src_weight="scalar"),
+    dict(src_weight="full"),
+    dict(src_weight="scalar", edge_term=True, bias=True, activation="relu"),
+])
+def test_mp_pipeline_kernel_phi_forms(phi):
+    e, d, n = 128, 8, 24
+    r = np.random.default_rng(3)
+    x, snd, rcv, mask = _problem(e, d, n, seed=5)
+    kw = dict(activation=phi.get("activation", "none"))
+    if phi.get("src_weight") == "scalar":
+        kw["src_weight"] = jnp.asarray(r.normal(size=(e,)).astype(np.float32))
+    elif phi.get("src_weight") == "full":
+        kw["src_weight"] = jnp.asarray(
+            r.normal(size=(e, d)).astype(np.float32))
+    if phi.get("edge_term"):
+        kw["edge_term"] = jnp.asarray(
+            r.normal(size=(e, d)).astype(np.float32))
+    if phi.get("bias"):
+        kw["bias"] = jnp.asarray(r.normal(size=(d,)).astype(np.float32))
+    out = kops.mp_pipeline(x, snd, rcv, mask, n, stats=ALL_STATS,
+                           edge_tile=32, num_banks=4, **kw)
+    ref = kops.mp_pipeline_ref(x, snd, rcv, mask, n, ALL_STATS, **kw)
+    for name in ALL_STATS:
+        np.testing.assert_allclose(out[name], ref[name], atol=2e-5,
+                                   rtol=2e-5, err_msg=name)
+
+
+def test_mp_pipeline_keyed_max_min_empty_destinations():
+    """The keyed routing formulation: empty destinations come back at the
+    finite ∓BIG neutral (no ±inf in the working set), and the finalized
+    pipeline path recovers 0 from counts/degrees."""
+    e, d, n = 64, 4, 16
+    r = np.random.default_rng(0)
+    x = jnp.asarray(r.normal(size=(n, d)).astype(np.float32))
+    snd = jnp.asarray(r.integers(0, n, size=e).astype(np.int32))
+    rcv = jnp.asarray(r.integers(0, 8, size=e).astype(np.int32))  # bank 0 only
+    mask = jnp.ones(e, bool)
+    out = kops.mp_pipeline(x, snd, rcv, mask, n,
+                           stats=("sum", "count", "max", "min"),
+                           edge_tile=32, num_banks=2)
+    assert np.all(np.asarray(out["max"][8:]) == -BIG)
+    assert np.all(np.asarray(out["min"][8:]) == BIG)
+    assert np.all(np.asarray(out["sum"][8:]) == 0.0)
+    # finalized semantics match the jnp unit: empty max/min -> 0
+    g = build_graph_batch(np.asarray(x), np.asarray(snd), np.asarray(rcv),
+                          node_pad=n, edge_pad=e)
+    mp._FORCE_PIPELINE_KERNEL = True
+    try:
+        fin = fused_edge_aggregate(
+            g, x, FusableMessage(), kinds=("max", "min"),
+            dataflow=DataflowConfig(impl="pipeline", num_banks=2,
+                                    edge_tile=32))
+    finally:
+        mp._FORCE_PIPELINE_KERNEL = False
+    assert np.all(np.asarray(fin["max"][8:]) == 0.0)
+    assert np.all(np.asarray(fin["min"][8:]) == 0.0)
+
+
+def test_mp_pipeline_permutation_invariance():
+    x, snd, rcv, mask = _problem(e=128, d=8, n=32, seed=9)
+    out = kops.mp_pipeline(x, snd, rcv, mask, 32, stats=("sum", "max"),
+                           edge_tile=32, num_banks=4)
+    perm = np.random.default_rng(2).permutation(128)
+    out_p = kops.mp_pipeline(x, snd[perm], rcv[perm], mask[perm], 32,
+                             stats=("sum", "max"), edge_tile=32, num_banks=4)
+    np.testing.assert_allclose(out["sum"], out_p["sum"], atol=1e-5)
+    np.testing.assert_allclose(out["max"], out_p["max"], atol=1e-5)
+
+
+def test_mp_pipeline_rejects_bad_input():
+    x, snd, rcv, mask = _problem()
+    with pytest.raises(ValueError):
+        kops.mp_pipeline(x, snd, rcv, mask, 30, stats=())
+    with pytest.raises(ValueError):
+        kops.mp_pipeline(x, snd, rcv, mask, 30, stats=("sum",),
+                         activation="gelu")
+    with pytest.raises(ValueError):
+        kops.mp_pipeline(x[:10], snd, rcv, mask, 30, stats=("sum",))
+
+
+# ---------------------------------------------------------------------------
+# the pipeline path vs the unfused jnp path: all six models, alone + packed
+# ---------------------------------------------------------------------------
+
+# models whose fusable phi is op-identical to their message_fn (the mirror
+# must be BITWISE equal to the unfused path); pna splits its pre-linear
+# matmul, which reassociates float work, so it gets allclose instead.
+BITWISE_MODELS = ("gcn", "gin", "gin_vn", "gat", "dgn")
+
+
+@pytest.mark.parametrize("name", MODELS)
+@pytest.mark.parametrize("packed", [False, True])
+def test_pipeline_matches_unfused_path(name, packed):
+    cfg = small_cfg(name)
+    model = make_gnn(cfg)
+    params = model.init(jax.random.PRNGKey(0), cfg)
+    g = (_graph(seed=3, n_graphs=3, node_pad=128, edge_pad=256)
+         if packed else _graph(seed=3))
+    base = model.apply(params, g, cfg, DataflowConfig(impl="fused"))
+    pipe = model.apply(params, g, cfg, DataflowConfig(impl="pipeline"))
+    if name in BITWISE_MODELS:
+        np.testing.assert_array_equal(np.asarray(base), np.asarray(pipe))
+    else:
+        np.testing.assert_allclose(base, pipe, atol=1e-5, rtol=1e-5)
+
+
+@pytest.mark.parametrize("name", MODELS)
+@pytest.mark.parametrize("packed", [False, True])
+def test_pipeline_kernel_matches_unfused_path(name, packed):
+    """Interpret-mode Pallas pipeline == the unfused jnp path, per model."""
+    cfg = small_cfg(name)
+    model = make_gnn(cfg)
+    params = model.init(jax.random.PRNGKey(4), cfg)
+    g = (_graph(seed=1, n_graphs=3, node_pad=128, edge_pad=256)
+         if packed else _graph(seed=1))
+    base = model.apply(params, g, cfg, DataflowConfig(impl="fused"))
+    mp._FORCE_PIPELINE_KERNEL = True
+    try:
+        pipe = model.apply(params, g, cfg,
+                           DataflowConfig(impl="pipeline", num_banks=4,
+                                          edge_tile=32))
+    finally:
+        mp._FORCE_PIPELINE_KERNEL = False
+    np.testing.assert_allclose(base, pipe, atol=1e-4, rtol=1e-4)
+
+
+def test_pipeline_without_fusable_falls_back():
+    """Arbitrary message_fns run the unfused path under impl='pipeline'."""
+    g = _graph(seed=0)
+    x = g.node_feat
+
+    def message(src, dst, e):
+        return jnp.tanh(src * dst)          # not a linear combine
+
+    def update(xx, m):
+        return m
+
+    out = propagate(g, x, message_fn=message, update_fn=update,
+                    aggregate="sum", dataflow=DataflowConfig(impl="pipeline"))
+    ref = propagate(g, x, message_fn=message, update_fn=update,
+                    aggregate="sum", dataflow=DataflowConfig(impl="fused"))
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+
+
+# ---------------------------------------------------------------------------
+# edge-pass accounting: the 1-pass contract + thread safety
+# ---------------------------------------------------------------------------
+
+def test_fusable_layer_single_edge_pass():
+    """The acceptance contract: a fusable GIN/PNA layer under
+    impl='pipeline' is ONE pass over the edge stream (gather + phi + every
+    statistic), vs 2+ for the unfused path (message rewrite + sweeps)."""
+    g = _graph(seed=0)
+    stats = precompute_graph_stats(g, pna_delta=1.3)
+    x = jnp.asarray(np.random.default_rng(0).normal(
+        size=(g.n_node_pad, 8)).astype(np.float32))
+    et = jnp.asarray(np.random.default_rng(1).normal(
+        size=(g.n_edge_pad, 8)).astype(np.float32))
+
+    def message(src, dst, e, _et=et):
+        return jax.nn.relu(src + _et)
+
+    def update(xx, m):
+        return m
+
+    fus = FusableMessage(edge_term=et, activation="relu")
+    for kinds, fused_expected in [
+        ("sum", 2),                            # gin: rewrite + sum
+        (("mean", "std", "max", "min"), 4),    # pna: rewrite + moments
+    ]:                                         #      + max + min
+        with count_edge_passes() as ps:
+            propagate(g, x, message_fn=message, update_fn=update,
+                      aggregate=kinds, stats=stats,
+                      dataflow=DataflowConfig(impl="pipeline"), fusable=fus)
+        assert ps.passes == 1, kinds
+        with count_edge_passes() as ps:
+            propagate(g, x, message_fn=message, update_fn=update,
+                      aggregate=kinds, stats=stats,
+                      dataflow=DataflowConfig(impl="fused"), fusable=fus)
+        assert ps.passes == fused_expected, kinds
+
+
+@pytest.mark.parametrize("name", ["gin", "pna"])
+def test_model_level_pipeline_pass_count(name):
+    """Full fusable models under impl='pipeline': one pass per layer (plus
+    pna's single hoisted degree sweep)."""
+    cfg = small_cfg(name)
+    model = make_gnn(cfg)
+    params = model.init(jax.random.PRNGKey(0), cfg)
+    g = _graph(seed=0)
+    with count_edge_passes() as ps:
+        jax.eval_shape(lambda p, gg: model.apply(
+            p, gg, cfg, DataflowConfig(impl="pipeline")), params, g)
+    overhead = 0 if name == "gin" else 1      # pna's hoisted degree sweep
+    assert ps.passes == cfg.num_layers + overhead
+
+
+def test_count_edge_passes_thread_local():
+    """Satellite: concurrent traces (engine dispatcher vs user thread)
+    count independently — no shared-global corruption."""
+    g = _graph(seed=0)
+    x = g.node_feat
+    results = {}
+    barrier = threading.Barrier(2)
+
+    def trace(tag, sweeps):
+        barrier.wait()
+        with count_edge_passes() as ps:
+            for _ in range(sweeps):
+                mp.segment_aggregate(x[g.senders], g.receivers,
+                                     g.n_node_pad, kind="sum",
+                                     edge_mask=g.edge_mask)
+        results[tag] = ps.passes
+
+    threads = [threading.Thread(target=trace, args=("a", 2)),
+               threading.Thread(target=trace, args=("b", 5))]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert results == {"a": 2, "b": 5}
+
+
+def test_count_edge_passes_rejects_nesting():
+    with count_edge_passes():
+        with pytest.raises(RuntimeError):
+            with count_edge_passes():
+                pass
+    # the outer guard is released on exit: a fresh block works again
+    with count_edge_passes() as ps:
+        pass
+    assert ps.passes == 0
+
+
+# ---------------------------------------------------------------------------
+# satellites: 1-D edge streams, shared graph-node counts
+# ---------------------------------------------------------------------------
+
+def test_pad_edge_stream_accepts_1d():
+    r = np.random.default_rng(0)
+    v = jnp.asarray(r.normal(size=(50,)).astype(np.float32))
+    rcv = jnp.asarray(r.integers(0, 8, size=50).astype(np.int32))
+    mask = jnp.ones(50, bool)
+    out, recv2, mask2, e_pad = pad_edge_stream(v, rcv, mask, 32)
+    assert e_pad == 64 and out.shape == (64, 1)
+    assert recv2.shape == mask2.shape == (64, 1)
+    np.testing.assert_array_equal(np.asarray(out[:50, 0]), np.asarray(v))
+    assert np.all(np.asarray(mask2[50:]) == 0)
+    with pytest.raises(ValueError):
+        pad_edge_stream(v.reshape(5, 5, 2), rcv[:5], mask[:5], 32)
+
+
+def test_global_pool_shares_graph_node_counts():
+    g = _graph(seed=2, n_graphs=3, node_pad=128, edge_pad=256)
+    stats = precompute_graph_stats(g, with_degrees=False,
+                                   with_graph_counts=True)
+    assert stats.graph_node_counts is not None
+    assert stats.graph_node_counts.shape == (g.n_graph_pad,)
+    x = jnp.asarray(np.random.default_rng(0).normal(
+        size=(g.n_node_pad, 6)).astype(np.float32))
+    shared = global_pool(g, x, kind="mean", stats=stats)
+    recomputed = global_pool(g, x, kind="mean")
+    np.testing.assert_array_equal(np.asarray(shared),
+                                  np.asarray(recomputed))

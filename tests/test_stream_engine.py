@@ -119,6 +119,43 @@ def test_autotune_picks_and_persists(tmp_path):
             entry["num_banks"], entry["edge_tile"])
 
 
+def test_autotune_candidates_include_pipeline_and_cache_roundtrips_impl(
+        tmp_path):
+    """The candidate set offers the fused gather-phi-scatter pipeline, and
+    a cached impl='pipeline' winner survives the JSON round-trip."""
+    cache = tmp_path / "autotune.json"
+    g = next(molhiv_like(seed=0, n_graphs=1))
+    with _make_engine("gin", max_batch=1, autotune=True,
+                      autotune_cache=str(cache)) as eng:
+        key = (64, 128, 1)
+        cands = eng._candidate_dataflows(key)
+        assert any(df.impl == "pipeline" for df in cands)
+        assert cands[0].impl == eng.dataflow.impl
+        eng.process(g.node_feat, g.senders, g.receivers, g.edge_feat,
+                    g.node_pos)
+        (entry,) = eng.autotune_report().values()
+        # the pipeline candidate was timed alongside the (banks, tile) ones
+        assert any(name.endswith("_pipeline")
+                   for name in entry["candidates_us"])
+        base = eng.process(g.node_feat, g.senders, g.receivers, g.edge_feat,
+                           g.node_pos)
+
+    # force a pipeline winner into the cache section and reload it
+    saved = json.loads(cache.read_text())
+    (section,) = saved.values()
+    (bucket_entry,) = section.values()
+    bucket_entry["impl"] = "pipeline"
+    cache.write_text(json.dumps(saved))
+    with _make_engine("gin", max_batch=1, autotune=True,
+                      autotune_cache=str(cache)) as eng2:
+        out = eng2.process(g.node_feat, g.senders, g.receivers, g.edge_feat,
+                           g.node_pos)
+        (entry2,) = eng2.autotune_report().values()
+        assert entry2["source"] == "cache"
+        assert entry2["impl"] == "pipeline"
+    np.testing.assert_allclose(base, out, atol=1e-5, rtol=1e-5)
+
+
 def test_warmup_all_precompiles_configured_buckets():
     with _make_engine("gin", buckets=(32, 64), max_batch=2) as eng:
         keys = eng.warmup_all()

@@ -1,0 +1,101 @@
+"""Bench-regression gate: compare a fresh ``benchmarks/run.py kernels``
+output against the committed ``BENCH_kernels.json``.
+
+  PYTHONPATH=src python -m benchmarks.check_regression \
+      <baseline.json> <fresh.json> [--prefix kernel.mp.] \
+      [--threshold 1.25] [--calibrate kernel.mp.segment_sum]
+
+Fails (exit 1) when any gated row — rows whose name starts with
+``--prefix`` and not with an ``--exclude`` prefix — is slower than the
+committed baseline by more than ``--threshold`` (default 1.25, the
+">25% slowdown" contract), or has disappeared from the fresh run
+(coverage regression). New rows are fine. Excluded rows still fail when
+missing (coverage is gated; their wall time is not).
+
+``--calibrate NAME`` divides every ratio by that row's own fresh/baseline
+ratio first, so a uniformly slower machine (CI runners vs the machine
+that committed the baseline) doesn't trip the gate: the calibration row —
+a plain XLA scatter at the standard shape — measures the machine, and
+what's gated is each kernel's slowdown *relative to it*. The calibration
+row itself is exempt by construction.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def load_rows(path: str) -> dict:
+    with open(path) as f:
+        payload = json.load(f)
+    rows = payload.get("us_per_call")
+    if not isinstance(rows, dict):
+        raise SystemExit(f"{path}: no 'us_per_call' table")
+    return rows
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("baseline", help="committed BENCH_kernels.json")
+    ap.add_argument("fresh", help="freshly generated BENCH_kernels.json")
+    ap.add_argument("--prefix", default="kernel.mp.",
+                    help="gate rows whose name starts with this")
+    ap.add_argument("--threshold", type=float, default=1.25,
+                    help="fail when fresh/baseline exceeds this ratio")
+    ap.add_argument("--calibrate", default=None, metavar="NAME",
+                    help="normalize ratios by this row's own ratio "
+                         "(cross-machine comparisons)")
+    ap.add_argument("--exclude", action="append", default=[],
+                    metavar="PREFIX",
+                    help="skip the time gate for rows starting with this "
+                         "(repeatable; presence is still required)")
+    args = ap.parse_args(argv)
+
+    base = load_rows(args.baseline)
+    fresh = load_rows(args.fresh)
+
+    scale = 1.0
+    if args.calibrate:
+        b, f = base.get(args.calibrate), fresh.get(args.calibrate)
+        if not b or not f:
+            print(f"calibration row '{args.calibrate}' missing; "
+                  "gating on raw ratios")
+        else:
+            scale = f / b
+            print(f"calibration: {args.calibrate} {b:.1f} -> {f:.1f} us "
+                  f"(machine factor {scale:.2f}x)")
+
+    failures = []
+    for name in sorted(base):
+        if not name.startswith(args.prefix):
+            continue
+        t0 = base[name]
+        t1 = fresh.get(name)
+        if t1 is None:
+            failures.append(f"{name}: row missing from fresh run")
+            print(f"FAIL {name}: {t0:.1f} us -> MISSING")
+            continue
+        if any(name.startswith(ex) for ex in args.exclude):
+            print(f"skip {name}: {t0:.1f} -> {t1:.1f} us (excluded)")
+            continue
+        ratio = (t1 / t0) / scale
+        ok = ratio <= args.threshold
+        print(f"{'ok  ' if ok else 'FAIL'} {name}: "
+              f"{t0:.1f} -> {t1:.1f} us ({ratio:.2f}x)")
+        if not ok:
+            failures.append(f"{name}: {ratio:.2f}x > {args.threshold:.2f}x")
+
+    if failures:
+        print(f"\n{len(failures)} bench regression(s) over "
+              f"{args.threshold:.2f}x:")
+        for f in failures:
+            print(f"  {f}")
+        return 1
+    print("\nno bench regressions")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

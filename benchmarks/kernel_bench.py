@@ -6,6 +6,7 @@ structurally via the roofline, see EXPERIMENTS.md)."""
 from __future__ import annotations
 
 import functools
+import time
 
 import jax
 import jax.numpy as jnp
@@ -180,6 +181,168 @@ def pipeline_paths(csv: Csv):
             f"speedup_vs_staged={best['pna_staged'] / best['pna_fused']:.2f}x")
     csv.add("kernel.mp.pipeline.pna_staged", best["pna_staged"] * 1e6,
             f"{shape},kinds={'+'.join(pna_kinds)}")
+
+
+def fused_layer_paths(csv: Csv):
+    """The layer-fused one-launch step (DESIGN.md §7) vs the PR 3 staged
+    sequence it replaces, at the standard E=4096,D=64,N=1024 point.
+
+    ``fused_layer`` runs a full GIN layer — gather from the resident node
+    buffer, phi = relu(src + e), scatter-sum, then the NT update
+    ((1+eps)·x + m through the 2-layer MLP) — under ONE dispatch.
+    ``fused_layer.staged`` is the same math as PR 3 left it: the fused
+    edge phase (``pipeline.fused``) as one dispatch and the NT epilogue
+    (``nt_mlp``'s input-stationary MLP form) as a second, with the (N, D)
+    aggregate round-tripping between them. The one-launch step must beat
+    the staged sequence (acceptance row) — the dispatch boundary and the
+    HBM round-trip are the cost being deleted.
+    """
+    rng = np.random.default_rng(5)
+    e, d, n = 4096, 64, 1024
+    x = rng.normal(size=(n, d)).astype(np.float32)
+    snd = rng.integers(0, n, size=e).astype(np.int32)
+    rcv = rng.integers(0, n, size=e).astype(np.int32)
+    g = build_graph_batch(x, snd, rcv, node_pad=n, edge_pad=e)
+    stats = precompute_graph_stats(g)
+    eterm = jnp.asarray(rng.normal(size=(e, d)).astype(np.float32))
+    xj = jnp.asarray(x)
+    eps = jnp.float32(0.1)
+    w1 = jnp.asarray(rng.normal(size=(d, 2 * d)).astype(np.float32) * 0.1)
+    b1 = jnp.asarray(rng.normal(size=(2 * d,)).astype(np.float32))
+    w2 = jnp.asarray(rng.normal(size=(2 * d, d)).astype(np.float32) * 0.1)
+    b2 = jnp.asarray(rng.normal(size=(d,)).astype(np.float32))
+
+    def nt_update(xx, m):
+        z = (1.0 + eps) * xx + m
+        return jnp.maximum(z @ w1 + b1, 0.0) @ w2 + b2
+
+    df_fl = DataflowConfig(impl="fused_layer")
+
+    def one_launch(xx, et):
+        agg = fused_edge_aggregate(
+            g, xx, FusableMessage(edge_term=et, activation="relu"),
+            kinds=("sum",), dataflow=df_fl, stats=stats)["sum"]
+        return nt_update(xx, agg)
+
+    with count_edge_passes() as ps:
+        jax.eval_shape(one_launch, xj, eterm)
+    passes = ps.passes
+
+    edge_phase = jax.jit(lambda xx, et: fused_edge_aggregate(
+        g, xx, FusableMessage(edge_term=et, activation="relu"),
+        kinds=("sum",), dataflow=DataflowConfig(impl="pipeline"),
+        stats=stats)["sum"])
+    nt_stage = jax.jit(nt_update)
+
+    best = time_best({
+        "fused_layer": functools.partial(jax.jit(one_launch), xj, eterm),
+        "staged": lambda: nt_stage(xj, edge_phase(xj, eterm)),
+    }, rounds=7, iters=9)
+    shape = f"E={e},D={d},N={n},layer=gin(d->2d->d)"
+    csv.add("kernel.mp.fused_layer", best["fused_layer"] * 1e6,
+            f"{shape};edge_passes={passes};"
+            f"speedup_vs_staged={best['staged'] / best['fused_layer']:.2f}x;"
+            f"staged=pipeline.fused+nt_epilogue;"
+            f"jnp mirror path (Pallas layer_fused is TPU-only; its "
+            f"interpret-mode row is under vs_segment_ops)")
+    csv.add("kernel.mp.fused_layer.staged", best["staged"] * 1e6, shape)
+
+
+def vs_segment_ops_paths(csv: Csv):
+    """ROADMAP item: the Pallas MP-unit kernels against the plain
+    ``jax.ops.segment_*`` lowerings at the standard E=4096,D=64,N=1024
+    point.
+
+    Off-TPU the kernels execute in interpret mode (the kernel body stepped
+    through op-by-op on CPU), so their wall times here measure dispatch
+    structure, not TPU performance — the rows exist so the comparison is
+    tracked per PR and so a compiled-TPU run slots into the same table.
+    Few iterations: interpret mode is slow and stable (Python-overhead
+    dominated).
+    """
+    rng = np.random.default_rng(6)
+    e, d, n = 4096, 64, 1024
+    kinds = ("sum", "mean", "std", "max", "min")
+    msg = jnp.asarray(rng.normal(size=(e, d)).astype(np.float32))
+    rcv = jnp.asarray(rng.integers(0, n, size=e).astype(np.int32))
+    mask = jnp.ones(e, bool)
+    from repro.kernels import ops as kops
+
+    xla = jax.jit(lambda m, r: tuple(segment_multi_aggregate(
+        m, r, n, kinds=kinds, edge_mask=mask)[k] for k in kinds))
+    t_xla = time_fn(xla, msg, rcv)
+    t_k = time_fn(
+        lambda: kops.mp_scatter_multi(msg, rcv, mask, n, want_sum=True,
+                                      want_sumsq=True, want_count=True,
+                                      want_max=True, want_min=True),
+        warmup=1, iters=3)
+    shape = f"E={e},D={d},N={n},kinds={'+'.join(kinds)}"
+    csv.add("kernel.mp.vs_segment_ops.multi_agg_xla", t_xla * 1e6,
+            f"{shape};jax.ops.segment_* lowering")
+    csv.add("kernel.mp.vs_segment_ops.mp_scatter_multi", t_k * 1e6,
+            f"{shape};interpret-mode kernel (structural, not TPU perf)")
+
+    h = 4
+    logits = jnp.asarray(rng.normal(size=(e, h)).astype(np.float32))
+    sm_xla = jax.jit(lambda l, r: segment_softmax(l, r, n, edge_mask=mask))
+    t_sm_xla = time_fn(sm_xla, logits, rcv)
+    t_sm_k = time_fn(lambda: kops.seg_softmax(logits, rcv, mask, n),
+                     warmup=1, iters=3)
+    shape = f"E={e},H={h},N={n}"
+    csv.add("kernel.mp.vs_segment_ops.softmax_xla", t_sm_xla * 1e6,
+            f"{shape};3-sweep segment_* lowering")
+    csv.add("kernel.mp.vs_segment_ops.seg_softmax", t_sm_k * 1e6,
+            f"{shape};2-sweep interpret-mode kernel (structural)")
+
+    # the Pallas layer_fused kernel itself (the kernel.mp.fused_layer row
+    # measures the jnp mirror): interpret-mode, so this row tracks that
+    # the one-launch kernel keeps running end-to-end at the bench shape
+    snd = jnp.asarray(rng.integers(0, n, size=e).astype(np.int32))
+    x = jnp.asarray(rng.normal(size=(n, d)).astype(np.float32))
+    w1 = jnp.asarray(rng.normal(size=(d, 2 * d)).astype(np.float32) * 0.1)
+    b1 = jnp.zeros((2 * d,), jnp.float32)
+    w2 = jnp.asarray(rng.normal(size=(2 * d, d)).astype(np.float32) * 0.1)
+    b2 = jnp.zeros((d,), jnp.float32)
+    et = jnp.asarray(rng.normal(size=(e, d)).astype(np.float32))
+    t_lf = time_fn(
+        lambda: kops.layer_fused(x, snd, rcv, mask, n, w1=w1, b1=b1, w2=w2,
+                                 b2=b2, edge_term=et, phi_activation="relu",
+                                 self_coeff=1.1),
+        warmup=1, iters=2)
+    csv.add("kernel.mp.vs_segment_ops.layer_fused", t_lf * 1e6,
+            f"E={e},D={d},N={n},layer=gin(d->2d->d);interpret-mode "
+            f"one-launch NT+MP kernel (structural)")
+
+
+def forward_trace_paths(csv: Csv):
+    """Whole-forward trace+lower time at the paper's L=5: the scanned
+    stacked-parameter forward (one traced layer body) vs the unrolled
+    loop (L traced copies). Not under the regression gate (kernel.forward
+    prefix): compile-path timings are tracked, never gated."""
+    from repro.core.models import PAPER_GNN_CONFIGS, make_gnn
+    cfg = PAPER_GNN_CONFIGS["gin"].replace(hidden_dim=64)
+    model = make_gnn(cfg)
+    params = model.init(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(7)
+    n, e = 256, 512
+    nf = rng.normal(size=(n, cfg.node_feat_dim)).astype(np.float32)
+    snd = rng.integers(0, n, size=e).astype(np.int32)
+    rcv = rng.integers(0, n, size=e).astype(np.int32)
+    ef = rng.normal(size=(e, cfg.edge_feat_dim)).astype(np.float32)
+    g = build_graph_batch(nf, snd, rcv, edge_feat=ef, node_pad=n, edge_pad=e)
+
+    for scan in (True, False):
+        df = DataflowConfig(scan_layers=scan)
+        best = float("inf")
+        for _ in range(3):
+            fn = jax.jit(lambda p, gg, _df=df: model.apply(p, gg, cfg, _df))
+            t0 = time.perf_counter()
+            fn.lower(params, g)
+            best = min(best, time.perf_counter() - t0)
+        tag = "scan" if scan else "unrolled"
+        csv.add(f"kernel.forward.gin_l5.trace_{tag}", best * 1e6,
+                f"L={cfg.num_layers},D={cfg.hidden_dim},N={n},E={e};"
+                f"jit trace+lower wall time")
 
 
 def softmax_paths(csv: Csv):

@@ -44,6 +44,9 @@ TABLES = {
     "kernels": lambda csv: (kernel_bench.mp_paths(csv),
                             kernel_bench.multi_agg_paths(csv),
                             kernel_bench.pipeline_paths(csv),
+                            kernel_bench.fused_layer_paths(csv),
+                            kernel_bench.vs_segment_ops_paths(csv),
+                            kernel_bench.forward_trace_paths(csv),
                             kernel_bench.softmax_paths(csv),
                             kernel_bench.attention_paths(csv)),
     "stream": _run_stream,

@@ -19,9 +19,12 @@ engine is the software analogue of that serving frontend:
     device time are recorded (warm-up excluded);
   * each (node_pad, edge_pad, graph_pad) bucket gets a jit program compiled
     once and — with ``autotune=True`` — its own ``(num_banks, edge_tile,
-    impl)`` dataflow picked by timing a few candidates on the first batch
-    (including the fused gather-phi-scatter ``impl='pipeline'`` edge
-    phase); winners persist to a JSON cache so restarts skip the search.
+    impl)`` dataflow picked by timing candidates on the first batch
+    (including the fused gather-phi-scatter ``impl='pipeline'`` edge phase
+    and the one-launch ``impl='fused_layer'`` step); ``max_autotune``
+    widens the candidate set from the cheap default toward the paper's
+    full Fig. 10 DSE grid; winners persist to a JSON cache so restarts
+    skip the search.
 
 ``process`` keeps the original synchronous batch-1 API (submit + wait), and
 ``drain``/``close`` give callers backpressure and shutdown. ``warmup_all``
@@ -146,6 +149,7 @@ class GraphStreamEngine:
                  eager_flush: bool = True,
                  autotune: bool = False,
                  autotune_cache: Optional[str] = None,
+                 max_autotune: int = 5,
                  max_pending: int = 4096):
         self.cfg = cfg
         self.params = params
@@ -170,6 +174,7 @@ class GraphStreamEngine:
         self._compile_lock = threading.RLock()
         self._autotune = autotune
         self._autotune_cache = autotune_cache
+        self._max_autotune = max(1, int(max_autotune))
         self._tuned: Dict[BucketKey, DataflowConfig] = {}
         self._tune_log: Dict[BucketKey, Dict[str, Any]] = {}
         self._load_autotune_cache()
@@ -477,29 +482,65 @@ class GraphStreamEngine:
             return run
 
     def _candidate_dataflows(self, key: BucketKey) -> List[DataflowConfig]:
+        """Per-bucket DSE candidates (the paper's Fig. 10 design space:
+        num_banks × edge_tile × impl).
+
+        The cheap default set is 2-3 (num_banks, edge_tile) combos plus one
+        candidate each for the fused edge pipeline (``impl='pipeline'``,
+        DESIGN.md §6) and — on backends with the Pallas kernel path — the
+        layer-fused one-launch step (``impl='fused_layer'``, §7); models
+        without the fusable descriptions silently fall back, so both are
+        always safe to time. Off-TPU ``fused_layer`` traces to exactly the
+        pipeline mirror, so offering it would compile and time a bitwise
+        duplicate; it joins the set only where it is a distinct program.
+        Raising ``max_autotune`` expands toward the full grid
+        (banks ∈ {1,2,4,8,16} × tiles ∈ {32,64,128,256} × impls), truncated
+        to ``max_autotune`` candidates so warmup cost stays bounded.
+        """
+        from repro.core.message_passing import _pipeline_uses_kernel
         node_pad, edge_pad, _ = key
-        seen: List[Tuple[int, int]] = []
-        for banks, tile in ((self.dataflow.num_banks, self.dataflow.edge_tile),
-                            (1, 128), (8, 64)):
+
+        def clamp(banks: int, tile: int) -> Tuple[int, int]:
             banks = max(1, min(banks, node_pad))
             while node_pad % banks:
                 banks //= 2
-            tile = max(8, min(tile, edge_pad))
-            if (banks, tile) not in seen:
-                seen.append((banks, tile))
+            return banks, max(8, min(tile, edge_pad))
+
+        extra_impls = ["pipeline"]
+        if _pipeline_uses_kernel():
+            extra_impls.append("fused_layer")
+        impls = [self.dataflow.impl]
+        for extra in extra_impls:
+            if extra not in impls:
+                impls.append(extra)
+
+        pairs: List[Tuple[int, int]] = []
+        for banks, tile in ((self.dataflow.num_banks, self.dataflow.edge_tile),
+                            (1, 128), (8, 64)):
+            bt = clamp(banks, tile)
+            if bt not in pairs:
+                pairs.append(bt)
         cands = [self.dataflow.replace(num_banks=b, edge_tile=t)
-                 for b, t in seen[:3]]
-        if self.dataflow.impl != "pipeline":
-            # the fused gather-phi-scatter edge pipeline (DESIGN.md §6):
-            # fusable models run their whole edge phase as one launch;
-            # non-fusable ones silently fall back to 'fused', so the
-            # candidate is always safe to time
-            cands.append(cands[0].replace(impl="pipeline"))
-        return cands
+                 for b, t in pairs[:3]]
+        for impl in impls[1:]:
+            cands.append(cands[0].replace(impl=impl))
+
+        if self._max_autotune > len(cands):
+            seen = {(c.num_banks, c.edge_tile, c.impl) for c in cands}
+            for banks in (1, 2, 4, 8, 16):
+                for tile in (32, 64, 128, 256):
+                    b, t = clamp(banks, tile)
+                    for impl in impls:
+                        if (b, t, impl) not in seen:
+                            seen.add((b, t, impl))
+                            cands.append(self.dataflow.replace(
+                                num_banks=b, edge_tile=t, impl=impl))
+        return cands[:self._max_autotune]
 
     def _run_autotune(self, key: BucketKey, g: GraphBatch) -> DataflowConfig:
-        """Time 2-3 (num_banks, edge_tile) candidates on the first batch of
-        this bucket; cache and persist the winner."""
+        """Time up to ``max_autotune`` (num_banks, edge_tile, impl) DSE
+        candidates on the first batch of this bucket; cache and persist
+        the winner."""
         timings: Dict[str, float] = {}
         best_df, best_t = None, float("inf")
         for df in self._candidate_dataflows(key):

@@ -16,6 +16,13 @@ The engine exposes:
                                    so the whole edge phase (gather + phi +
                                    every statistic) runs as one launch with
                                    no (E, D) message buffer (DESIGN.md §6),
+  * ``FusableUpdate`` / ``scan_layers`` — the *layer-fused* contract
+                                   (DESIGN.md §7): gamma described as a
+                                   self-term + dense MLP so the NT update
+                                   folds into the pipeline kernel (one launch
+                                   per layer), and a ``lax.scan`` wrapper over
+                                   stacked layer parameters that keeps
+                                   ``count_edge_passes`` honest,
   * ``PrecomputedGraphStats``    — per-graph structure statistics (degrees,
                                    normalizers, PNA scalers, DGN field
                                    weights) computed once per forward pass
@@ -144,6 +151,23 @@ def _uncounted():
         _EDGE_PASS_SCOPE.active = st
 
 
+def scan_layers(body, init, xs, *, length: int):
+    """``lax.scan`` over stacked layer parameters, pass-accounting aware.
+
+    The scanned forward (DESIGN.md §7) traces the layer body ONCE, so the
+    sweeps ``count_edge_passes`` records during that single trace are the
+    *per-layer* count; this wrapper multiplies them by the number of scanned
+    steps so trace-time accounting keeps reporting the paper's per-forward
+    passes-over-edges figure regardless of execution strategy.
+    """
+    st = _EDGE_PASS_SCOPE.active
+    before = st.passes if st is not None else 0
+    carry, ys = jax.lax.scan(body, init, xs, length=length)
+    if st is not None and length > 1:
+        st.passes += (st.passes - before) * (length - 1)
+    return carry, ys
+
+
 @jax.tree_util.register_dataclass
 @dataclass(frozen=True)
 class PrecomputedGraphStats:
@@ -256,6 +280,20 @@ class DataflowConfig:
     run their whole edge phase — gather, transform, every statistic — as
     one launch with no (E, D) message buffer (1 edge pass). Layers with an
     arbitrary ``message_fn`` fall back to the ``fused`` behaviour.
+
+    ``impl='fused_layer'`` goes one further (DESIGN.md §7): layers that
+    also describe gamma through ``FusableUpdate`` fold the update matmul +
+    bias + activation into the pipeline kernel, so the whole NT+MP layer
+    step is literally one launch and the aggregated message buffer never
+    reaches HBM. Layers without a fusable update keep the pipeline edge
+    phase and run gamma as a separate (XLA-fused) stage.
+
+    ``scan_layers`` selects the scanned stacked-parameter forward
+    (DESIGN.md §7): the homogeneous layer stack runs as a single
+    ``lax.scan`` — one trace, one compiled body, node buffer resident
+    across layers — instead of a per-layer unrolled Python loop. Bitwise
+    equal to the unrolled forward; ``False`` keeps the unrolled loop for
+    ablation.
     """
 
     node_tile: int = 8
@@ -263,8 +301,10 @@ class DataflowConfig:
     apply_tile: int = 128
     scatter_tile: int = 128
     edge_tile: int = 128          # edges streamed per MP grid step (kernel)
-    impl: str = "fused"   # twopass | unfused | fused | banked | kernel | pipeline
+    # twopass | unfused | fused | banked | kernel | pipeline | fused_layer
+    impl: str = "fused"
     single_pass: bool = True      # fuse multi-kind aggregation into one sweep
+    scan_layers: bool = True      # lax.scan over stacked layer params
 
     def replace(self, **kw) -> "DataflowConfig":
         import dataclasses
@@ -307,6 +347,43 @@ class FusableMessage:
     edge_term: Optional[Array] = None
     bias: Optional[Array] = None
     activation: str = "none"
+
+
+@dataclass(frozen=True)
+class FusableUpdate:
+    """A gamma the layer-fused kernel can run in-register (DESIGN.md §7).
+
+    Describes the node update as a self-term plus a small dense MLP on the
+    aggregated messages:
+
+        x' = act_out( mlp( m + self_coeff * x ) )
+
+    where ``m`` is the layer's (sum-)aggregated message buffer, still
+    resident in the kernel's VMEM accumulator when the update runs. This
+    covers the GIN family (self_coeff = 1+eps, 2-layer MLP) and GCN
+    (self_coeff = the per-node self-loop norm, 1 dense layer). Updates
+    needing per-node scaler tensors (PNA), non-linear combines (DGN's
+    absolute value), or no matmul at all (GAT) stay on the two-stage
+    pipeline path — ``propagate`` falls back automatically.
+
+      self_coeff  scalar or (N,)  weight on the residual self term (None
+                                  drops it)
+      w1, b1      (D, D_ff), (D_ff,)   first dense layer
+      w2, b2      (D_ff, D_out), (D_out,)  optional second layer; a ReLU
+                                  is applied between the two
+      out_activation  'none' | 'relu'   final activation. Layer-position-
+                                  dependent activations (GCN's no-relu
+                                  last layer) are gated *outside* the
+                                  kernel so the scanned body stays
+                                  layer-invariant.
+    """
+
+    w1: Array
+    b1: Array
+    self_coeff: Optional[Union[Array, float]] = None
+    w2: Optional[Array] = None
+    b2: Optional[Array] = None
+    out_activation: str = "none"
 
 
 # Test hook: force the Pallas pipeline kernel (interpret mode off-TPU)
@@ -750,6 +827,7 @@ def propagate(
     dataflow: DataflowConfig = DEFAULT_DATAFLOW,
     stats: Optional[PrecomputedGraphStats] = None,
     fusable: Optional[FusableMessage] = None,
+    fusable_update: Optional[FusableUpdate] = None,
 ) -> Array:
     """One message-passing layer.
 
@@ -777,9 +855,36 @@ def propagate(
     the full message matrix is forced to materialize (optimization barrier)
     before aggregation. The default fused path lets XLA fuse phi into the
     scatter epilogue — the compiler-level analogue of NT/MP overlap.
+
+    ``fusable_update`` (see :class:`FusableUpdate`) is the layer-fused
+    contract: with ``impl='fused_layer'`` and both descriptions present,
+    the *whole layer* — gather, phi, aggregation, update MLP — runs as one
+    launch on the kernel path (kernels/layer_fused.py) and as one fused
+    jnp region (via ``update_fn``, bitwise-equal to the unfused path) on
+    the mirror. Layers with only a fusable phi keep the pipeline edge
+    phase; layers with neither fall back to the unfused path.
     """
     kinds = (aggregate,) if isinstance(aggregate, str) else tuple(aggregate)
-    if dataflow.impl == "pipeline" and fusable is not None:
+    if dataflow.impl in ("pipeline", "fused_layer") and fusable is not None:
+        if (dataflow.impl == "fused_layer" and fusable_update is not None
+                and kinds == ("sum",) and fusable.node_input is None
+                and _pipeline_uses_kernel()):
+            # the one-launch layer step: NT epilogue inside the kernel
+            fu = fusable_update
+            _count_pass()
+            with _uncounted():
+                from repro.kernels import ops as kops
+                out = kops.layer_fused(
+                    x, graph.senders, graph.receivers, graph.edge_mask,
+                    graph.n_node_pad, w1=fu.w1, b1=fu.b1,
+                    src_weight=fusable.src_weight,
+                    edge_term=fusable.edge_term, phi_bias=fusable.bias,
+                    phi_activation=fusable.activation,
+                    self_coeff=fu.self_coeff, w2=fu.w2, b2=fu.b2,
+                    out_activation=fu.out_activation,
+                    edge_tile=dataflow.edge_tile,
+                    num_banks=dataflow.num_banks)
+            return jnp.where(graph.node_mask[:, None], out, 0.0)
         agg_stats = fused_edge_aggregate(
             graph, x, fusable, kinds=kinds, dataflow=dataflow, stats=stats)
         m = (agg_stats[kinds[0]] if len(kinds) == 1 else

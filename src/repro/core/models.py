@@ -22,12 +22,14 @@ from repro.core.message_passing import (
     DEFAULT_DATAFLOW,
     DataflowConfig,
     FusableMessage,
+    FusableUpdate,
     PrecomputedGraphStats,
     _count_pass,
     fused_edge_aggregate,
     global_pool,
     precompute_graph_stats,
     propagate,
+    scan_layers,
     segment_aggregate,
     segment_multi_aggregate,
     segment_softmax,
@@ -35,6 +37,22 @@ from repro.core.message_passing import (
 
 Array = jax.Array
 Params = Dict[str, Any]
+
+# impls whose edge phase consumes the FusableMessage description
+_FUSABLE_IMPLS = ("pipeline", "fused_layer")
+
+
+def _stack_layers(layers):
+    """Stack a homogeneous list of per-layer param pytrees on a leading axis.
+
+    The stacked form is what the scanned forward (DESIGN.md §7) consumes:
+    ``lax.scan`` slices one layer's parameters per step, so the layer loop
+    compiles ONCE instead of being re-traced per layer. ``init`` keeps the
+    per-layer list layout (checkpoints, dense oracles, and the training
+    example index it), and apply-time stacking is a cheap device-side
+    concat.
+    """
+    return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *layers)
 
 
 @dataclass(frozen=True)
@@ -133,27 +151,50 @@ def gcn_apply(params, graph: GraphBatch, cfg: GNNConfig,
         stats = precompute_graph_stats(graph, with_self_loop_norm=True,
                                        with_graph_counts=cfg.task == "graph")
     inv_sqrt = stats.inv_sqrt_deg           # 1/sqrt(deg+1), once per graph
+    self_coeff = inv_sqrt * inv_sqrt        # analytic self-loop weight
 
     # fusable phi: the symmetric norm is a per-edge scalar stream, shared
     # by every layer (layer-invariant — computed once per forward pass)
     fusable = None
-    if dataflow.impl == "pipeline":
+    if dataflow.impl in _FUSABLE_IMPLS:
         fusable = FusableMessage(
             src_weight=inv_sqrt[graph.senders] * inv_sqrt[graph.receivers])
 
-    for l, p in enumerate(params["layers"]):
+    def layer_step(xx, p, last):
         def message(src, dst, e, _inv=inv_sqrt, _g=graph):
             norm = _inv[_g.senders] * _inv[_g.receivers]
             return src * norm[:, None]
 
-        def update(xx, m, _p=p, _inv=inv_sqrt, last=(l == cfg.num_layers - 1)):
-            m = m + xx * (_inv * _inv)[:, None]   # analytic self loop
-            h = _dense(_p, m)
-            return h if last else jax.nn.relu(h)
+        def update(xv, m, _p=p):
+            m = m + xv * self_coeff[:, None]      # analytic self loop
+            return _dense(_p, m)
 
-        x = propagate(graph, x, message_fn=message, update_fn=update,
+        fu = (FusableUpdate(w1=p["w"], b1=p["b"], self_coeff=self_coeff)
+              if dataflow.impl == "fused_layer" else None)
+        h = propagate(graph, xx, message_fn=message, update_fn=update,
                       aggregate="sum", dataflow=dataflow, stats=stats,
-                      fusable=fusable)
+                      fusable=fusable, fusable_update=fu)
+        # position-dependent activation gated outside the (scan-invariant)
+        # layer body; relu(0) == 0 so it commutes with the node mask
+        return jnp.where(last, h, jax.nn.relu(h))
+
+    n_layers = cfg.num_layers
+    # layer 0 maps node_feat_dim -> hidden and stays unrolled; the
+    # homogeneous tail scans over stacked parameters (one compiled body)
+    if dataflow.scan_layers and n_layers > 1:
+        x = layer_step(x, params["layers"][0], n_layers == 1)
+        stacked = _stack_layers(params["layers"][1:])
+        last_flags = jnp.arange(1, n_layers) == n_layers - 1
+
+        def body(xx, pl):
+            p, last = pl
+            return layer_step(xx, p, last), None
+
+        x, _ = scan_layers(body, x, (stacked, last_flags),
+                           length=n_layers - 1)
+    else:
+        for l, p in enumerate(params["layers"]):
+            x = layer_step(x, p, l == n_layers - 1)
     return _readout(params["head"], cfg, graph, x, stats)
 
 
@@ -195,10 +236,16 @@ def _gin_layer(p, graph, x, dataflow, stats=None):
 
     # fusable phi: the bond embedding is an additive edge-side input stream
     fusable = (FusableMessage(edge_term=e, activation="relu")
-               if dataflow.impl == "pipeline" else None)
+               if dataflow.impl in _FUSABLE_IMPLS else None)
+    # fusable gamma: (1+eps) self term + the 2-layer MLP, in-kernel
+    fu = None
+    if dataflow.impl == "fused_layer":
+        m0, m1 = p["mlp"]
+        fu = FusableUpdate(w1=m0["w"], b1=m0["b"], w2=m1["w"], b2=m1["b"],
+                           self_coeff=1.0 + p["eps"])
     return propagate(graph, x, message_fn=message, update_fn=update,
                      aggregate="sum", dataflow=dataflow, stats=stats,
-                     fusable=fusable)
+                     fusable=fusable, fusable_update=fu)
 
 
 def gin_apply(params, graph: GraphBatch, cfg: GNNConfig,
@@ -208,8 +255,15 @@ def gin_apply(params, graph: GraphBatch, cfg: GNNConfig,
     if stats is None and cfg.task == "graph":
         stats = precompute_graph_stats(graph, with_degrees=False,
                                        with_graph_counts=True)
-    for p in params["layers"]:
-        x = _gin_layer(p, graph, x, dataflow, stats)
+    if dataflow.scan_layers and cfg.num_layers > 1:
+        def body(xx, p):
+            return _gin_layer(p, graph, xx, dataflow, stats), None
+
+        x, _ = scan_layers(body, x, _stack_layers(params["layers"]),
+                           length=cfg.num_layers)
+    else:
+        for p in params["layers"]:
+            x = _gin_layer(p, graph, x, dataflow, stats)
     return _readout(params["head"], cfg, graph, x, stats)
 
 
@@ -241,14 +295,38 @@ def gin_vn_apply(params, graph: GraphBatch, cfg: GNNConfig,
                                        with_graph_counts=True)
     vn = jnp.zeros((graph.n_graph_pad, cfg.hidden_dim), cfg.dtype)
     n_layers = len(params["layers"])
-    for l, p in enumerate(params["layers"]):
-        x = x + vn[graph.graph_ids]                       # VN -> all nodes
-        x = jnp.where(graph.node_mask[:, None], x, 0.0)
-        x = _gin_layer(p, graph, x, dataflow, stats)
-        if l < n_layers - 1:                              # all nodes -> VN
-            pooled = global_pool(graph, x, kind="sum")
-            vn = _mlp(params["vn_mlps"][l], vn + pooled)
-            vn = jnp.where(graph.graph_mask[:, None], vn, 0.0)
+
+    def broadcast_vn(xx, vv):
+        xx = xx + vv[graph.graph_ids]                     # VN -> all nodes
+        return jnp.where(graph.node_mask[:, None], xx, 0.0)
+
+    def vn_update(xx, vv, p_vn):
+        pooled = global_pool(graph, xx, kind="sum")       # all nodes -> VN
+        vv = _mlp(p_vn, vv + pooled)
+        return jnp.where(graph.graph_mask[:, None], vv, 0.0)
+
+    if dataflow.scan_layers and n_layers > 1:
+        # layers 0..L-2 (gin layer + vn exchange) are homogeneous and scan;
+        # the last layer (no vn update after it) stays unrolled
+        def body(carry, ps):
+            xx, vv = carry
+            p_layer, p_vn = ps
+            xx = _gin_layer(p_layer, graph, broadcast_vn(xx, vv), dataflow,
+                            stats)
+            return (xx, vn_update(xx, vv, p_vn)), None
+
+        (x, vn), _ = scan_layers(
+            body, (x, vn),
+            (_stack_layers(params["layers"][:-1]),
+             _stack_layers(params["vn_mlps"])),
+            length=n_layers - 1)
+        x = _gin_layer(params["layers"][-1], graph, broadcast_vn(x, vn),
+                       dataflow, stats)
+    else:
+        for l, p in enumerate(params["layers"]):
+            x = _gin_layer(p, graph, broadcast_vn(x, vn), dataflow, stats)
+            if l < n_layers - 1:
+                vn = vn_update(x, vn, params["vn_mlps"][l])
     return _readout(params["head"], cfg, graph, x, stats)
 
 
@@ -284,8 +362,9 @@ def gat_apply(params, graph: GraphBatch, cfg: GNNConfig,
     if stats is None and cfg.task == "graph":
         stats = precompute_graph_stats(graph, with_degrees=False,
                                        with_graph_counts=True)
-    for l, p in enumerate(params["layers"]):
-        h = _dense(p["w"], x).reshape(N, H, Dh)
+
+    def layer_step(xx, p, last):
+        h = _dense(p["w"], xx).reshape(N, H, Dh)
         # per-node attention halves (computed once per node — NT side)
         alpha_src = jnp.einsum("nhd,hd->nh", h, p["a_src"])
         alpha_dst = jnp.einsum("nhd,hd->nh", h, p["a_dst"])
@@ -295,13 +374,13 @@ def gat_apply(params, graph: GraphBatch, cfg: GNNConfig,
         att = segment_softmax(logits, graph.receivers, N,
                               edge_mask=graph.edge_mask,
                               dataflow=dataflow)                  # (E, H)
-        if dataflow.impl == "pipeline":
+        if dataflow.impl in _FUSABLE_IMPLS:
             # the softmax pre-pass stays, but the h[senders] * att scatter
-            # fuses: attention expands to per-lane weights on the gathered
-            # row (an x-derived side stream, not a message buffer)
+            # fuses: the (E, H) attention lanes ride along as-is and the
+            # kernel/mirror broadcast them across head_dim in-register —
+            # the (E, H·Dh) expansion never costs host bandwidth
             agg = fused_edge_aggregate(
-                graph, h.reshape(N, H * Dh),
-                FusableMessage(src_weight=jnp.repeat(att, Dh, axis=-1)),
+                graph, h.reshape(N, H * Dh), FusableMessage(src_weight=att),
                 kinds=("sum",), dataflow=dataflow, stats=stats)["sum"]
         else:
             msg = h[graph.senders] * att[..., None]               # (E, H, Dh)
@@ -309,8 +388,24 @@ def gat_apply(params, graph: GraphBatch, cfg: GNNConfig,
             agg = segment_aggregate(
                 msg.reshape(-1, H * Dh), graph.receivers, N,
                 kind="sum", edge_mask=graph.edge_mask, dataflow=dataflow)
-        x = agg if l == cfg.num_layers - 1 else jax.nn.elu(agg)
-        x = jnp.where(graph.node_mask[:, None], x, 0.0)
+        out = jnp.where(last, agg, jax.nn.elu(agg))
+        return jnp.where(graph.node_mask[:, None], out, 0.0)
+
+    n_layers = cfg.num_layers
+    if dataflow.scan_layers and n_layers > 1:
+        x = layer_step(x, params["layers"][0], n_layers == 1)
+        last_flags = jnp.arange(1, n_layers) == n_layers - 1
+
+        def body(xx, pl):
+            p, last = pl
+            return layer_step(xx, p, last), None
+
+        x, _ = scan_layers(body, x,
+                           (_stack_layers(params["layers"][1:]), last_flags),
+                           length=n_layers - 1)
+    else:
+        for l, p in enumerate(params["layers"]):
+            x = layer_step(x, p, l == n_layers - 1)
     return _readout(params["head"], cfg, graph, x, stats)
 
 
@@ -349,31 +444,43 @@ def pna_apply(params, graph: GraphBatch, cfg: GNNConfig,
                                        with_graph_counts=cfg.task == "graph")
     scalers = stats.pna_scalers                               # (N, 3)
 
-    for p in params["layers"]:
+    def layer_step(xx, p):
         e = _dense(p["edge_enc"], graph.edge_feat)
 
         def message(src, dst, ee, _e=e, _p=p):
             return jax.nn.relu(_dense(_p["pre"], jnp.concatenate([src, _e], -1)))
 
-        def update(xx, m, _p=p):
+        def update(xv, m, _p=p):
             # m = concat of 4 aggregators: (N, 4D); apply 3 scalers -> (N, 12D)
             scaled = (m[:, None, :] * scalers[:, :, None]).reshape(N, -1)
-            h = _dense(_p["post"], jnp.concatenate([xx, scaled], -1))
+            h = _dense(_p["post"], jnp.concatenate([xv, scaled], -1))
             return jax.nn.relu(h)
 
         # fusable phi: the pre-linear splits into a node-side transform
         # (N rows, not E) plus an edge-side term — phi = relu(x@Ws[snd]
-        # + e@We + b), exactly the per-edge linear-combine contract
+        # + e@We + b), exactly the per-edge linear-combine contract.
+        # gamma needs the per-node scaler tensor, so it stays outside the
+        # kernel (the fused_layer path keeps the pipeline edge phase).
         fusable = None
-        if dataflow.impl == "pipeline":
+        if dataflow.impl in _FUSABLE_IMPLS:
             w_pre, b_pre = p["pre"]["w"], p["pre"]["b"]
             fusable = FusableMessage(
-                node_input=x @ w_pre[:d], edge_term=e @ w_pre[d:],
+                node_input=xx @ w_pre[:d], edge_term=e @ w_pre[d:],
                 bias=b_pre, activation="relu")
 
-        x = propagate(graph, x, message_fn=message, update_fn=update,
-                      aggregate=("mean", "std", "max", "min"),
-                      dataflow=dataflow, stats=stats, fusable=fusable)
+        return propagate(graph, xx, message_fn=message, update_fn=update,
+                         aggregate=("mean", "std", "max", "min"),
+                         dataflow=dataflow, stats=stats, fusable=fusable)
+
+    if dataflow.scan_layers and cfg.num_layers > 1:
+        def body(xx, p):
+            return layer_step(xx, p), None
+
+        x, _ = scan_layers(body, x, _stack_layers(params["layers"]),
+                           length=cfg.num_layers)
+    else:
+        for p in params["layers"]:
+            x = layer_step(x, p)
     return _readout(params["head"], cfg, graph, x, stats)
 
 
@@ -418,17 +525,17 @@ def dgn_apply(params, graph: GraphBatch, cfg: GNNConfig,
     # the duplicated node buffer scaled by per-lane weights [1 | w] — the
     # weight stream is layer-invariant (field only), built once per forward
     lane_w = None
-    if dataflow.impl == "pipeline":
+    if dataflow.impl in _FUSABLE_IMPLS:
         e_pad = graph.n_edge_pad
         lane_w = jnp.concatenate(
             [jnp.ones((e_pad, d), x.dtype),
              jnp.broadcast_to(w[:, None], (e_pad, d))], axis=-1)
 
-    for p in params["layers"]:
-        if dataflow.impl == "pipeline":
+    def layer_step(xx, p):
+        if dataflow.impl in _FUSABLE_IMPLS:
             agg = fused_edge_aggregate(
-                graph, x, FusableMessage(
-                    node_input=jnp.concatenate([x, x], axis=-1),
+                graph, xx, FusableMessage(
+                    node_input=jnp.concatenate([xx, xx], axis=-1),
                     src_weight=lane_w),
                 kinds=("sum", "mean"), dataflow=dataflow, stats=stats)
         else:
@@ -436,7 +543,7 @@ def dgn_apply(params, graph: GraphBatch, cfg: GNNConfig,
             # the directional sum come out of ONE sweep over
             # [x_src | x_src*w] (degrees and the field normalizer come
             # precomputed via ``stats``).
-            x_src = x[graph.senders]
+            x_src = xx[graph.senders]
             stacked = jnp.concatenate([x_src, x_src * w[:, None]], axis=-1)
             _count_pass()         # the gather + stacking message rewrite
             agg = segment_multi_aggregate(
@@ -445,9 +552,19 @@ def dgn_apply(params, graph: GraphBatch, cfg: GNNConfig,
                 degrees=stats.degrees)
         m_mean = agg["mean"][:, :d]
         m_dir = agg["sum"][:, d:2 * d]
-        m_dx = jnp.abs(m_dir - x * w_sum[:, None])            # |B_dx X|
-        h = _dense(p["post"], jnp.concatenate([x, m_mean, m_dx], -1))
-        x = jnp.where(graph.node_mask[:, None], jax.nn.relu(h), 0.0)
+        m_dx = jnp.abs(m_dir - xx * w_sum[:, None])           # |B_dx X|
+        h = _dense(p["post"], jnp.concatenate([xx, m_mean, m_dx], -1))
+        return jnp.where(graph.node_mask[:, None], jax.nn.relu(h), 0.0)
+
+    if dataflow.scan_layers and cfg.num_layers > 1:
+        def body(xx, p):
+            return layer_step(xx, p), None
+
+        x, _ = scan_layers(body, x, _stack_layers(params["layers"]),
+                           length=cfg.num_layers)
+    else:
+        for p in params["layers"]:
+            x = layer_step(x, p)
     return _readout(params["head"], cfg, graph, x, stats)
 
 

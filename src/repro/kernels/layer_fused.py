@@ -1,0 +1,257 @@
+"""Pallas TPU kernel: the layer-fused NT+MP step — a whole GNN layer in ONE
+launch.
+
+``mp_pipeline`` (DESIGN.md §6) fused the *edge phase* — gather, phi, every
+statistic — into one kernel, but the layer was still two dispatches: the
+pipeline produced the aggregated (N, D) buffer, wrote it to HBM, and a
+separate NT dispatch (``nt_mlp`` or an XLA matmul) read it back to apply
+the update. FlowGNN's headline claim is stronger: the NT and MP units of
+adjacent layers pipeline against each other with *no inter-layer
+materialization* (Fig. 4b). This kernel closes that gap (DESIGN.md §7):
+
+  grid = (num_banks, edge_tiles); per bank the edge stream is swept once
+  into a VMEM sum accumulator (gather matmul + fusable phi + routing
+  matmul, exactly the mp_pipeline stages), and on the bank's LAST edge
+  tile the NT epilogue runs in-register on the still-resident accumulator:
+
+      z   = acc + self_coeff * x_bank          # GIN's (1+eps)x, GCN's self loop
+      h   = z @ w1 + b1                        # update matmul (MXU)
+      h   = relu(h) @ w2 + b2                  # optional second MLP layer
+      out = act_out(h)
+
+  The aggregated message buffer never reaches HBM — the only (N, ·) write
+  of the whole layer is the final output.
+
+The gamma forms covered are the per-edge-linear + MLP class (GIN, GIN-VN,
+GCN): ``self_coeff`` is a traced scalar (GIN's 1+eps) or per-node vector
+(GCN's 1/(deg+1) analytic self loop), and the update is a 1- or 2-layer
+dense MLP with a ReLU hidden activation. Models whose gamma needs
+per-node scaler tensors (PNA), non-linear combines (DGN's |·|), or no
+update matmul at all (GAT) keep the two-stage ``mp_pipeline`` path under
+``impl='fused_layer'`` — see ``core.message_passing.propagate``.
+
+VMEM sizing: on top of the ``mp_pipeline`` working set (resident node
+buffer N_pad × D, gather route edge_tile × N_pad), a grid step holds the
+(bank_size, D) f32 accumulator plus the update weights (D × D_ff and
+D_ff × D_out). With the paper's hidden sizes (D ≤ 128, D_ff = 2D) the
+weights are a few hundred KB — far below the route/buffer terms.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.mp_pipeline import (_gather_phi_tile, _src_weight_mode,
+                                       apply_fusable_phi)
+from repro.kernels.mp_scatter import _ceil_to, _route_matrix, pad_edge_stream
+
+Array = jax.Array
+
+
+def _layer_fused_kernel(*refs, bank_size: int, edge_tile: int, n_pad: int,
+                        sw_mode: str, head_dim: int, has_et: bool,
+                        has_phi_bias: bool, phi_activation: str,
+                        self_mode: str, two_layer: bool,
+                        out_activation: str):
+    it = iter(refs)
+    snd_ref, recv_ref, mask_ref = next(it), next(it), next(it)
+    sw_ref = next(it) if sw_mode != "none" else None
+    et_ref = next(it) if has_et else None
+    pb_ref = next(it) if has_phi_bias else None
+    y_ref = next(it)                                  # resident (n_pad, D)
+    xb_ref = next(it) if self_mode != "none" else None  # (bank_size, D)
+    sc_ref = next(it) if self_mode != "none" else None
+    w1_ref, b1_ref = next(it), next(it)
+    w2_ref = next(it) if two_layer else None
+    b2_ref = next(it) if two_layer else None
+    out_ref = next(it)
+    acc_ref = next(it)                                # VMEM scratch (bank, D)
+
+    @pl.when(pl.program_id(1) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    snd = snd_ref[...].reshape(edge_tile)
+    recv = recv_ref[...].reshape(edge_tile)
+    mask = mask_ref[...].reshape(edge_tile)
+    valid = mask != 0
+
+    msg = _gather_phi_tile(
+        y_ref, snd, valid, sw_ref, et_ref, pb_ref, edge_tile=edge_tile,
+        n_pad=n_pad, sw_mode=sw_mode, head_dim=head_dim,
+        activation=phi_activation)
+
+    route = _route_matrix(recv, mask, pl.program_id(0), bank_size,
+                          edge_tile).astype(jnp.float32)
+    dn = (((0,), (0,)), ((), ()))                     # route^T @ msg
+    acc_ref[...] += jax.lax.dot_general(
+        route, msg, dimension_numbers=dn, preferred_element_type=jnp.float32)
+
+    @pl.when(pl.program_id(1) == pl.num_programs(1) - 1)
+    def _nt_epilogue():
+        # the bank's aggregation is complete: run the update in-register
+        # on the still-resident accumulator (the NT unit folded in).
+        z = acc_ref[...]
+        if self_mode == "scalar":
+            z = z + sc_ref[0, 0] * xb_ref[...].astype(jnp.float32)
+        elif self_mode == "node":
+            z = z + xb_ref[...].astype(jnp.float32) * sc_ref[...]
+        h = jax.lax.dot(z, w1_ref[...].astype(jnp.float32),
+                        preferred_element_type=jnp.float32)
+        h = h + b1_ref[...].astype(jnp.float32)
+        if two_layer:
+            h = jnp.maximum(h, 0.0)
+            h = jax.lax.dot(h, w2_ref[...].astype(jnp.float32),
+                            preferred_element_type=jnp.float32)
+            h = h + b2_ref[...].astype(jnp.float32)
+        if out_activation == "relu":
+            h = jnp.maximum(h, 0.0)
+        out_ref[...] = h.astype(out_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("num_nodes", "phi_activation", "out_activation",
+                     "edge_tile", "num_banks", "interpret"),
+)
+def layer_fused(x: Array, senders: Array, receivers: Array, edge_mask: Array,
+                num_nodes: int, *, w1: Array, b1: Array,
+                src_weight: Array = None, edge_term: Array = None,
+                phi_bias: Array = None, phi_activation: str = "none",
+                self_coeff=None, w2: Array = None, b2: Array = None,
+                out_activation: str = "none", edge_tile: int = 128,
+                num_banks: int = 4, interpret: bool = True) -> Array:
+    """One-launch GNN layer: gather + phi + sum-aggregate + NT update.
+
+    Per edge, phi is the fusable form of ``mp_pipeline``
+    (``act(x[snd] * src_weight + edge_term + phi_bias)``); per node the
+    update is
+
+        out = act_out( mlp( sum_agg + self_coeff * x ) )
+
+    with ``self_coeff`` None, a scalar (GIN's 1+eps), or a per-node (N,)
+    vector (GCN's self-loop norm), and ``mlp`` one dense layer (w1, b1) or
+    two with a ReLU between (w1, b1, w2, b2). Returns (num_nodes, D_out)
+    in ``x.dtype``. Uneven E / num_nodes are padded internally.
+    """
+    if phi_activation not in ("none", "relu"):
+        raise ValueError(f"unsupported activation '{phi_activation}'")
+    if out_activation not in ("none", "relu"):
+        raise ValueError(f"unsupported activation '{out_activation}'")
+    if (w2 is None) != (b2 is None):
+        raise ValueError("w2 and b2 must be given together")
+    n, d = x.shape
+    if n != num_nodes:
+        raise ValueError(f"node buffer has {n} rows, expected {num_nodes}")
+    if w1.shape[0] != d:
+        raise ValueError(f"w1 contracts over {w1.shape[0]}, node dim is {d}")
+    e = senders.shape[0]
+    e_pad = _ceil_to(e, edge_tile)
+    n_pad = _ceil_to(num_nodes, num_banks)
+    bank_size = n_pad // num_banks
+    d_out = (w2 if w2 is not None else w1).shape[1]
+    two_layer = w2 is not None
+
+    _, snd2, _, _ = pad_edge_stream(senders, senders, edge_mask, edge_tile)
+    _, recv2, mask2, _ = pad_edge_stream(
+        receivers, receivers, edge_mask, edge_tile)
+    if n_pad != n:
+        x = jnp.pad(x, ((0, n_pad - n), (0, 0)))
+
+    sw_mode, head_dim = "none", 0
+    inputs = [snd2, recv2, mask2]
+    in_specs = [pl.BlockSpec((edge_tile, 1), lambda b, t: (t, 0))] * 3
+    if src_weight is not None:
+        sw2 = pad_edge_stream(src_weight, receivers, edge_mask, edge_tile)[0]
+        sw_mode, head_dim = _src_weight_mode(src_weight, d)
+        inputs.append(sw2)
+        in_specs.append(
+            pl.BlockSpec((edge_tile, sw2.shape[1]), lambda b, t: (t, 0)))
+    if edge_term is not None:
+        et2 = pad_edge_stream(edge_term, receivers, edge_mask, edge_tile)[0]
+        inputs.append(et2)
+        in_specs.append(pl.BlockSpec((edge_tile, d), lambda b, t: (t, 0)))
+    if phi_bias is not None:
+        inputs.append(phi_bias.astype(jnp.float32).reshape(1, d))
+        in_specs.append(pl.BlockSpec((1, d), lambda b, t: (0, 0)))
+    inputs.append(x)                                  # resident node buffer
+    in_specs.append(pl.BlockSpec((n_pad, d), lambda b, t: (0, 0)))
+
+    self_mode = "none"
+    if self_coeff is not None:
+        sc = jnp.asarray(self_coeff, jnp.float32)
+        if sc.ndim == 0:
+            self_mode = "scalar"
+            sc = sc.reshape(1, 1)
+            sc_spec = pl.BlockSpec((1, 1), lambda b, t: (0, 0))
+        elif sc.shape == (num_nodes,):
+            self_mode = "node"
+            if n_pad != num_nodes:
+                sc = jnp.pad(sc, (0, n_pad - num_nodes))
+            sc = sc.reshape(n_pad, 1)
+            sc_spec = pl.BlockSpec((bank_size, 1), lambda b, t: (b, 0))
+        else:
+            raise ValueError(
+                f"self_coeff must be scalar or ({num_nodes},), got "
+                f"shape {sc.shape}")
+        # the bank's own slice of the node buffer, for the self term
+        inputs.append(x)
+        in_specs.append(pl.BlockSpec((bank_size, d), lambda b, t: (b, 0)))
+        inputs.append(sc)
+        in_specs.append(sc_spec)
+
+    d_ff = w1.shape[1]
+    inputs += [w1, b1.astype(jnp.float32).reshape(1, d_ff)]
+    in_specs += [pl.BlockSpec((d, d_ff), lambda b, t: (0, 0)),
+                 pl.BlockSpec((1, d_ff), lambda b, t: (0, 0))]
+    if two_layer:
+        inputs += [w2, b2.astype(jnp.float32).reshape(1, d_out)]
+        in_specs += [pl.BlockSpec((d_ff, d_out), lambda b, t: (0, 0)),
+                     pl.BlockSpec((1, d_out), lambda b, t: (0, 0))]
+
+    kernel = functools.partial(
+        _layer_fused_kernel, bank_size=bank_size, edge_tile=edge_tile,
+        n_pad=n_pad, sw_mode=sw_mode, head_dim=head_dim,
+        has_et=edge_term is not None, has_phi_bias=phi_bias is not None,
+        phi_activation=phi_activation, self_mode=self_mode,
+        two_layer=two_layer, out_activation=out_activation)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=(num_banks, e_pad // edge_tile),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((bank_size, d_out), lambda b, t: (b, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_pad, d_out), x.dtype),
+        scratch_shapes=[pltpu.VMEM((bank_size, d), jnp.float32)],
+        interpret=interpret,
+    )(*inputs)
+    return out[:num_nodes]
+
+
+def layer_fused_ref(x: Array, senders: Array, receivers: Array,
+                    edge_mask: Array, num_nodes: int, *, w1: Array, b1: Array,
+                    src_weight: Array = None, edge_term: Array = None,
+                    phi_bias: Array = None, phi_activation: str = "none",
+                    self_coeff=None, w2: Array = None, b2: Array = None,
+                    out_activation: str = "none") -> Array:
+    """Pure-jnp oracle for ``layer_fused`` (identical contract)."""
+    msg = apply_fusable_phi(x, senders, src_weight=src_weight,
+                            edge_term=edge_term, bias=phi_bias,
+                            activation=phi_activation)
+    z = jax.ops.segment_sum(jnp.where(edge_mask[:, None], msg, 0.0),
+                            receivers, num_segments=num_nodes)
+    if self_coeff is not None:
+        sc = jnp.asarray(self_coeff, jnp.float32)
+        z = z + x.astype(jnp.float32) * (sc if sc.ndim == 0 else sc[:, None])
+    h = z @ w1.astype(jnp.float32) + b1.astype(jnp.float32)
+    if w2 is not None:
+        h = jnp.maximum(h, 0.0) @ w2.astype(jnp.float32)
+        h = h + b2.astype(jnp.float32)
+    if out_activation == "relu":
+        h = jnp.maximum(h, 0.0)
+    return h.astype(x.dtype)

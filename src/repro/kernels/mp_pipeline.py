@@ -61,9 +61,59 @@ Array = jax.Array
 BIG = 1e30
 
 
+def _gather_phi_tile(y_ref, snd, valid, sw_ref, et_ref, b_ref, *,
+                     edge_tile: int, n_pad: int, sw_mode: str, head_dim: int,
+                     activation: str):
+    """Gather the tile's source rows + apply the fusable phi, in-register.
+
+    Shared between ``mp_pipeline`` and the fused-layer kernel
+    (kernels/layer_fused.py). ``sw_mode='head'`` expands (edge_tile, H)
+    attention lanes to (edge_tile, H·head_dim) *inside* the kernel — GAT's
+    per-head broadcast never materializes on the host.
+    """
+    # --- gather: one-hot matmul against the resident node buffer (MXU).
+    # Masked edges get an all-zero route row, so they gather zeros.
+    lanes = jax.lax.broadcasted_iota(jnp.int32, (edge_tile, n_pad), 1)
+    g_route = ((lanes == snd[:, None]) & valid[:, None]).astype(jnp.float32)
+    src = jax.lax.dot(g_route, y_ref[...].astype(jnp.float32),
+                      preferred_element_type=jnp.float32)   # (edge_tile, D)
+
+    # --- phi, in-register (masked rows may hold garbage from the additive
+    # terms; the scatter routes and keys exclude them everywhere).
+    msg = src
+    if sw_mode == "head":
+        sw = sw_ref[...].astype(jnp.float32)         # (edge_tile, H)
+        heads = sw.shape[1]
+        sw = jnp.broadcast_to(sw[:, :, None], (edge_tile, heads, head_dim))
+        msg = msg * sw.reshape(edge_tile, heads * head_dim)
+    elif sw_mode != "none":
+        msg = msg * sw_ref[...].astype(jnp.float32)  # (tile,1) broadcasts
+    if et_ref is not None:
+        msg = msg + et_ref[...].astype(jnp.float32)
+    if b_ref is not None:
+        msg = msg + b_ref[...]
+    if activation == "relu":
+        msg = jnp.maximum(msg, 0.0)
+    return msg
+
+
+def _src_weight_mode(src_weight, d: int):
+    """Classify a src_weight stream: scalar (E,), full (E, D), or per-head
+    (E, H) with H | D — broadcast across head_dim lanes in-kernel."""
+    if src_weight.ndim == 1:
+        return "scalar", 0
+    h = src_weight.shape[1]
+    if h == d:
+        return "full", 0
+    if h and d % h == 0:
+        return "head", d // h
+    raise ValueError(
+        f"src_weight width {h} must equal D={d} or divide it (per-head)")
+
+
 def _mp_pipeline_kernel(*refs, bank_size: int, edge_tile: int, n_pad: int,
-                        stats, sw_mode: str, has_et: bool, has_bias: bool,
-                        activation: str):
+                        stats, sw_mode: str, head_dim: int, has_et: bool,
+                        has_bias: bool, activation: str):
     it = iter(refs)
     snd_ref, recv_ref, mask_ref = next(it), next(it), next(it)
     sw_ref = next(it) if sw_mode != "none" else None
@@ -89,24 +139,10 @@ def _mp_pipeline_kernel(*refs, bank_size: int, edge_tile: int, n_pad: int,
     mask = mask_ref[...].reshape(edge_tile)
     valid = mask != 0
 
-    # --- gather: one-hot matmul against the resident node buffer (MXU).
-    # Masked edges get an all-zero route row, so they gather zeros.
-    lanes = jax.lax.broadcasted_iota(jnp.int32, (edge_tile, n_pad), 1)
-    g_route = ((lanes == snd[:, None]) & valid[:, None]).astype(jnp.float32)
-    src = jax.lax.dot(g_route, y_ref[...].astype(jnp.float32),
-                      preferred_element_type=jnp.float32)   # (edge_tile, D)
-
-    # --- phi, in-register (masked rows may hold garbage from the additive
-    # terms; the scatter routes and keys below exclude them everywhere).
-    msg = src
-    if sw_mode != "none":
-        msg = msg * sw_ref[...].astype(jnp.float32)  # (tile,1) broadcasts
-    if has_et:
-        msg = msg + et_ref[...].astype(jnp.float32)
-    if has_bias:
-        msg = msg + b_ref[...]
-    if activation == "relu":
-        msg = jnp.maximum(msg, 0.0)
+    msg = _gather_phi_tile(
+        y_ref, snd, valid, sw_ref, et_ref, b_ref, edge_tile=edge_tile,
+        n_pad=n_pad, sw_mode=sw_mode, head_dim=head_dim,
+        activation=activation)
 
     # --- scatter: dest-banked multi-statistic accumulation.
     route_b = _route_matrix(recv, mask, bank, bank_size, edge_tile)
@@ -153,7 +189,9 @@ def mp_pipeline(x: Array, senders: Array, receivers: Array, edge_mask: Array,
 
         act( x[senders[e]] * src_weight[e] + edge_term[e] + bias )
 
-    with ``src_weight`` either per-edge scalars (E,) or full-width (E, D),
+    with ``src_weight`` per-edge scalars (E,), full-width (E, D), or
+    per-head lanes (E, H) with H | D (broadcast across head_dim in-register
+    — GAT's attention expansion without the host-side (E, H·Dh) stream),
     and each of the three terms optional. ``stats`` is a subset of
     MULTI_STATS; returns ``{name: f32 array}`` with sum/sumsq/max/min of
     shape (num_nodes, D) and count (num_nodes, 1). max/min of empty
@@ -181,14 +219,12 @@ def mp_pipeline(x: Array, senders: Array, receivers: Array, edge_mask: Array,
     if n_pad != n:
         x = jnp.pad(x, ((0, n_pad - n), (0, 0)))
 
-    sw_mode = "none"
+    sw_mode, head_dim = "none", 0
     inputs = [snd2, recv2, mask2]
     in_specs = [pl.BlockSpec((edge_tile, 1), lambda b, t: (t, 0))] * 3
     if src_weight is not None:
         sw2 = pad_edge_stream(src_weight, receivers, edge_mask, edge_tile)[0]
-        sw_mode = "scalar" if src_weight.ndim == 1 else "full"
-        if sw_mode == "full" and src_weight.shape[1] != d:
-            raise ValueError("full-width src_weight must match D")
+        sw_mode, head_dim = _src_weight_mode(src_weight, d)
         inputs.append(sw2)
         in_specs.append(
             pl.BlockSpec((edge_tile, sw2.shape[1]), lambda b, t: (t, 0)))
@@ -210,7 +246,7 @@ def mp_pipeline(x: Array, senders: Array, receivers: Array, edge_mask: Array,
 
     kernel = functools.partial(
         _mp_pipeline_kernel, bank_size=bank_size, edge_tile=edge_tile,
-        n_pad=n_pad, stats=stats, sw_mode=sw_mode,
+        n_pad=n_pad, stats=stats, sw_mode=sw_mode, head_dim=head_dim,
         has_et=edge_term is not None, has_bias=bias is not None,
         activation=activation)
 
@@ -273,7 +309,20 @@ def apply_fusable_phi(x: Array, senders: Array, *, src_weight: Array = None,
     msg = jnp.take(x, senders, axis=0).astype(jnp.float32)
     if src_weight is not None:
         sw = src_weight.astype(jnp.float32)
-        msg = msg * (sw[:, None] if sw.ndim == 1 else sw)
+        if sw.ndim == 1:
+            msg = msg * sw[:, None]
+        else:
+            mode, head_dim = _src_weight_mode(sw, msg.shape[1])
+            if mode == "head":
+                # per-head lanes (GAT): broadcast across head_dim via a
+                # reshape — bitwise-identical to the unfused
+                # ``h[senders] * att[..., None]`` multiply, with no
+                # host-side (E, H·Dh) expansion
+                e_n, d_n = msg.shape
+                msg = (msg.reshape(e_n, sw.shape[1], head_dim)
+                       * sw[:, :, None]).reshape(e_n, d_n)
+            else:
+                msg = msg * sw
     if edge_term is not None:
         msg = msg + edge_term.astype(jnp.float32)
     if bias is not None:

@@ -3,7 +3,7 @@
 On TPU the kernels run compiled; everywhere else they run in interpret mode
 (the kernel body executed step-by-step on CPU), which is how this repo's
 tests validate them. The pure-JAX fallbacks in ref.py are what the dry-run
-lowers for GSPMD compilation (see DESIGN.md §8).
+lowers for GSPMD compilation (see DESIGN.md §9).
 """
 
 from __future__ import annotations
@@ -16,6 +16,8 @@ import jax
 from repro.kernels import ref as _ref
 from repro.kernels.flash_attention import flash_attention as _flash
 from repro.kernels.fused_nt_scatter import fused_nt_scatter as _fused
+from repro.kernels.layer_fused import layer_fused as _layer_fused
+from repro.kernels.layer_fused import layer_fused_ref as _layer_fused_ref
 from repro.kernels.mp_pipeline import mp_pipeline as _mp_pipeline
 from repro.kernels.mp_pipeline import mp_pipeline_ref as _mp_pipeline_ref
 from repro.kernels.mp_scatter import mp_scatter as _mp_scatter
@@ -64,6 +66,20 @@ def mp_pipeline(x, senders, receivers, edge_mask, num_nodes, *, stats,
                         num_banks=num_banks, interpret=_interpret())
 
 
+def layer_fused(x, senders, receivers, edge_mask, num_nodes, *, w1, b1,
+                src_weight=None, edge_term=None, phi_bias=None,
+                phi_activation="none", self_coeff=None, w2=None, b2=None,
+                out_activation="none", edge_tile=128, num_banks=4) -> Array:
+    """One-launch NT+MP layer step (gather + phi + sum + update MLP)."""
+    return _layer_fused(x, senders, receivers, edge_mask, num_nodes,
+                        w1=w1, b1=b1, src_weight=src_weight,
+                        edge_term=edge_term, phi_bias=phi_bias,
+                        phi_activation=phi_activation, self_coeff=self_coeff,
+                        w2=w2, b2=b2, out_activation=out_activation,
+                        edge_tile=edge_tile, num_banks=num_banks,
+                        interpret=_interpret())
+
+
 def seg_softmax(logits, receivers, edge_mask, num_nodes, *, edge_tile=128,
                 num_banks=4) -> Array:
     return _seg_softmax(logits, receivers, edge_mask, num_nodes,
@@ -91,6 +107,7 @@ def flash_attention(q, k, v, *, causal=True, window: Optional[int] = None,
 
 # oracles re-exported for tests/benchmarks
 mp_pipeline_ref = _mp_pipeline_ref
+layer_fused_ref = _layer_fused_ref
 mp_scatter_ref = _ref.mp_scatter_ref
 mp_scatter_multi_ref = _ref.mp_scatter_multi_ref
 segment_softmax_ref = _ref.segment_softmax_ref

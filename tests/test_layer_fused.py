@@ -1,0 +1,380 @@
+"""The layer-fused scanned forward (DESIGN.md §7).
+
+Covers: the one-launch layer kernel vs its jnp oracle (phi forms, self
+terms, 1/2-layer MLPs, uneven tiles/banks), the scanned stacked-parameter
+forward vs the unrolled per-layer forward for all six models (alone and
+packed, bitwise except PNA), ``impl='fused_layer'`` vs the unfused path
+(mirror and forced-kernel), the 1-pass-per-layer accounting contract under
+scan, the in-kernel per-head attention broadcast, and the engine's DSE
+candidate set / ``max_autotune`` knob / cache round-trip.
+"""
+
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import message_passing as mp
+from repro.core.engine import GraphStreamEngine
+from repro.core.graph import build_graph_batch, concat_raw_graphs
+from repro.core.message_passing import (DataflowConfig, FusableMessage,
+                                        FusableUpdate, count_edge_passes,
+                                        propagate, scan_layers)
+from repro.core.models import PAPER_GNN_CONFIGS, make_gnn
+from repro.data.graphs import molhiv_like
+from repro.kernels import ops as kops
+
+MODELS = sorted(PAPER_GNN_CONFIGS)
+
+# models whose fusable phi is op-identical to their message_fn, so the
+# fused_layer mirror is bitwise-equal to the unfused path; pna splits its
+# pre-linear matmul (reassociates float work) and gets allclose — the same
+# contract as the PR 3 pipeline mirror.
+BITWISE_MODELS = ("gcn", "gin", "gin_vn", "gat", "dgn")
+
+
+def small_cfg(name):
+    cfg = PAPER_GNN_CONFIGS[name]
+    return cfg.replace(num_layers=3, hidden_dim=16,
+                       head_mlp=(8,) if cfg.head_mlp else ())
+
+
+def _problem(e=200, d=8, n=30, seed=0, mask_p=0.8):
+    r = np.random.default_rng(seed)
+    x = jnp.asarray(r.normal(size=(n, d)).astype(np.float32))
+    snd = jnp.asarray(r.integers(0, n, size=e).astype(np.int32))
+    rcv = jnp.asarray(r.integers(0, max(n - 4, 1), size=e).astype(np.int32))
+    mask = jnp.asarray(r.random(e) < mask_p)
+    return x, snd, rcv, mask
+
+
+def _graph(seed=0, node_pad=64, edge_pad=128, n_graphs=1, graph_pad=None):
+    graphs = list(molhiv_like(seed=seed, n_graphs=n_graphs))
+    raw = concat_raw_graphs(graphs)
+    return build_graph_batch(
+        raw["node_feat"], raw["senders"], raw["receivers"],
+        edge_feat=raw["edge_feat"], node_pos=raw["node_pos"],
+        graph_offsets=raw["graph_offsets"], node_pad=node_pad,
+        edge_pad=edge_pad, graph_pad=graph_pad or n_graphs)
+
+
+# ---------------------------------------------------------------------------
+# layer_fused kernel (interpret mode) vs oracle
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("e,d,n,edge_tile,banks", [
+    (128, 16, 32, 32, 2),
+    (200, 8, 30, 64, 4),         # uneven: E % tile != 0, N % banks != 0
+    (96, 24, 17, 32, 5),         # uneven bank sizes
+])
+def test_layer_fused_kernel_gin_form(e, d, n, edge_tile, banks):
+    """GIN form: phi=relu(src+e), scalar self term, 2-layer MLP."""
+    r = np.random.default_rng(e + n)
+    x, snd, rcv, mask = _problem(e, d, n, seed=e + n)
+    et = jnp.asarray(r.normal(size=(e, d)).astype(np.float32))
+    kw = dict(w1=jnp.asarray(r.normal(size=(d, 2 * d)).astype(np.float32)),
+              b1=jnp.asarray(r.normal(size=(2 * d,)).astype(np.float32)),
+              w2=jnp.asarray(r.normal(size=(2 * d, d)).astype(np.float32)),
+              b2=jnp.asarray(r.normal(size=(d,)).astype(np.float32)),
+              edge_term=et, phi_activation="relu",
+              self_coeff=jnp.float32(1.25))
+    out = kops.layer_fused(x, snd, rcv, mask, n, edge_tile=edge_tile,
+                           num_banks=banks, **kw)
+    ref = kops.layer_fused_ref(x, snd, rcv, mask, n, **kw)
+    np.testing.assert_allclose(out, ref, atol=2e-4, rtol=2e-4)
+
+
+def test_layer_fused_kernel_gcn_form():
+    """GCN form: phi=src*norm, per-node self term, single dense, out relu,
+    D_out != D."""
+    e, d, n = 200, 8, 30
+    r = np.random.default_rng(1)
+    x, snd, rcv, mask = _problem(e, d, n, seed=2)
+    kw = dict(w1=jnp.asarray(r.normal(size=(d, 5)).astype(np.float32)),
+              b1=jnp.asarray(r.normal(size=(5,)).astype(np.float32)),
+              src_weight=jnp.asarray(r.normal(size=(e,)).astype(np.float32)),
+              self_coeff=jnp.asarray(r.normal(size=(n,)).astype(np.float32)),
+              out_activation="relu")
+    out = kops.layer_fused(x, snd, rcv, mask, n, edge_tile=64, num_banks=3,
+                           **kw)
+    ref = kops.layer_fused_ref(x, snd, rcv, mask, n, **kw)
+    np.testing.assert_allclose(out, ref, atol=2e-5, rtol=2e-5)
+    assert out.shape == (n, 5)
+
+
+def test_layer_fused_kernel_no_self_term_and_bias_phi():
+    e, d, n = 128, 8, 24
+    r = np.random.default_rng(3)
+    x, snd, rcv, mask = _problem(e, d, n, seed=5)
+    kw = dict(w1=jnp.asarray(r.normal(size=(d, d)).astype(np.float32)),
+              b1=jnp.asarray(r.normal(size=(d,)).astype(np.float32)),
+              phi_bias=jnp.asarray(r.normal(size=(d,)).astype(np.float32)),
+              src_weight=jnp.asarray(
+                  r.normal(size=(e, d)).astype(np.float32)))
+    out = kops.layer_fused(x, snd, rcv, mask, n, edge_tile=32, num_banks=4,
+                           **kw)
+    ref = kops.layer_fused_ref(x, snd, rcv, mask, n, **kw)
+    np.testing.assert_allclose(out, ref, atol=2e-5, rtol=2e-5)
+
+
+def test_layer_fused_rejects_bad_input():
+    x, snd, rcv, mask = _problem()
+    w1 = jnp.zeros((8, 8), jnp.float32)
+    b1 = jnp.zeros((8,), jnp.float32)
+    with pytest.raises(ValueError):
+        kops.layer_fused(x, snd, rcv, mask, 30, w1=w1, b1=b1,
+                         phi_activation="gelu")
+    with pytest.raises(ValueError):
+        kops.layer_fused(x, snd, rcv, mask, 30, w1=w1, b1=b1,
+                         w2=jnp.zeros((8, 8)))       # w2 without b2
+    with pytest.raises(ValueError):
+        kops.layer_fused(x, snd, rcv, mask, 30, w1=jnp.zeros((4, 8)), b1=b1)
+    with pytest.raises(ValueError):
+        kops.layer_fused(x, snd, rcv, mask, 30, w1=w1, b1=b1,
+                         self_coeff=jnp.zeros((7,)))
+
+
+def test_layer_fused_head_broadcast_src_weight():
+    """The (E, H) per-head lanes expand in-register, matching the oracle's
+    reshape-broadcast (the GAT satellite, shared with mp_pipeline)."""
+    e, d, n, h = 128, 16, 24, 4
+    r = np.random.default_rng(4)
+    x, snd, rcv, mask = _problem(e, d, n, seed=7)
+    sw = jnp.asarray(r.normal(size=(e, h)).astype(np.float32))
+    out = kops.mp_pipeline(x, snd, rcv, mask, n, stats=("sum",),
+                           src_weight=sw, edge_tile=32, num_banks=4)
+    ref = kops.mp_pipeline_ref(x, snd, rcv, mask, n, ("sum",), src_weight=sw)
+    np.testing.assert_allclose(out["sum"], ref["sum"], atol=2e-5, rtol=2e-5)
+    with pytest.raises(ValueError):        # width must divide D
+        kops.mp_pipeline(x, snd, rcv, mask, n, stats=("sum",),
+                         src_weight=sw[:, :3])
+
+
+# ---------------------------------------------------------------------------
+# scanned stacked-parameter forward == seed per-layer forward
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", MODELS)
+@pytest.mark.parametrize("packed", [False, True])
+def test_scanned_forward_matches_unrolled(name, packed):
+    """The tentpole contract: one lax.scan over stacked layer params
+    reproduces the seed per-layer forward BITWISE — alone and packed, for
+    every impl that reaches the models, every model (compared under jit,
+    how forwards actually execute: the scan body is compiled, so the
+    apples-to-apples baseline is the compiled unrolled loop — eager
+    op-by-op execution differs from *any* compiled forward in last-bit
+    FMA/fusion rounding, scan or not)."""
+    cfg = small_cfg(name)
+    model = make_gnn(cfg)
+    params = model.init(jax.random.PRNGKey(0), cfg)
+    g = (_graph(seed=3, n_graphs=3, node_pad=128, edge_pad=256)
+         if packed else _graph(seed=3))
+    for impl in ("fused", "pipeline", "fused_layer"):
+        un = jax.jit(lambda p, gg, i=impl: model.apply(
+            p, gg, cfg, DataflowConfig(impl=i, scan_layers=False)))(params, g)
+        sc = jax.jit(lambda p, gg, i=impl: model.apply(
+            p, gg, cfg, DataflowConfig(impl=i, scan_layers=True)))(params, g)
+        np.testing.assert_array_equal(np.asarray(un), np.asarray(sc),
+                                      err_msg=impl)
+        # eager unrolled (the literal seed execution) stays allclose
+        eager = model.apply(params, g, cfg,
+                            DataflowConfig(impl=impl, scan_layers=False))
+        np.testing.assert_allclose(eager, sc, atol=1e-5, rtol=1e-5,
+                                   err_msg=impl)
+
+
+@pytest.mark.parametrize("name", MODELS)
+@pytest.mark.parametrize("packed", [False, True])
+def test_fused_layer_impl_matches_unfused(name, packed):
+    """impl='fused_layer' (scanned, mirror path) == the unfused forward."""
+    cfg = small_cfg(name)
+    model = make_gnn(cfg)
+    params = model.init(jax.random.PRNGKey(1), cfg)
+    g = (_graph(seed=1, n_graphs=3, node_pad=128, edge_pad=256)
+         if packed else _graph(seed=1))
+    base = model.apply(params, g, cfg, DataflowConfig(impl="fused"))
+    fl = model.apply(params, g, cfg, DataflowConfig(impl="fused_layer"))
+    if name in BITWISE_MODELS:
+        np.testing.assert_array_equal(np.asarray(base), np.asarray(fl))
+    else:
+        np.testing.assert_allclose(base, fl, atol=1e-5, rtol=1e-5)
+
+
+@pytest.mark.parametrize("name", MODELS)
+def test_fused_layer_kernel_matches_unfused(name):
+    """Forced-kernel fused_layer (one launch per fusable layer, in
+    interpret mode) == the unfused forward, for the whole zoo — models
+    without a FusableUpdate keep the pipeline edge phase."""
+    cfg = small_cfg(name)
+    model = make_gnn(cfg)
+    params = model.init(jax.random.PRNGKey(4), cfg)
+    g = _graph(seed=1)
+    base = model.apply(params, g, cfg, DataflowConfig(impl="fused"))
+    mp._FORCE_PIPELINE_KERNEL = True
+    try:
+        fl = model.apply(params, g, cfg,
+                         DataflowConfig(impl="fused_layer", num_banks=4,
+                                        edge_tile=32))
+    finally:
+        mp._FORCE_PIPELINE_KERNEL = False
+    np.testing.assert_allclose(base, fl, atol=1e-4, rtol=1e-4)
+
+
+def test_scanned_forward_under_jit_and_grad():
+    """The scanned forward jits and differentiates (training still works)."""
+    cfg = small_cfg("gin")
+    model = make_gnn(cfg)
+    params = model.init(jax.random.PRNGKey(0), cfg)
+    g = _graph(seed=0)
+
+    @jax.jit
+    def loss(p):
+        return jnp.sum(model.apply(p, g, cfg, DataflowConfig()) ** 2)
+
+    grads = jax.grad(loss)(params)
+    leaves = jax.tree_util.tree_leaves(grads)
+    assert all(np.isfinite(np.asarray(l)).all() for l in leaves)
+    assert any(np.abs(np.asarray(l)).sum() > 0 for l in leaves)
+
+
+# ---------------------------------------------------------------------------
+# pass accounting: 1 pass per layer under fused_layer, scan-aware counting
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("scan", [False, True])
+@pytest.mark.parametrize("name,overhead", [("gin", 0), ("gcn", 1),
+                                           ("pna", 1)])
+def test_fused_layer_one_pass_per_layer(name, scan, overhead):
+    """The acceptance contract: impl='fused_layer' is ONE pass over the
+    edge stream per layer (plus the model's hoisted stats sweeps), and the
+    scanned forward reports the same figure as the unrolled one."""
+    cfg = small_cfg(name)
+    model = make_gnn(cfg)
+    params = model.init(jax.random.PRNGKey(0), cfg)
+    g = _graph(seed=0)
+    df = DataflowConfig(impl="fused_layer", scan_layers=scan)
+    with count_edge_passes() as ps:
+        jax.eval_shape(lambda p, gg: model.apply(p, gg, cfg, df), params, g)
+    assert ps.passes == cfg.num_layers + overhead
+
+
+def test_scan_layers_multiplies_body_passes():
+    """The scan wrapper's accounting: a body with K sweeps scanned L times
+    reports K*L, matching what the unrolled loop would count."""
+    g = _graph(seed=0)
+    x = jnp.asarray(np.random.default_rng(0).normal(
+        size=(g.n_node_pad, 8)).astype(np.float32))
+
+    def body(xx, _):
+        m = mp.segment_aggregate(xx[g.senders], g.receivers, g.n_node_pad,
+                                 kind="sum", edge_mask=g.edge_mask)
+        return m, None
+
+    with count_edge_passes() as ps:
+        scan_layers(body, x, jnp.arange(4), length=4)
+    # 2 per body (gather rewrite is not counted here — segment_aggregate
+    # alone is 1) => 1 * 4
+    assert ps.passes == 4
+
+
+def test_fused_layer_kernel_branch_counts_one_pass():
+    """The kernel branch of propagate (forced) is exactly one pass."""
+    g = _graph(seed=0)
+    x = jnp.asarray(np.random.default_rng(0).normal(
+        size=(g.n_node_pad, 8)).astype(np.float32))
+    r = np.random.default_rng(1)
+    et = jnp.asarray(r.normal(size=(g.n_edge_pad, 8)).astype(np.float32))
+    fus = FusableMessage(edge_term=et, activation="relu")
+    fu = FusableUpdate(
+        w1=jnp.asarray(r.normal(size=(8, 16)).astype(np.float32)),
+        b1=jnp.zeros((16,), jnp.float32),
+        w2=jnp.asarray(r.normal(size=(16, 8)).astype(np.float32)),
+        b2=jnp.zeros((8,), jnp.float32), self_coeff=1.5)
+
+    def message(src, dst, e, _et=et):
+        return jax.nn.relu(src + _et)
+
+    def update(xx, m):
+        z = 1.5 * xx + m
+        return jnp.maximum(z @ fu.w1 + fu.b1, 0.0) @ fu.w2 + fu.b2
+
+    mp._FORCE_PIPELINE_KERNEL = True
+    try:
+        with count_edge_passes() as ps:
+            out = propagate(g, x, message_fn=message, update_fn=update,
+                            aggregate="sum",
+                            dataflow=DataflowConfig(impl="fused_layer",
+                                                    edge_tile=32),
+                            fusable=fus, fusable_update=fu)
+    finally:
+        mp._FORCE_PIPELINE_KERNEL = False
+    assert ps.passes == 1
+    ref = propagate(g, x, message_fn=message, update_fn=update,
+                    aggregate="sum", dataflow=DataflowConfig(impl="fused"))
+    np.testing.assert_allclose(out, ref, atol=1e-4, rtol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# engine: DSE candidate grid, max_autotune knob, cache round-trip
+# ---------------------------------------------------------------------------
+
+def _make_engine(name, **kw):
+    cfg = small_cfg(name)
+    model = make_gnn(cfg)
+    params = model.init(jax.random.PRNGKey(0), cfg)
+    return GraphStreamEngine(cfg, params, **kw)
+
+
+def test_candidate_set_includes_fused_layer_and_grid_expands():
+    key = (64, 128, 1)
+    with _make_engine("gin") as eng:
+        cands = eng._candidate_dataflows(key)
+        assert any(df.impl == "pipeline" for df in cands)
+        # off-TPU fused_layer traces to the pipeline mirror — offering it
+        # would time a bitwise duplicate, so it only joins the set where
+        # the Pallas kernel path makes it a distinct program
+        assert not any(df.impl == "fused_layer" for df in cands)
+        assert len(cands) <= 5                 # default warmup stays cheap
+        mp._FORCE_PIPELINE_KERNEL = True
+        try:
+            forced = eng._candidate_dataflows(key)
+        finally:
+            mp._FORCE_PIPELINE_KERNEL = False
+        assert any(df.impl == "fused_layer" for df in forced)
+    with _make_engine("gin", max_autotune=24) as eng_wide:
+        wide = eng_wide._candidate_dataflows(key)
+        assert len(wide) == 24
+        combos = {(d.num_banks, d.edge_tile, d.impl) for d in wide}
+        assert len(combos) == 24               # no duplicate timings
+        assert {d.num_banks for d in wide} >= {1, 2, 4, 8}
+        assert {d.edge_tile for d in wide} >= {32, 64, 128}
+    with _make_engine("gin", max_autotune=2) as eng_narrow:
+        assert len(eng_narrow._candidate_dataflows(key)) == 2
+
+
+def test_autotune_cache_roundtrips_fused_layer(tmp_path):
+    """A cached impl='fused_layer' winner survives the JSON round-trip and
+    serves correctly on reload."""
+    cache = tmp_path / "autotune.json"
+    g = next(molhiv_like(seed=0, n_graphs=1))
+    with _make_engine("gin", max_batch=1, autotune=True,
+                      autotune_cache=str(cache)) as eng:
+        base = eng.process(g.node_feat, g.senders, g.receivers, g.edge_feat,
+                           g.node_pos)
+        (entry,) = eng.autotune_report().values()
+        assert entry["source"] == "autotuned"
+    saved = json.loads(cache.read_text())
+    (section,) = saved.values()
+    (bucket_entry,) = section.values()
+    bucket_entry["impl"] = "fused_layer"
+    cache.write_text(json.dumps(saved))
+    with _make_engine("gin", max_batch=1, autotune=True,
+                      autotune_cache=str(cache)) as eng2:
+        out = eng2.process(g.node_feat, g.senders, g.receivers, g.edge_feat,
+                           g.node_pos)
+        (entry2,) = eng2.autotune_report().values()
+        assert entry2["source"] == "cache"
+        assert entry2["impl"] == "fused_layer"
+    np.testing.assert_allclose(base, out, atol=1e-5, rtol=1e-5)

@@ -1,9 +1,11 @@
 """Bench-regression gate: compare a fresh ``benchmarks/run.py kernels``
-output against the committed ``BENCH_kernels.json``.
+output against the committed ``BENCH_kernels.json``, and validate the
+serving-path invariants of a ``BENCH_stream.json``.
 
   PYTHONPATH=src python -m benchmarks.check_regression \
       <baseline.json> <fresh.json> [--prefix kernel.mp.] \
-      [--threshold 1.25] [--calibrate kernel.mp.segment_sum]
+      [--threshold 1.25] [--calibrate kernel.mp.segment_sum] \
+      [--stream BENCH_stream.json] [--min-batch64-speedup 3.0]
 
 Fails (exit 1) when any gated row — rows whose name starts with
 ``--prefix`` and not with an ``--exclude`` prefix — is slower than the
@@ -11,6 +13,13 @@ committed baseline by more than ``--threshold`` (default 1.25, the
 ">25% slowdown" contract), or has disappeared from the fresh run
 (coverage regression). New rows are fine. Excluded rows still fail when
 missing (coverage is gated; their wall time is not).
+
+``--stream PATH`` additionally gates the serving trajectory (can be used
+alone, without the kernel baseline/fresh pair): the ROADMAP invariant is
+that batch-64 packed serving stays at least ``--min-batch64-speedup``
+(default 3x) over batch-1 graphs/s — the file's own
+``batch64_speedup_vs_batch1`` field, so the check is self-relative and
+machine-independent.
 
 ``--calibrate NAME`` divides every ratio by that row's own fresh/baseline
 ratio first, so a uniformly slower machine (CI runners vs the machine
@@ -36,10 +45,66 @@ def load_rows(path: str) -> dict:
     return rows
 
 
+def check_stream(path: str, min_speedup: float,
+                 baseline: str = None,
+                 min_aggregate_speedup: float = 1.8) -> list:
+    """Validate BENCH_stream.json invariants; return failure strings.
+
+    With ``baseline`` (a BENCH_stream.json from a SMALLER device pool on
+    the SAME machine — wall throughputs are not comparable across
+    machines), additionally gate the pool-scaling criterion: fresh
+    batch-64 ``aggregate_gps`` must be at least ``min_aggregate_speedup``
+    x the baseline's. This is the tripwire for regressions that serialize
+    the executor pool while still touching every device (per-device-busy
+    ``batch64_speedup_vs_batch1`` is blind to them).
+    """
+    with open(path) as f:
+        payload = json.load(f)
+    failures = []
+    speedup = payload.get("batch64_speedup_vs_batch1")
+    ndev = payload.get("num_devices", 1)
+    if speedup is None:
+        print(f"FAIL {path}: no batch64_speedup_vs_batch1 field "
+              "(batch 1/64 rows missing?)")
+        failures.append(f"{path}: batch64_speedup_vs_batch1 missing")
+    else:
+        ok = speedup >= min_speedup
+        print(f"{'ok  ' if ok else 'FAIL'} stream batch-64 speedup: "
+              f"{speedup:.2f}x vs batch-1 (floor {min_speedup:.2f}x, "
+              f"{ndev} device(s))")
+        if not ok:
+            failures.append(f"stream batch-64 speedup {speedup:.2f}x "
+                            f"< {min_speedup:.2f}x")
+    if baseline:
+        with open(baseline) as f:
+            base = json.load(f)
+        ndev_b = base.get("num_devices", 1)
+        try:
+            agg_f = payload["batch"]["64"]["aggregate_gps"]
+            agg_b = base["batch"]["64"]["aggregate_gps"]
+        except KeyError:
+            print(f"FAIL {path}/{baseline}: no batch-64 aggregate_gps "
+                  "to compare")
+            failures.append("aggregate_gps missing for pool-scaling gate")
+            return failures
+        ratio = agg_f / max(agg_b, 1e-9)
+        ok = ratio >= min_aggregate_speedup
+        print(f"{'ok  ' if ok else 'FAIL'} pool scaling: batch-64 "
+              f"aggregate {agg_f:.0f} g/s on {ndev} device(s) vs "
+              f"{agg_b:.0f} g/s on {ndev_b} -> {ratio:.2f}x "
+              f"(floor {min_aggregate_speedup:.2f}x)")
+        if not ok:
+            failures.append(f"pool aggregate speedup {ratio:.2f}x "
+                            f"< {min_aggregate_speedup:.2f}x")
+    return failures
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
-    ap.add_argument("baseline", help="committed BENCH_kernels.json")
-    ap.add_argument("fresh", help="freshly generated BENCH_kernels.json")
+    ap.add_argument("baseline", nargs="?", default=None,
+                    help="committed BENCH_kernels.json")
+    ap.add_argument("fresh", nargs="?", default=None,
+                    help="freshly generated BENCH_kernels.json")
     ap.add_argument("--prefix", default="kernel.mp.",
                     help="gate rows whose name starts with this")
     ap.add_argument("--threshold", type=float, default=1.25,
@@ -51,7 +116,40 @@ def main(argv=None) -> int:
                     metavar="PREFIX",
                     help="skip the time gate for rows starting with this "
                          "(repeatable; presence is still required)")
+    ap.add_argument("--stream", default=None, metavar="PATH",
+                    help="also validate this BENCH_stream.json's "
+                         "batch-64-vs-batch-1 invariant")
+    ap.add_argument("--min-batch64-speedup", type=float, default=3.0,
+                    help="stream gate: minimum batch-64/batch-1 graphs/s "
+                         "ratio (ROADMAP invariant)")
+    ap.add_argument("--stream-baseline", default=None, metavar="PATH",
+                    help="smaller-pool BENCH_stream.json from the SAME "
+                         "machine: gate --stream's batch-64 aggregate_gps "
+                         "against it (pool-scaling tripwire)")
+    ap.add_argument("--min-aggregate-speedup", type=float, default=1.8,
+                    help="pool-scaling gate: minimum fresh/baseline "
+                         "batch-64 aggregate_gps ratio")
     args = ap.parse_args(argv)
+
+    if bool(args.baseline) != bool(args.fresh):
+        ap.error("baseline and fresh must be given together")
+    if not args.baseline and not args.stream:
+        ap.error("nothing to gate: give baseline+fresh and/or --stream")
+
+    if args.stream_baseline and not args.stream:
+        ap.error("--stream-baseline needs --stream")
+    stream_failures = []
+    if args.stream:
+        stream_failures = check_stream(
+            args.stream, args.min_batch64_speedup,
+            baseline=args.stream_baseline,
+            min_aggregate_speedup=args.min_aggregate_speedup)
+    if not args.baseline:
+        if stream_failures:
+            print(f"\n{len(stream_failures)} stream gate failure(s)")
+            return 1
+        print("\nno bench regressions")
+        return 0
 
     base = load_rows(args.baseline)
     fresh = load_rows(args.fresh)
@@ -87,9 +185,9 @@ def main(argv=None) -> int:
         if not ok:
             failures.append(f"{name}: {ratio:.2f}x > {args.threshold:.2f}x")
 
+    failures += stream_failures
     if failures:
-        print(f"\n{len(failures)} bench regression(s) over "
-              f"{args.threshold:.2f}x:")
+        print(f"\n{len(failures)} bench regression(s):")
         for f in failures:
             print(f"  {f}")
         return 1

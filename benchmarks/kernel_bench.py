@@ -313,6 +313,25 @@ def vs_segment_ops_paths(csv: Csv):
             f"E={e},D={d},N={n},layer=gin(d->2d->d);interpret-mode "
             f"one-launch NT+MP kernel (structural)")
 
+    # the PNA scaler-contraction epilogue form: mean/std/max/min derived
+    # from the kernel's accumulators + the degree scalers contracted
+    # in-register, one launch for the whole PNA layer
+    deg = jax.ops.segment_sum(mask.astype(jnp.float32), rcv, num_segments=n)
+    scalers = jnp.stack([jnp.ones_like(deg), jnp.log(deg + 1.0),
+                         1.0 / jnp.maximum(jnp.log(deg + 1.0), 1e-3)], -1)
+    w_post = jnp.asarray(
+        rng.normal(size=(d + 3 * 4 * d, d)).astype(np.float32) * 0.1)
+    b_post = jnp.zeros((d,), jnp.float32)
+    t_pna = time_fn(
+        lambda: kops.layer_fused(x, snd, rcv, mask, n, w1=w_post, b1=b_post,
+                                 edge_term=et, phi_activation="relu",
+                                 scalers=scalers, degrees=deg,
+                                 out_activation="relu"),
+        warmup=1, iters=2)
+    csv.add("kernel.mp.vs_segment_ops.layer_fused_pna", t_pna * 1e6,
+            f"E={e},D={d},N={n},layer=pna(13d->d);interpret-mode "
+            f"one-launch scaler-epilogue kernel (structural)")
+
 
 def forward_trace_paths(csv: Csv):
     """Whole-forward trace+lower time at the paper's L=5: the scanned

@@ -1,81 +1,116 @@
-"""Real-time multi-queue streaming inference engine.
+"""Real-time multi-queue streaming inference engine (the serving facade).
 
 The paper's extended title is "Universal GNN Inference via Multi-Queue
-Streaming": graphs arrive consecutively, with zero preprocessing, and are
-served at batch sizes 1..1024 through one workload-agnostic dataflow. This
-engine is the software analogue of that serving frontend:
+Streaming": a bank of independent queues drains into parallel processing
+elements with no global synchronization. Since the scheduler/executor
+split (DESIGN.md §5) this module is a thin facade over exactly that
+decomposition:
 
-  * ``submit`` enqueues a raw COO graph (numpy, arrival order) and returns a
-    ``Future`` that resolves to that graph's own prediction;
-  * a ``GraphPacker`` first-fits arriving graphs into per-bucket open
-    batches (flush on max-batch or max-wait deadline — the paper's Fig. 7
-    batch sweep as a serving policy, see ``core/packing.py``);
-  * a dispatcher thread builds the padded ``GraphBatch`` on the host while
-    the previous batch is still executing on the device (double-buffered
-    staging: JAX dispatch is asynchronous, and the staging queue holds at
-    most two in-flight batches); input buffers are donated off-CPU;
-  * a completer thread waits for device results, un-packs per-graph outputs
-    and resolves futures; per-graph latency / queue-wait and per-batch
-    device time are recorded (warm-up excluded);
-  * each (node_pad, edge_pad, graph_pad) bucket gets a jit program compiled
-    once and — with ``autotune=True`` — its own ``(num_banks, edge_tile,
-    impl)`` dataflow picked by timing candidates on the first batch
-    (including the fused gather-phi-scatter ``impl='pipeline'`` edge phase
-    and the one-launch ``impl='fused_layer'`` step); ``max_autotune``
-    widens the candidate set from the cheap default toward the paper's
-    full Fig. 10 DSE grid; winners persist to a JSON cache so restarts
-    skip the search.
+  * a ``BatchScheduler`` (``core/scheduler.py``) — named multi-tenant
+    queues with weighted-fair draining, each layered over its own
+    ``GraphPacker`` with per-queue ``max_wait`` deadlines and batch
+    budgets; a bulk tenant cannot starve a latency-sensitive one;
+  * a ``DeviceExecutor`` pool (``core/executor.py``) — one executor per
+    ``jax.devices()`` entry, each owning a committed params replica, its
+    own per-bucket compiled-program namespace, and its own double-buffered
+    dispatch/complete thread pair; a placer thread assigns each flushed
+    batch to the executor with the least backlog;
+  * this facade — ``submit`` returns a ``Future`` per graph that resolves
+    *incrementally* the moment its batch completes on whichever device
+    served it (streaming results: ``drain`` is backpressure, not a
+    results barrier); ``process``/``drain``/``close``/``warmup_all`` keep
+    their original signatures, and ``StreamStats`` adds per-queue and
+    per-device breakdowns next to the global figures.
 
-``process`` keeps the original synchronous batch-1 API (submit + wait), and
-``drain``/``close`` give callers backpressure and shutdown. ``warmup_all``
-pre-compiles every configured bucket so first-hit latency spikes do not
-survive warm-up.
+Result parity is part of the contract: the same graph produces the
+identical output whichever queue it entered through and whichever device
+served it (the executors run the same program on committed replicas;
+tests/test_scheduler_executor.py pins 1-device vs N-device streams
+bitwise). Per-bucket autotuning is shared across the (homogeneous) pool
+and its JSON cache is namespaced by backend + device kind so winners
+tuned on one topology are never silently replayed on another.
 """
 
 from __future__ import annotations
 
 import json
 import os
-import queue
 import threading
 import time
 from concurrent.futures import Future
 from dataclasses import dataclass, field
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import numpy as np
 
+from repro.core.executor import CompletedBatch, DeviceExecutor
 from repro.core.graph import GraphBatch, build_graph_batch, pad_bucket
 from repro.core.message_passing import (DEFAULT_DATAFLOW, DataflowConfig,
                                         count_edge_passes)
 from repro.core.models import GNNConfig, make_gnn
-from repro.core.packing import GraphPacker, PackedBatch, PackItem
+from repro.core.packing import PackedBatch, PackItem
+from repro.core.scheduler import BatchScheduler, QueueConfig
+from repro.distributed.sharding import device_kind, replicate_params
 
 BucketKey = Tuple[int, int, int]        # (node_pad, edge_pad, graph_pad)
+
+DEFAULT_QUEUE = "default"
 
 
 @dataclass
 class StreamStats:
-    """Per-graph latency plus the queue/device breakdown.
+    """Per-graph latency plus queue/device breakdowns.
 
     ``latencies_s``/``queue_wait_s`` have one entry per *graph*;
     ``device_s``/``batch_sizes`` have one entry per dispatched *batch*
-    (``device_s`` is marginal device-busy time, so overlapped batches are not
-    double counted and ``sum(batch_sizes)/sum(device_s)`` is an honest
-    graphs-per-second figure even when batches are packed).
+    (``device_s`` is marginal device-busy time per executor, so overlapped
+    batches on one device are not double counted and
+    ``sum(batch_sizes)/sum(device_s)`` is graphs per device-busy-second —
+    across a pool, the per-device average). ``by_queue``/``by_device``
+    hold the same shape of stats sliced per tenant queue and per executor
+    device; ``aggregate_gps`` in ``summary()`` is the pool-level wall
+    figure (graphs / span from first dispatch to last completion).
     """
 
     latencies_s: List[float] = field(default_factory=list)
     queue_wait_s: List[float] = field(default_factory=list)
     device_s: List[float] = field(default_factory=list)
     batch_sizes: List[int] = field(default_factory=list)
+    t_first_dispatch: Optional[float] = None
+    t_last_done: Optional[float] = None
+    by_queue: Dict[str, "StreamStats"] = field(default_factory=dict)
+    by_device: Dict[str, "StreamStats"] = field(default_factory=dict)
 
-    def summary(self) -> Dict[str, float]:
+    def record_batch(self, *, latencies: Sequence[float],
+                     queue_waits: Sequence[float], device_s: float,
+                     batch_size: int, t_dispatch: float, t_done: float,
+                     queue: Optional[str] = None,
+                     device: Optional[str] = None) -> None:
+        self.latencies_s.extend(latencies)
+        self.queue_wait_s.extend(queue_waits)
+        self.device_s.append(device_s)
+        self.batch_sizes.append(batch_size)
+        if self.t_first_dispatch is None or t_dispatch < self.t_first_dispatch:
+            self.t_first_dispatch = t_dispatch
+        if self.t_last_done is None or t_done > self.t_last_done:
+            self.t_last_done = t_done
+        if queue is not None:
+            self.by_queue.setdefault(queue, StreamStats()).record_batch(
+                latencies=latencies, queue_waits=queue_waits,
+                device_s=device_s, batch_size=batch_size,
+                t_dispatch=t_dispatch, t_done=t_done)
+        if device is not None:
+            self.by_device.setdefault(device, StreamStats()).record_batch(
+                latencies=latencies, queue_waits=queue_waits,
+                device_s=device_s, batch_size=batch_size,
+                t_dispatch=t_dispatch, t_done=t_done)
+
+    def summary(self) -> Dict[str, Any]:
         if not self.latencies_s:
             return {}
         arr = np.array(self.latencies_s)
-        out = {
+        out: Dict[str, Any] = {
             "count": float(arr.size),
             "mean_ms": float(arr.mean() * 1e3),
             "p50_ms": float(np.percentile(arr, 50) * 1e3),
@@ -95,6 +130,21 @@ class StreamStats:
             out["mean_batch_size"] = float(np.mean(self.batch_sizes))
         else:
             out["throughput_gps"] = float(arr.size / arr.sum())
+        if (self.t_first_dispatch is not None
+                and self.t_last_done is not None
+                and self.t_last_done > self.t_first_dispatch):
+            # pool-level wall throughput: with D busy executors this is
+            # ~D x the per-device figure (the multi-device acceptance
+            # metric); on one device it tracks throughput_gps.
+            out["aggregate_gps"] = float(
+                sum(self.batch_sizes)
+                / (self.t_last_done - self.t_first_dispatch))
+        if self.by_queue:
+            out["queues"] = {name: s.summary()
+                             for name, s in sorted(self.by_queue.items())}
+        if self.by_device:
+            out["devices"] = {name: s.summary()
+                              for name, s in sorted(self.by_device.items())}
         return out
 
 
@@ -104,19 +154,6 @@ class _Request:
 
     future: Future
     record: bool
-
-
-@dataclass
-class _InFlight:
-    """A dispatched batch waiting for the device."""
-
-    batch: PackedBatch
-    out: Any
-    t_build_start: float
-    t_dispatch: float
-
-
-_SENTINEL = object()
 
 
 def _resolve(fut: Future, result=None, exc: Optional[BaseException] = None
@@ -136,7 +173,7 @@ def _resolve(fut: Future, result=None, exc: Optional[BaseException] = None
 
 
 class GraphStreamEngine:
-    """Compile-once-per-bucket, multi-queue batched streaming inference."""
+    """Compile-once-per-bucket serving: scheduler -> executor-pool facade."""
 
     def __init__(self, cfg: GNNConfig, params,
                  dataflow: DataflowConfig = DEFAULT_DATAFLOW,
@@ -150,7 +187,9 @@ class GraphStreamEngine:
                  autotune: bool = False,
                  autotune_cache: Optional[str] = None,
                  max_autotune: int = 5,
-                 max_pending: int = 4096):
+                 max_pending: int = 4096,
+                 queues: Optional[Sequence[QueueConfig]] = None,
+                 devices: Optional[Sequence[Any]] = None):
         self.cfg = cfg
         self.params = params
         self.dataflow = dataflow
@@ -161,16 +200,42 @@ class GraphStreamEngine:
         # dataflow property), recorded once at trace time per bucket
         self.edge_passes: Dict[BucketKey, int] = {}
 
-        self._packer = GraphPacker(
-            max_batch=max_batch, max_wait_s=max_wait_ms * 1e-3,
-            buckets=buckets, max_nodes=max_nodes_per_batch,
-            max_edges=max_edges_per_batch)
+        queue_cfgs = (tuple(queues) if queues is not None
+                      else (QueueConfig(DEFAULT_QUEUE),))
+        self._scheduler = BatchScheduler(
+            queue_cfgs,
+            default_max_batch=max_batch,
+            default_max_wait_s=max_wait_ms * 1e-3,
+            buckets=buckets,
+            default_max_nodes=max_nodes_per_batch,
+            default_max_edges=max_edges_per_batch)
         self._eager_flush = eager_flush
-        self._max_pending = max_pending
+        # admission backpressure is PER TENANT: a bulk queue pinned at its
+        # cap must not block a latency queue's submissions
+        self._queue_caps = {qc.name: (qc.max_pending
+                                      if qc.max_pending is not None
+                                      else max_pending)
+                            for qc in queue_cfgs}
+        self._pending_by_queue = {qc.name: 0 for qc in queue_cfgs}
 
-        # program cache + autotune state (name `_compiled` is part of the
+        # executor pool: one per device, params committed per device
+        self._devices = (list(devices) if devices is not None
+                         else list(jax.devices()))
+        if not self._devices:
+            raise ValueError("at least one device is required")
+        self._executors = [
+            DeviceExecutor(device=d, index=i, params=p,
+                           build_fn=self._build_batch,
+                           program_fn=self._ensure_program,
+                           unpack_fn=self._unpack,
+                           on_complete=self._handle_completion,
+                           on_fatal=self._handle_fatal)
+            for i, (d, p) in enumerate(
+                zip(self._devices, replicate_params(params, self._devices)))]
+
+        # autotune state; compiled programs live per executor (the
+        # ``_compiled`` facade below merges them — its name is part of the
         # observable surface: tests assert compile-count stays bounded)
-        self._compiled: Dict[BucketKey, Any] = {}
         self._compile_lock = threading.RLock()
         self._autotune = autotune
         self._autotune_cache = autotune_cache
@@ -181,34 +246,62 @@ class GraphStreamEngine:
 
         # async machinery (threads started lazily on first submit)
         self._cv = threading.Condition()
-        self._ready: List[PackedBatch] = []
-        self._stage: "queue.Queue[Any]" = queue.Queue(maxsize=2)
         self._pending = 0          # submitted graphs not yet completed
-        self._inflight = 0         # staged/executing batches
         self._drain_requested = False
         self._closed = False
         self._stopped = False
-        self._dispatcher: Optional[threading.Thread] = None
-        self._completer: Optional[threading.Thread] = None
+        self._placer: Optional[threading.Thread] = None
 
     # ------------------------------------------------------------------
     # public API
     # ------------------------------------------------------------------
 
+    @property
+    def queue_names(self) -> Tuple[str, ...]:
+        return self._scheduler.queue_names
+
+    @property
+    def num_devices(self) -> int:
+        return len(self._executors)
+
+    @property
+    def _compiled(self) -> Dict[BucketKey, Any]:
+        """Merged per-executor program caches (observable compile surface).
+
+        A bucket appears once it is compiled on at least one executor; the
+        per-device namespaces themselves live on the executors."""
+        merged: Dict[BucketKey, Any] = {}
+        for ex in self._executors:
+            merged.update(ex.compiled)
+        return merged
+
     def submit(self, node_feat: np.ndarray, senders: np.ndarray,
                receivers: np.ndarray, edge_feat: Optional[np.ndarray] = None,
                node_pos: Optional[np.ndarray] = None,
-               record: bool = True) -> Future:
+               record: bool = True, queue: Optional[str] = None) -> Future:
         """Enqueue one arriving graph; the Future resolves to ITS prediction.
 
         Graph-level tasks resolve to a ``(out_dim,)`` vector; node-level
-        tasks to the ``(n_nodes, out_dim)`` rows of this graph only.
-        Blocks (backpressure) while ``max_pending`` graphs are outstanding.
+        tasks to the ``(n_nodes, out_dim)`` rows of this graph only. The
+        future resolves the moment its batch completes on whichever device
+        served it — results stream; ``drain`` is not a results barrier.
+        ``queue`` names the tenant queue (see ``QueueConfig``); ``None``
+        routes to the engine's default tenant — the FIRST configured
+        queue — which also serves ``process``/``warmup`` traffic. A named
+        queue must exist exactly (no silent remapping: a typo raises).
+        Blocks (backpressure) while THIS tenant's ``max_pending`` graphs
+        are outstanding — one queue at its cap never blocks another's
+        admission.
         """
         if edge_feat is None and self.cfg.edge_feat_dim != 1:
             raise ValueError("model expects edge features")
         if self._closed:        # don't spin up worker threads just to reject
             raise RuntimeError("engine is closed")
+        if queue is None:
+            queue = self._scheduler.queue_names[0]
+        elif queue not in self._scheduler.queue_names:
+            raise KeyError(f"unknown queue '{queue}'; "
+                           f"have {sorted(self._scheduler.queue_names)}")
         fut: Future = Future()
         item = PackItem(node_feat=node_feat, senders=senders,
                         receivers=receivers, edge_feat=edge_feat,
@@ -216,13 +309,15 @@ class GraphStreamEngine:
                         payload=_Request(future=fut, record=record),
                         t_arrival=time.perf_counter())
         self._ensure_threads()
+        cap = self._queue_caps[queue]
         with self._cv:
-            self._cv.wait_for(lambda: self._pending < self._max_pending
-                              or self._closed)
+            self._cv.wait_for(
+                lambda: self._pending_by_queue[queue] < cap or self._closed)
             if self._closed:
                 raise RuntimeError("engine is closed")
             self._pending += 1
-            self._ready.extend(self._packer.add(item))
+            self._pending_by_queue[queue] += 1
+            self._scheduler.add(queue, item, now=item.t_arrival)
             self._cv.notify_all()
         return fut
 
@@ -235,9 +330,14 @@ class GraphStreamEngine:
                            record=record).result()
 
     def drain(self, timeout: Optional[float] = None) -> None:
-        """Flush all open batches and wait until every submission completes."""
+        """Flush all open batches and wait until every submission completes.
+
+        Futures resolve incrementally as their batches complete — drain is
+        a convenience barrier for callers that want the whole stream done,
+        not a prerequisite for reading any individual result.
+        """
         with self._cv:
-            if self._dispatcher is None:        # nothing ever submitted
+            if self._placer is None:            # nothing ever submitted
                 return
             self._drain_requested = True
             self._cv.notify_all()
@@ -249,18 +349,18 @@ class GraphStreamEngine:
     def close(self) -> None:
         """Drain, stop the worker threads, and reject further submissions.
 
-        Idempotent, and safe after a dispatcher crash (which marks the
-        engine closed itself): the completer still gets its sentinel.
+        Idempotent, and safe after a worker crash (which marks the engine
+        closed itself): each executor still gets its sentinel.
         """
         with self._cv:
             self._closed = True
             already_stopped = self._stopped
             self._stopped = True
             self._cv.notify_all()
-        if self._dispatcher is not None and not already_stopped:
-            self._dispatcher.join()
-            self._stage.put(_SENTINEL)
-            self._completer.join()
+        if self._placer is not None and not already_stopped:
+            self._placer.join()
+            for ex in self._executors:
+                ex.stop()
 
     def __enter__(self) -> "GraphStreamEngine":
         return self
@@ -276,30 +376,38 @@ class GraphStreamEngine:
 
     def warmup_all(self, pairs: Optional[List[Tuple[int, int]]] = None
                    ) -> List[BucketKey]:
-        """Pre-compile (and, with autotune, tune) every configured bucket.
+        """Pre-compile (and, with autotune, tune) every configured bucket
+        on EVERY executor.
 
-        ``warmup`` only touches the arriving graph's bucket, so the first
-        graph landing in any other bucket still pays compile latency. This
-        compiles the full table up front. ``pairs`` lists the
-        (node_pad, edge_pad) combinations to prepare; the default pairs each
-        node bucket with the next edge bucket up (``(b, 2b)``) — the shape a
-        sparse graph stream (E ≈ 2N) lands in. Returns the bucket keys.
+        ``warmup`` only touches the arriving graph's bucket on one device,
+        so the first graph landing in any other bucket — or placed on any
+        other executor — still pays compile latency. This compiles the
+        full (bucket x executor) table up front. ``pairs`` lists the
+        (node_pad, edge_pad) combinations to prepare; the default pairs
+        each node bucket with the next edge bucket up (``(b, 2b)``) — the
+        shape a sparse graph stream (E ≈ 2N) lands in. Buckets are
+        prepared for every distinct per-queue ``graph_pad``. Returns the
+        bucket keys.
         """
         if pairs is None:
             pairs = [(b, pad_bucket(2 * b, self.buckets))
                      for b in self.buckets]
         keys = []
         for node_pad, edge_pad in pairs:
-            key = (node_pad, edge_pad, self._packer.max_batch)
-            g = self._synthetic_batch(node_pad, edge_pad,
-                                      self._packer.max_batch)
-            run = self._ensure_program(key, g)
-            jax.block_until_ready(run(self.params, g))
-            keys.append(key)
+            for graph_pad in self._scheduler.graph_pads():
+                key = (node_pad, edge_pad, graph_pad)
+                for ex in self._executors:
+                    # fresh batch per executor: the compiled program
+                    # donates its graph argument off-CPU, so a shared
+                    # batch would hand executor 2 deleted buffers
+                    ex.warm(key, self._synthetic_batch(node_pad, edge_pad,
+                                                       graph_pad))
+                keys.append(key)
         return keys
 
     def autotune_report(self) -> Dict[str, Dict[str, Any]]:
-        """Per-bucket chosen (num_banks, edge_tile) + candidate timings."""
+        """Per-bucket chosen (num_banks, edge_tile, impl) + candidate
+        timings + the device each bucket was tuned on."""
         report: Dict[str, Dict[str, Any]] = {}
         with self._compile_lock:
             for key in self._compiled:
@@ -317,128 +425,125 @@ class GraphStreamEngine:
         return report
 
     # ------------------------------------------------------------------
-    # worker threads
+    # placer thread: weighted-fair drain -> least-backlog placement
     # ------------------------------------------------------------------
 
     def _ensure_threads(self) -> None:
-        if self._dispatcher is not None:
+        if self._placer is not None:
             return
         with self._cv:
-            if self._dispatcher is not None:
+            if self._placer is not None:
                 return
-            self._dispatcher = threading.Thread(
-                target=self._dispatch_loop, name="flowgnn-dispatch",
-                daemon=True)
-            self._completer = threading.Thread(
-                target=self._complete_loop, name="flowgnn-complete",
-                daemon=True)
-            self._dispatcher.start()
-            self._completer.start()
+            for ex in self._executors:
+                ex.start()
+            self._placer = threading.Thread(
+                target=self._place_loop, name="flowgnn-placer", daemon=True)
+            self._placer.start()
 
-    def _dispatch_loop(self) -> None:
+    def _place_loop(self) -> None:
         try:
-            self._dispatch_loop_inner()
+            self._place_loop_inner()
         except BaseException as exc:   # never leave submitters hanging
-            with self._cv:
-                self._closed = True
-                stranded = self._ready + self._packer.flush_all()
-                self._ready = []
-                self._pending -= sum(pb.num_graphs for pb in stranded)
-                self._cv.notify_all()
-            for pb in stranded:
-                for it in pb.items:
-                    _resolve(it.payload.future, exc=exc)
+            self._fail_scheduled(exc)
             raise
 
-    def _dispatch_loop_inner(self) -> None:
+    def _place_loop_inner(self) -> None:
         while True:
-            batch: Optional[PackedBatch] = None
+            picked: Optional[Tuple[str, PackedBatch]] = None
             with self._cv:
-                while batch is None:
-                    if self._ready:
-                        batch = self._ready.pop(0)
-                        break
+                while picked is None:
                     now = time.perf_counter()
-                    expired = self._packer.poll(now)
-                    if expired:
-                        self._ready.extend(expired)
-                        continue
+                    self._scheduler.poll(now)
+                    # pop from the scheduler only while some executor has
+                    # pipeline room: excess backlog must queue HERE, where
+                    # weighted fairness applies — not FIFO in an executor
+                    # inbox where a late latency batch would sit behind
+                    # the whole bulk backlog
+                    has_cap = any(ex.has_capacity for ex in self._executors)
+                    if has_cap:
+                        picked = self._scheduler.next_batch()
+                        if picked is not None:
+                            break
                     if self._drain_requested or self._closed:
-                        flushed = self._packer.flush_all()
-                        if flushed:
-                            self._ready.extend(flushed)
+                        if self._scheduler.open_batches:
+                            self._scheduler.poll(float("inf"))
                             continue
-                        if self._closed:
+                        if self._closed and not self._scheduler.ready_batches:
                             return
-                    if (self._eager_flush and self._inflight == 0
-                            and self._packer.open_batches):
-                        # device is idle: serving the oldest open batch NOW
-                        # beats waiting out its deadline (adaptive batching:
-                        # under load, batches fill while the device is busy)
-                        batch = self._packer.flush_oldest()
+                        # ready batches remain, no capacity: wait below
+                    elif (self._eager_flush and has_cap
+                            and self._scheduler.open_batches
+                            and any(ex.idle for ex in self._executors)):
+                        # an executor is idle: serving the oldest open batch
+                        # NOW beats waiting out its deadline (adaptive
+                        # batching: under load, batches fill while every
+                        # device is busy)
+                        picked = self._scheduler.flush_oldest_open()
                         break
-                    deadline = self._packer.next_deadline()
+                    deadline = self._scheduler.next_deadline()
                     self._cv.wait(timeout=None if deadline is None
                                   else max(deadline - now, 0.0))
-            self._dispatch(batch)
+            queue_name, pb = picked
+            # least-backlog placement across executors with pipeline room
+            # (ties: lowest index); dead executors are never chosen while
+            # an alive one exists
+            cands = ([ex for ex in self._executors if ex.has_capacity]
+                     or [ex for ex in self._executors if not ex.dead]
+                     or self._executors)
+            ex = min(cands, key=lambda e: (e.backlog, e.index))
+            ex.submit(queue_name, pb)
 
-    def _dispatch(self, pb: PackedBatch) -> None:
-        t_build_start = time.perf_counter()
-        try:
-            g = pb.build(pos_dim=self.cfg.pos_dim)
-            run = self._ensure_program(pb.bucket, g)
-            out = run(self.params, g)          # asynchronous device dispatch
-        except Exception as exc:               # resolve futures, stay alive
-            with self._cv:
+    def _fail_scheduled(self, exc: BaseException) -> None:
+        """Placer died: close the engine and fail everything still queued."""
+        with self._cv:
+            self._closed = True
+            stranded = self._scheduler.flush_all()
+            for queue_name, pb in stranded:
                 self._pending -= pb.num_graphs
-                self._cv.notify_all()
+                if queue_name in self._pending_by_queue:
+                    self._pending_by_queue[queue_name] -= pb.num_graphs
+            self._cv.notify_all()
+        for _, pb in stranded:
             for it in pb.items:
                 _resolve(it.payload.future, exc=exc)
-            return
-        with self._cv:
-            self._inflight += 1
-        # blocks while two batches are already staged: the double buffer —
-        # host packing for batch k+2 overlaps device execution of batch k
-        self._stage.put(_InFlight(pb, out, t_build_start,
-                                  time.perf_counter()))
 
-    def _complete_loop(self) -> None:
-        last_ready = 0.0
-        while True:
-            item = self._stage.get()
-            if item is _SENTINEL:
-                return
-            pb = item.batch
-            err: Optional[Exception] = None
-            results: List[np.ndarray] = []
-            try:
-                out_np = np.asarray(jax.block_until_ready(item.out))
-                results = self._unpack(pb, out_np)
-            except Exception as exc:
-                err = exc
-            t_ready = time.perf_counter()
-            # marginal device time: don't double-count overlapped batches
-            device_s = t_ready - max(item.t_dispatch, last_ready)
-            last_ready = t_ready
-            with self._cv:
-                self._inflight -= 1
-                self._pending -= pb.num_graphs
-                if err is None:
-                    recorded = [it for it in pb.items if it.payload.record]
-                    if recorded:
-                        self.stats.device_s.append(device_s)
-                        self.stats.batch_sizes.append(len(recorded))
-                        for it in recorded:
-                            self.stats.latencies_s.append(
-                                t_ready - it.t_arrival)
-                            self.stats.queue_wait_s.append(
-                                item.t_build_start - it.t_arrival)
-                self._cv.notify_all()
-            for i, it in enumerate(pb.items):
-                if err is not None:
-                    _resolve(it.payload.future, exc=err)
-                else:
-                    _resolve(it.payload.future, results[i])
+    # ------------------------------------------------------------------
+    # executor callbacks (dispatch threads / completer threads)
+    # ------------------------------------------------------------------
+
+    def _build_batch(self, pb: PackedBatch) -> GraphBatch:
+        return pb.build(pos_dim=self.cfg.pos_dim)
+
+    def _handle_completion(self, ex: DeviceExecutor,
+                           done: CompletedBatch) -> None:
+        pb = done.batch
+        with self._cv:
+            self._pending -= pb.num_graphs
+            if done.queue in self._pending_by_queue:
+                self._pending_by_queue[done.queue] -= pb.num_graphs
+            if done.err is None:
+                recorded = [it for it in pb.items if it.payload.record]
+                if recorded:
+                    self.stats.record_batch(
+                        latencies=[done.t_ready - it.t_arrival
+                                   for it in recorded],
+                        queue_waits=[done.t_build_start - it.t_arrival
+                                     for it in recorded],
+                        device_s=done.device_s, batch_size=len(recorded),
+                        t_dispatch=done.t_dispatch, t_done=done.t_ready,
+                        queue=done.queue, device=ex.label)
+            self._cv.notify_all()
+        for i, it in enumerate(pb.items):
+            if done.err is not None:
+                _resolve(it.payload.future, exc=done.err)
+            else:
+                _resolve(it.payload.future, done.results[i])
+
+    def _handle_fatal(self, ex: DeviceExecutor, exc: BaseException) -> None:
+        # an executor loop died unexpectedly: stop accepting work and fail
+        # whatever the scheduler still holds (in-flight batches on other
+        # executors still complete normally)
+        self._fail_scheduled(exc)
 
     def _unpack(self, pb: PackedBatch, out_np: np.ndarray
                 ) -> List[np.ndarray]:
@@ -450,7 +555,7 @@ class GraphStreamEngine:
         return [np.array(out_np[i]) for i in range(pb.num_graphs)]
 
     # ------------------------------------------------------------------
-    # program cache + per-bucket autotuning
+    # per-executor program cache + shared per-bucket autotuning
     # ------------------------------------------------------------------
 
     def _make_run(self, df: DataflowConfig, donate: bool = True):
@@ -465,20 +570,36 @@ class GraphStreamEngine:
         return jax.jit(lambda params, graph: apply(params, graph, cfg, df),
                        donate_argnums=argnums)
 
-    def _ensure_program(self, key: BucketKey, g: GraphBatch):
+    def _ensure_program(self, ex: DeviceExecutor, key: BucketKey,
+                        g: GraphBatch):
+        """The jitted program for ``key`` on executor ``ex``.
+
+        The tuned dataflow is shared across the pool (first executor to
+        hit a bucket tunes it on its own device — the pool is homogeneous,
+        one entry per ``jax.devices()`` topology); the compiled program is
+        per executor, so each device owns its namespace of executables.
+        """
+        # lock-free fast path: ex.compiled is written only under the
+        # compile lock and only by this executor's bucket miss, so a hit
+        # here never blocks behind another bucket's autotune search
+        run = ex.compiled.get(key)
+        if run is not None:
+            return run
         with self._compile_lock:
-            if key in self._compiled:
-                return self._compiled[key]
+            run = ex.compiled.get(key)
+            if run is not None:
+                return run
             df = self._tuned.get(key)
             if df is None and self._autotune:
-                df = self._run_autotune(key, g)
+                df = self._run_autotune(ex, key, g)
             if df is None:
                 df = self.dataflow
             run = self._make_run(df)
-            with count_edge_passes() as ps:
-                jax.eval_shape(run, self.params, g)
-            self.edge_passes[key] = ps.passes
-            self._compiled[key] = run
+            if key not in self.edge_passes:
+                with count_edge_passes() as ps:
+                    jax.eval_shape(run, ex.params, g)
+                self.edge_passes[key] = ps.passes
+            ex.compiled[key] = run
             return run
 
     def _candidate_dataflows(self, key: BucketKey) -> List[DataflowConfig]:
@@ -537,17 +658,18 @@ class GraphStreamEngine:
                                 num_banks=b, edge_tile=t, impl=impl))
         return cands[:self._max_autotune]
 
-    def _run_autotune(self, key: BucketKey, g: GraphBatch) -> DataflowConfig:
+    def _run_autotune(self, ex: DeviceExecutor, key: BucketKey,
+                      g: GraphBatch) -> DataflowConfig:
         """Time up to ``max_autotune`` (num_banks, edge_tile, impl) DSE
-        candidates on the first batch of this bucket; cache and persist
-        the winner."""
+        candidates on the first batch of this bucket (on the executor that
+        received it); cache and persist the winner for the whole pool."""
         timings: Dict[str, float] = {}
         best_df, best_t = None, float("inf")
         for df in self._candidate_dataflows(key):
             run = self._make_run(df, donate=False)
             try:
-                jax.block_until_ready(run(self.params, g))   # compile
-                t = min(self._time_once(run, g) for _ in range(3))
+                jax.block_until_ready(run(ex.params, g))   # compile
+                t = min(self._time_once(run, ex.params, g) for _ in range(3))
             except Exception:
                 continue                   # candidate invalid for this shape
             name = f"banks{df.num_banks}_tile{df.edge_tile}"
@@ -559,16 +681,17 @@ class GraphStreamEngine:
         if best_df is None:                # every candidate failed: fall back
             best_df = self.dataflow
         self._tuned[key] = best_df
-        log: Dict[str, Any] = {"candidates_us": timings}
+        log: Dict[str, Any] = {"candidates_us": timings,
+                               "device": ex.label}
         if np.isfinite(best_t):
             log["best_us"] = best_t * 1e6
         self._tune_log[key] = log
         self._save_autotune_cache()
         return best_df
 
-    def _time_once(self, run, g: GraphBatch) -> float:
+    def _time_once(self, run, params, g: GraphBatch) -> float:
         t0 = time.perf_counter()
-        jax.block_until_ready(run(self.params, g))
+        jax.block_until_ready(run(params, g))
         return time.perf_counter() - t0
 
     # ------------------------------------------------------------------
@@ -576,10 +699,16 @@ class GraphStreamEngine:
     # ------------------------------------------------------------------
 
     def _cache_fingerprint(self) -> str:
-        """Workload identity for the autotune cache: winners tuned for one
-        model/dataflow must never be applied to another sharing the file."""
+        """Workload + topology identity for the autotune cache.
+
+        Winners tuned for one model/dataflow must never be applied to
+        another sharing the file — and winners tuned on one backend/device
+        topology (CPU vs TPU generation, say) must not be silently reused
+        on another, so the backend and device kind are part of the key.
+        """
         c, d = self.cfg, self.dataflow
-        return (f"{c.model}-l{c.num_layers}-h{c.hidden_dim}-{c.task}-"
+        topo = f"{jax.default_backend()}:{device_kind(self._devices[0])}"
+        return (f"{topo}/{c.model}-l{c.num_layers}-h{c.hidden_dim}-{c.task}-"
                 f"{d.impl}{'-sp' if d.single_pass else ''}")
 
     def _load_autotune_cache(self) -> None:

@@ -1,0 +1,306 @@
+"""Per-device executor: the processing-element half of the serving stack.
+
+The paper's architecture drains its queue bank into parallel processing
+elements with no global synchronization (GenGNN scales the same
+decomposition across PEs). Here a ``DeviceExecutor`` is one PE: it owns
+exactly one ``jax.Device``, a params copy committed to that device, a
+per-bucket compiled-program cache, and its own dispatch/complete thread
+pair with a depth-2 staging queue — so host packing for batch k+2 overlaps
+device execution of batch k *per device*, and D devices run D independent
+pipelines (DESIGN.md §5).
+
+The executor knows nothing about queues, futures, stats, or autotuning:
+the engine injects
+
+  * ``build_fn(pb)``                 — PackedBatch -> padded GraphBatch
+    (host numpy work, runs on this executor's dispatch thread),
+  * ``program_fn(ex, key, graph)``   — returns the jitted program for a
+    bucket on THIS executor (the engine's compile/autotune cache,
+    namespaced per device),
+  * ``on_complete(ex, done)``        — called from this executor's
+    completer thread with a ``CompletedBatch`` (results or error); the
+    engine resolves futures and records stats there,
+  * ``on_fatal(ex, exc)``            — a worker loop died unexpectedly.
+
+``backlog`` (graphs submitted here and not yet completed) is what the
+engine's least-backlog placement reads; ``device_s`` in ``CompletedBatch``
+is *marginal* device-busy time per executor, so overlapped batches on one
+device are not double-counted and per-device throughput sums honestly.
+"""
+
+from __future__ import annotations
+
+import queue
+import threading
+import time
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+from repro.core.packing import PackedBatch
+
+BucketKey = Tuple[int, int, int]
+
+_SENTINEL = object()
+
+
+@dataclass
+class _InFlight:
+    """A dispatched batch waiting for this executor's device."""
+
+    queue: str
+    batch: PackedBatch
+    out: Any
+    t_build_start: float
+    t_dispatch: float
+
+
+@dataclass
+class CompletedBatch:
+    """Everything the engine needs to resolve one batch."""
+
+    queue: str
+    batch: PackedBatch
+    results: Optional[List[np.ndarray]]       # None iff err is set
+    err: Optional[BaseException]
+    t_build_start: float
+    t_dispatch: float
+    t_ready: float
+    device_s: float                            # marginal device-busy time
+
+
+class DeviceExecutor:
+    """One device's double-buffered dispatch/complete pipeline."""
+
+    def __init__(self, *, device, index: int, params,
+                 build_fn: Callable[[PackedBatch], Any],
+                 program_fn: Callable[["DeviceExecutor", BucketKey, Any], Any],
+                 unpack_fn: Callable[[PackedBatch, np.ndarray],
+                                     List[np.ndarray]],
+                 on_complete: Callable[["DeviceExecutor", CompletedBatch],
+                                       None],
+                 on_fatal: Callable[["DeviceExecutor", BaseException], None]):
+        self.device = device
+        self.index = index
+        self.params = params                   # committed to ``device``
+        self.label = f"{device.platform}:{device.id}"
+        # per-device program namespace: {bucket: jitted program}. The
+        # engine's ``_compiled`` facade merges these for the observable
+        # compile-count surface.
+        self.compiled: Dict[BucketKey, Any] = {}
+
+        self._build_fn = build_fn
+        self._program_fn = program_fn
+        self._unpack_fn = unpack_fn
+        self._on_complete = on_complete
+        self._on_fatal = on_fatal
+
+        self._inbox: "queue.Queue[Any]" = queue.Queue()
+        # depth-2 staging = the double buffer: one batch executing, one
+        # dispatched behind it; a third dispatch blocks until completion
+        self._staging: "queue.Queue[Any]" = queue.Queue(maxsize=2)
+        self._backlog = 0
+        self._queued_batches = 0
+        self._lock = threading.Lock()
+        self._dispatcher: Optional[threading.Thread] = None
+        self._completer: Optional[threading.Thread] = None
+        self._stopped = False
+        self._dead = False        # a worker loop died; fail, don't block
+
+    # -- lifecycle --------------------------------------------------------
+
+    def start(self) -> None:
+        if self._dispatcher is not None:
+            return
+        self._dispatcher = threading.Thread(
+            target=self._dispatch_loop, daemon=True,
+            name=f"flowgnn-dispatch-{self.label}")
+        self._completer = threading.Thread(
+            target=self._complete_loop, daemon=True,
+            name=f"flowgnn-complete-{self.label}")
+        self._dispatcher.start()
+        self._completer.start()
+
+    def stop(self) -> None:
+        """Finish queued work, then stop both threads. Idempotent, and
+        safe after a worker-loop death (no deadlock on a full staging
+        queue; leftover batches fail rather than strand)."""
+        if self._dispatcher is None or self._stopped:
+            return
+        self._stopped = True
+        self._inbox.put(_SENTINEL)
+        self._dispatcher.join()
+        while True:
+            try:
+                self._staging.put(_SENTINEL, timeout=1.0)
+                break
+            except queue.Full:
+                if self._dead:       # completer is gone; drain below
+                    break
+        self._completer.join()
+        self._drain_queues(RuntimeError("executor stopped after worker "
+                                        "death"))
+
+    # -- placement interface ---------------------------------------------
+
+    @property
+    def backlog(self) -> int:
+        """Graphs submitted to this executor and not yet completed."""
+        with self._lock:
+            return self._backlog
+
+    @property
+    def queued_batches(self) -> int:
+        """Batches submitted here and not yet completed (building + staged
+        + executing + inbox). The placer bounds this at ``PIPELINE_DEPTH``
+        so excess backlog queues in the *fair* scheduler, not in a FIFO
+        inbox where tenant weights no longer apply."""
+        with self._lock:
+            return self._queued_batches
+
+    # one building on the dispatch thread + two in the staging double
+    # buffer + one completing: enough to keep the device saturated with
+    # zero inbox FIFO wait beyond it
+    PIPELINE_DEPTH = 4
+
+    @property
+    def has_capacity(self) -> bool:
+        return not self._dead and self.queued_batches < self.PIPELINE_DEPTH
+
+    @property
+    def idle(self) -> bool:
+        return self.backlog == 0
+
+    @property
+    def dead(self) -> bool:
+        return self._dead
+
+    def submit(self, queue_name: str, pb: PackedBatch) -> None:
+        """Hand one flushed batch to this executor (engine placer thread)."""
+        with self._lock:
+            self._backlog += pb.num_graphs
+            self._queued_batches += 1
+        if self._dead:       # worker died since placement: fail, don't strand
+            self._fail_batch(queue_name, pb,
+                             RuntimeError("executor worker died"))
+            return
+        self._inbox.put((queue_name, pb))
+        if self._dead:       # raced a dying worker past its drain: re-drain
+            self._drain_queues(RuntimeError("executor worker died"))
+
+    def warm(self, key: BucketKey, g) -> None:
+        """Compile (and run once) the bucket's program on this device."""
+        run = self._program_fn(self, key, g)
+        jax.block_until_ready(run(self.params, g))
+
+    # -- worker loops -----------------------------------------------------
+
+    def _finish(self, done: CompletedBatch) -> None:
+        with self._lock:
+            self._backlog -= done.batch.num_graphs
+            self._queued_batches -= 1
+        self._on_complete(self, done)
+
+    def _fail_batch(self, queue_name: str, pb: PackedBatch,
+                    exc: BaseException) -> None:
+        t = time.perf_counter()
+        self._finish(CompletedBatch(
+            queue=queue_name, batch=pb, results=None, err=exc,
+            t_build_start=t, t_dispatch=t, t_ready=t, device_s=0.0))
+
+    def _drain_queues(self, exc: BaseException) -> None:
+        """Fail every batch still sitting in inbox/staging (worker death:
+        their futures must resolve and stop() must not block)."""
+        for q in (self._staging, self._inbox):
+            while True:
+                try:
+                    item = q.get_nowait()
+                except queue.Empty:
+                    break
+                if item is _SENTINEL:
+                    continue
+                if isinstance(item, _InFlight):
+                    self._fail_batch(item.queue, item.batch, exc)
+                else:
+                    self._fail_batch(item[0], item[1], exc)
+
+    def _loop_fatal(self, exc: BaseException) -> None:
+        # a worker loop died unexpectedly: mark the executor dead (the
+        # surviving loop fails work instead of blocking on the pipe), fail
+        # everything still held here, then tell the engine
+        self._dead = True
+        self._drain_queues(exc)
+        self._on_fatal(self, exc)
+
+    def _dispatch_loop(self) -> None:
+        try:
+            while True:
+                item = self._inbox.get()
+                if item is _SENTINEL:
+                    return
+                queue_name, pb = item
+                if self._dead:
+                    self._fail_batch(queue_name, pb,
+                                     RuntimeError("executor worker died"))
+                    continue
+                t_build = time.perf_counter()
+                try:
+                    g = self._build_fn(pb)
+                    run = self._program_fn(self, pb.bucket, g)
+                    out = run(self.params, g)   # asynchronous dispatch
+                except Exception as exc:        # bad batch: report, stay up
+                    t = time.perf_counter()
+                    self._finish(CompletedBatch(
+                        queue=queue_name, batch=pb, results=None, err=exc,
+                        t_build_start=t_build, t_dispatch=t, t_ready=t,
+                        device_s=0.0))
+                    continue
+                # blocks while two batches are already staged (the double
+                # buffer): host packing overlaps device execution. The
+                # dead-check breaks the wait so a crashed completer cannot
+                # wedge this thread on a full pipe.
+                inflight = _InFlight(queue_name, pb, out, t_build,
+                                     time.perf_counter())
+                while True:
+                    if self._dead:
+                        self._fail_batch(queue_name, pb,
+                                         RuntimeError("executor worker died"))
+                        break
+                    try:
+                        self._staging.put(inflight, timeout=0.2)
+                        break
+                    except queue.Full:
+                        continue
+        except BaseException as exc:            # pragma: no cover - defensive
+            self._loop_fatal(exc)
+            raise
+
+    def _complete_loop(self) -> None:
+        last_ready = 0.0
+        try:
+            while True:
+                item = self._staging.get()
+                if item is _SENTINEL:
+                    return
+                err: Optional[Exception] = None
+                results: Optional[List[np.ndarray]] = None
+                try:
+                    out_np = np.asarray(jax.block_until_ready(item.out))
+                    results = self._unpack_fn(item.batch, out_np)
+                except Exception as exc:
+                    err = exc
+                t_ready = time.perf_counter()
+                # marginal device time on THIS device: overlapped batches
+                # in the staging pipe are not double-counted
+                device_s = t_ready - max(item.t_dispatch, last_ready)
+                last_ready = t_ready
+                self._finish(CompletedBatch(
+                    queue=item.queue, batch=item.batch, results=results,
+                    err=err, t_build_start=item.t_build_start,
+                    t_dispatch=item.t_dispatch, t_ready=t_ready,
+                    device_s=device_s))
+        except BaseException as exc:            # pragma: no cover - defensive
+            self._loop_fatal(exc)
+            raise

@@ -349,26 +349,45 @@ class FusableMessage:
     activation: str = "none"
 
 
+# the multi-statistic bundle the scaler-epilogue form consumes, in the
+# concat order PNA's update expects (Eq. 3)
+PNA_STAT_KINDS = ("mean", "std", "max", "min")
+
+
 @dataclass(frozen=True)
 class FusableUpdate:
     """A gamma the layer-fused kernel can run in-register (DESIGN.md §7).
 
-    Describes the node update as a self-term plus a small dense MLP on the
-    aggregated messages:
+    Two epilogue forms are covered. The **self-term + MLP** form:
 
         x' = act_out( mlp( m + self_coeff * x ) )
 
     where ``m`` is the layer's (sum-)aggregated message buffer, still
-    resident in the kernel's VMEM accumulator when the update runs. This
-    covers the GIN family (self_coeff = 1+eps, 2-layer MLP) and GCN
-    (self_coeff = the per-node self-loop norm, 1 dense layer). Updates
-    needing per-node scaler tensors (PNA), non-linear combines (DGN's
-    absolute value), or no matmul at all (GAT) stay on the two-stage
-    pipeline path — ``propagate`` falls back automatically.
+    resident in the kernel's VMEM accumulator when the update runs — the
+    GIN family (self_coeff = 1+eps, 2-layer MLP) and GCN (self_coeff =
+    the per-node self-loop norm, 1 dense layer). And the **scaler
+    contraction** form (``scalers`` set), PNA's Eq. 3 update:
+
+        m  = concat(mean, std, max, min)                  # (N, 4D), in-VMEM
+        x' = act_out( mlp( concat(x, s_0*m, .., s_{S-1}*m) ) )
+
+    where ``scalers`` are the per-node degree scalers ((N, S), layer-
+    invariant, from ``PrecomputedGraphStats``): the kernel derives the
+    four statistics from its sum/sumsq/keyed-max/keyed-min accumulators
+    and contracts the scalers in-register, so PNA's whole layer is one
+    launch too. Updates with non-linear combines on the aggregate (DGN's
+    ``|·|``) or no matmul at all (GAT) stay on the two-stage pipeline
+    path — ``propagate`` falls back automatically.
 
       self_coeff  scalar or (N,)  weight on the residual self term (None
-                                  drops it)
-      w1, b1      (D, D_ff), (D_ff,)   first dense layer
+                                  drops it; mutually exclusive with
+                                  ``scalers``)
+      scalers     (N, S)          per-node degree scalers: selects the
+                                  scaler-contraction epilogue (aggregate
+                                  kinds must be ``PNA_STAT_KINDS`` and
+                                  shared ``stats.degrees`` must be present)
+      w1, b1      (D_in, D_ff), (D_ff,)   first dense layer (D_in = D for
+                                  the self form, D + S·4·D for scalers)
       w2, b2      (D_ff, D_out), (D_out,)  optional second layer; a ReLU
                                   is applied between the two
       out_activation  'none' | 'relu'   final activation. Layer-position-
@@ -381,6 +400,7 @@ class FusableUpdate:
     w1: Array
     b1: Array
     self_coeff: Optional[Union[Array, float]] = None
+    scalers: Optional[Array] = None
     w2: Optional[Array] = None
     b2: Optional[Array] = None
     out_activation: str = "none"
@@ -866,11 +886,11 @@ def propagate(
     """
     kinds = (aggregate,) if isinstance(aggregate, str) else tuple(aggregate)
     if dataflow.impl in ("pipeline", "fused_layer") and fusable is not None:
-        if (dataflow.impl == "fused_layer" and fusable_update is not None
-                and kinds == ("sum",) and fusable.node_input is None
-                and _pipeline_uses_kernel()):
+        fu = fusable_update
+        if (dataflow.impl == "fused_layer" and fu is not None
+                and fu.scalers is None and kinds == ("sum",)
+                and fusable.node_input is None and _pipeline_uses_kernel()):
             # the one-launch layer step: NT epilogue inside the kernel
-            fu = fusable_update
             _count_pass()
             with _uncounted():
                 from repro.kernels import ops as kops
@@ -881,6 +901,29 @@ def propagate(
                     edge_term=fusable.edge_term, phi_bias=fusable.bias,
                     phi_activation=fusable.activation,
                     self_coeff=fu.self_coeff, w2=fu.w2, b2=fu.b2,
+                    out_activation=fu.out_activation,
+                    edge_tile=dataflow.edge_tile,
+                    num_banks=dataflow.num_banks)
+            return jnp.where(graph.node_mask[:, None], out, 0.0)
+        if (dataflow.impl == "fused_layer" and fu is not None
+                and fu.scalers is not None and kinds == PNA_STAT_KINDS
+                and stats is not None and stats.degrees is not None
+                and _pipeline_uses_kernel()):
+            # the scaler-contraction one-launch layer step (PNA): the four
+            # statistics are derived from the kernel's accumulators and
+            # the degree scalers contracted in-register (DESIGN.md §7)
+            _count_pass()
+            with _uncounted():
+                from repro.kernels import ops as kops
+                out = kops.layer_fused(
+                    x, graph.senders, graph.receivers, graph.edge_mask,
+                    graph.n_node_pad, w1=fu.w1, b1=fu.b1,
+                    node_input=fusable.node_input,
+                    src_weight=fusable.src_weight,
+                    edge_term=fusable.edge_term, phi_bias=fusable.bias,
+                    phi_activation=fusable.activation,
+                    scalers=fu.scalers, degrees=stats.degrees,
+                    w2=fu.w2, b2=fu.b2,
                     out_activation=fu.out_activation,
                     edge_tile=dataflow.edge_tile,
                     num_banks=dataflow.num_banks)

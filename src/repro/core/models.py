@@ -459,18 +459,26 @@ def pna_apply(params, graph: GraphBatch, cfg: GNNConfig,
         # fusable phi: the pre-linear splits into a node-side transform
         # (N rows, not E) plus an edge-side term — phi = relu(x@Ws[snd]
         # + e@We + b), exactly the per-edge linear-combine contract.
-        # gamma needs the per-node scaler tensor, so it stays outside the
-        # kernel (the fused_layer path keeps the pipeline edge phase).
+        # fusable gamma: the scaler-contraction epilogue — the four
+        # statistics are derived from the kernel's accumulators and the
+        # degree scalers contracted in-register (DESIGN.md §7), so under
+        # impl='fused_layer' on kernel backends PNA is one launch per
+        # layer too; off-kernel the pipeline edge phase + XLA gamma stays.
         fusable = None
+        fu = None
         if dataflow.impl in _FUSABLE_IMPLS:
             w_pre, b_pre = p["pre"]["w"], p["pre"]["b"]
             fusable = FusableMessage(
                 node_input=xx @ w_pre[:d], edge_term=e @ w_pre[d:],
                 bias=b_pre, activation="relu")
+            if dataflow.impl == "fused_layer":
+                fu = FusableUpdate(w1=p["post"]["w"], b1=p["post"]["b"],
+                                   scalers=scalers, out_activation="relu")
 
         return propagate(graph, xx, message_fn=message, update_fn=update,
                          aggregate=("mean", "std", "max", "min"),
-                         dataflow=dataflow, stats=stats, fusable=fusable)
+                         dataflow=dataflow, stats=stats, fusable=fusable,
+                         fusable_update=fu)
 
     if dataflow.scan_layers and cfg.num_layers > 1:
         def body(xx, p):

@@ -1,0 +1,229 @@
+"""Multi-tenant batch scheduler: named priority queues over ``GraphPacker``.
+
+FlowGNN's full title is "universal GNN inference via *multi-queue*
+streaming": the paper's frontend is a bank of independent queues draining
+into parallel processing elements with no global synchronization. This
+module is the queue bank — the scheduling half of the serving stack
+(DESIGN.md §5); the processing elements are ``core/executor.py``.
+
+  * Each **tenant queue** (``QueueConfig``) owns its own ``GraphPacker``
+    with its own ``max_wait`` deadline, batch-size budget, and a
+    weighted-fair *weight*. Packing policy therefore composes per tenant:
+    a latency-sensitive queue can flush at 1 ms / max_batch 2 while a bulk
+    queue packs 10 ms / max_batch 64 batches, against the same bucket
+    table (so compiled programs are shared wherever ``graph_pad`` agrees).
+  * **Weighted-fair draining.** Flushed batches wait in per-queue ready
+    lists; ``next_batch`` pops from the ready queue with the smallest
+    *virtual time* and advances it by ``num_graphs / weight`` — start-time
+    weighted fair queueing. A bulk tenant with a deep backlog cannot
+    starve a latency tenant: the latency queue's virtual time stays near
+    the system virtual time, so its batches are served within one bulk
+    batch of arriving. Queues that go idle re-enter floored to the system
+    virtual time — no banked credit bursts, and no stale-low virtual time
+    monopolizing service after a long idle spell.
+
+Like ``GraphPacker``, the scheduler is deliberately free of threads,
+clocks, and device code: the engine owns time (``now`` flows into
+``add``/``poll``) and owns the lock under which every method is called.
+That keeps the drain policy unit-testable in isolation
+(tests/test_scheduler_executor.py).
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro.core.packing import (DEFAULT_BUCKETS, GraphPacker, PackedBatch,
+                                PackItem)
+
+
+@dataclass(frozen=True)
+class QueueConfig:
+    """One tenant queue of the serving frontend.
+
+    name       : queue handle used by ``GraphStreamEngine.submit(queue=)``.
+    weight     : weighted-fair share. Draining charges each served batch
+                 ``num_graphs / weight`` of virtual time, so a weight-8
+                 queue gets ~8x the graph throughput of a weight-1 queue
+                 while both are backlogged — and neither ever starves.
+    max_wait_ms: flush deadline from a batch's FIRST graph arrival
+                 (``None`` inherits the engine default).
+    max_batch  : graphs per packed batch == the flushed ``graph_pad``
+                 (``None`` inherits the engine default; queues sharing a
+                 ``max_batch`` share compiled programs).
+    max_nodes / max_edges : per-open-batch capacity overrides.
+    max_pending: admission backpressure for THIS tenant — ``submit``
+                 blocks once this many of its graphs are outstanding
+                 (``None`` inherits the engine default). Admission is
+                 per-queue, so a bulk tenant pinned at its cap never
+                 blocks a latency tenant's submissions.
+    """
+
+    name: str
+    weight: float = 1.0
+    max_wait_ms: Optional[float] = None
+    max_batch: Optional[int] = None
+    max_nodes: Optional[int] = None
+    max_edges: Optional[int] = None
+    max_pending: Optional[int] = None
+
+    def __post_init__(self):
+        if not self.name:
+            raise ValueError("queue name must be non-empty")
+        if self.weight <= 0:
+            raise ValueError(f"queue '{self.name}' weight must be > 0")
+
+
+class _TenantQueue:
+    __slots__ = ("cfg", "packer", "ready", "vtime")
+
+    def __init__(self, cfg: QueueConfig, packer: GraphPacker):
+        self.cfg = cfg
+        self.packer = packer
+        self.ready: List[PackedBatch] = []
+        self.vtime = 0.0
+
+
+class BatchScheduler:
+    """Named multi-tenant queues with weighted-fair draining.
+
+    All methods must be called under one external lock (the engine's
+    condition variable); nothing here blocks or sleeps.
+    """
+
+    def __init__(self, queues: Sequence[QueueConfig], *,
+                 default_max_batch: int = 8,
+                 default_max_wait_s: float = 2e-3,
+                 buckets: Tuple[int, ...] = DEFAULT_BUCKETS,
+                 default_max_nodes: Optional[int] = None,
+                 default_max_edges: Optional[int] = None):
+        if not queues:
+            raise ValueError("at least one queue is required")
+        # system virtual time: the virtual start time of the last service.
+        # Re-entering queues are floored to it, so a long-idle tenant can
+        # neither bank credit NOR keep a stale-low vtime through a moment
+        # when every other ready list happens to be empty (a min over
+        # currently-ready queues would grant it an unbounded catch-up
+        # window against a busy-but-momentarily-drained tenant).
+        self._vsys = 0.0
+        self._queues: Dict[str, _TenantQueue] = {}
+        for qc in queues:
+            if qc.name in self._queues:
+                raise ValueError(f"duplicate queue name '{qc.name}'")
+            max_batch = (qc.max_batch if qc.max_batch is not None
+                         else default_max_batch)
+            max_wait_s = (qc.max_wait_ms * 1e-3 if qc.max_wait_ms is not None
+                          else default_max_wait_s)
+            packer = GraphPacker(
+                max_batch=max_batch, max_wait_s=max_wait_s, buckets=buckets,
+                max_nodes=(qc.max_nodes if qc.max_nodes is not None
+                           else default_max_nodes),
+                max_edges=(qc.max_edges if qc.max_edges is not None
+                           else default_max_edges))
+            self._queues[qc.name] = _TenantQueue(qc, packer)
+
+    # -- introspection ----------------------------------------------------
+
+    @property
+    def queue_names(self) -> Tuple[str, ...]:
+        return tuple(self._queues)
+
+    @property
+    def open_batches(self) -> int:
+        return sum(q.packer.open_batches for q in self._queues.values())
+
+    @property
+    def ready_batches(self) -> int:
+        return sum(len(q.ready) for q in self._queues.values())
+
+    @property
+    def pending_graphs(self) -> int:
+        """Graphs held here (open or ready), i.e. not yet handed out."""
+        return sum(q.packer.pending_graphs + sum(b.num_graphs for b in q.ready)
+                   for q in self._queues.values())
+
+    def graph_pads(self) -> Tuple[int, ...]:
+        """Distinct flushed ``graph_pad`` values across queues (for warmup)."""
+        return tuple(sorted({q.packer.max_batch
+                             for q in self._queues.values()}))
+
+    def next_deadline(self) -> Optional[float]:
+        return min((d for q in self._queues.values()
+                    if (d := q.packer.next_deadline()) is not None),
+                   default=None)
+
+    # -- intake -----------------------------------------------------------
+
+    def add(self, queue: str, item: PackItem,
+            now: Optional[float] = None) -> None:
+        """Route one graph into its tenant's packer; full batches become
+        ready immediately."""
+        q = self._queues.get(queue)
+        if q is None:
+            raise KeyError(
+                f"unknown queue '{queue}'; have {sorted(self._queues)}")
+        now = time.perf_counter() if now is None else now
+        self._push_ready(q, q.packer.add(item, now=now))
+
+    def poll(self, now: Optional[float] = None) -> int:
+        """Flush every open batch whose deadline expired; count them."""
+        now = time.perf_counter() if now is None else now
+        moved = 0
+        for q in self._queues.values():
+            flushed = q.packer.poll(now)
+            self._push_ready(q, flushed)
+            moved += len(flushed)
+        return moved
+
+    def _push_ready(self, q: _TenantQueue, batches: List[PackedBatch]) -> None:
+        if not batches:
+            return
+        if not q.ready:
+            # re-entering service: no banked credit from the idle period —
+            # a queue idle for a second must not burst ahead of everyone
+            q.vtime = max(q.vtime, self._vsys)
+        q.ready.extend(batches)
+
+    # -- draining ---------------------------------------------------------
+
+    def next_batch(self) -> Optional[Tuple[str, PackedBatch]]:
+        """Weighted-fair pop: the ready queue with the smallest virtual
+        time serves next (ties broken by name for determinism)."""
+        backlogged = [q for q in self._queues.values() if q.ready]
+        if not backlogged:
+            return None
+        q = min(backlogged, key=lambda t: (t.vtime, t.cfg.name))
+        pb = q.ready.pop(0)
+        self._vsys = max(self._vsys, q.vtime)
+        q.vtime += pb.num_graphs / q.cfg.weight
+        return q.cfg.name, pb
+
+    def flush_oldest_open(self) -> Optional[Tuple[str, PackedBatch]]:
+        """Seal + return the open batch with the earliest deadline across
+        all queues (the idle-executor eager-flush path). Ready batches take
+        precedence — call ``next_batch`` first."""
+        best: Optional[_TenantQueue] = None
+        for q in self._queues.values():
+            d = q.packer.next_deadline()
+            if d is None:
+                continue
+            if best is None or d < best.packer.next_deadline():
+                best = q
+        if best is None:
+            return None
+        pb = best.packer.flush_oldest()
+        best.vtime = max(best.vtime, self._vsys)
+        self._vsys = max(self._vsys, best.vtime)
+        best.vtime += pb.num_graphs / best.cfg.weight
+        return best.cfg.name, pb
+
+    def flush_all(self) -> List[Tuple[str, PackedBatch]]:
+        """Drain/shutdown: every open AND ready batch, fair-ordered."""
+        for q in self._queues.values():
+            self._push_ready(q, q.packer.flush_all())
+        out = []
+        while (nxt := self.next_batch()) is not None:
+            out.append(nxt)
+        return out

@@ -173,6 +173,37 @@ def param_shardings(defs, rules: ShardingRules, mesh: Mesh) -> Any:
         is_leaf=lambda x: isinstance(x, ParamDef))
 
 
+def device_kind(device) -> str:
+    """Canonical device-kind string for topology fingerprints (the
+    serving autotune-cache namespace and BENCH_stream.json share it)."""
+    return str(getattr(device, "device_kind", device.platform)).replace(
+        " ", "_")
+
+
+def executor_mesh(device) -> Mesh:
+    """A single-device mesh for one serving executor (see core/executor.py)."""
+    return Mesh(np.asarray([device], dtype=object), ("executor",))
+
+
+def replicate_params(params, devices) -> list:
+    """One committed, fully-replicated copy of ``params`` per executor device.
+
+    The serving executor pool (core/executor.py) runs MPMD — each device
+    executes *different* batches — so replication is per-device committed
+    copies (a single-device ``Mesh`` + ``NamedSharding(P())`` each), not
+    one mesh-spanning replicated array: a mesh-wide array would pin every
+    jit call to the full mesh, while committed per-device copies let each
+    executor's program run on its own device with host-resident inputs.
+    Returns ``[params_on_dev for dev in devices]``.
+    """
+    copies = []
+    for d in devices:
+        sharding = NamedSharding(executor_mesh(d), P())
+        copies.append(jax.tree.map(
+            lambda x, s=sharding: jax.device_put(x, s), params))
+    return copies
+
+
 def param_count(defs) -> int:
     leaves = jax.tree.leaves(defs, is_leaf=lambda x: isinstance(x, ParamDef))
     return int(sum(np.prod(d.shape) for d in leaves))

@@ -67,14 +67,20 @@ def mp_pipeline(x, senders, receivers, edge_mask, num_nodes, *, stats,
 
 
 def layer_fused(x, senders, receivers, edge_mask, num_nodes, *, w1, b1,
-                src_weight=None, edge_term=None, phi_bias=None,
-                phi_activation="none", self_coeff=None, w2=None, b2=None,
+                node_input=None, src_weight=None, edge_term=None,
+                phi_bias=None, phi_activation="none", self_coeff=None,
+                scalers=None, degrees=None, w2=None, b2=None,
                 out_activation="none", edge_tile=128, num_banks=4) -> Array:
-    """One-launch NT+MP layer step (gather + phi + sum + update MLP)."""
+    """One-launch NT+MP layer step (gather + phi + aggregate + update MLP).
+
+    ``self_coeff`` selects the self-term epilogue (GIN/GCN); ``scalers``
+    (+ shared ``degrees``) the PNA scaler-contraction epilogue."""
     return _layer_fused(x, senders, receivers, edge_mask, num_nodes,
-                        w1=w1, b1=b1, src_weight=src_weight,
+                        w1=w1, b1=b1, node_input=node_input,
+                        src_weight=src_weight,
                         edge_term=edge_term, phi_bias=phi_bias,
                         phi_activation=phi_activation, self_coeff=self_coeff,
+                        scalers=scalers, degrees=degrees,
                         w2=w2, b2=b2, out_activation=out_activation,
                         edge_tile=edge_tile, num_banks=num_banks,
                         interpret=_interpret())

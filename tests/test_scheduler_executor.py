@@ -1,0 +1,470 @@
+"""The scheduler/executor split (DESIGN.md §5).
+
+Covers: the ``BatchScheduler`` drain policy in isolation (weighted-fair
+ordering, no-starvation, per-queue deadlines, idle-flush, re-entry
+credit), the engine facade over multi-tenant queues (per-queue stats,
+starvation bound under a saturated bulk tenant, unknown-queue rejection),
+the PNA scaler-epilogue kernel vs its oracle (the FusableUpdate
+extension), and — when the process has more than one device
+(``XLA_FLAGS=--xla_force_host_platform_device_count=N``) — the
+multi-device determinism suite: the same submission stream on 1 vs N
+devices yields bitwise-identical per-graph outputs for all six models,
+with every executor actually serving.
+"""
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.engine import GraphStreamEngine
+from repro.core.executor import DeviceExecutor
+from repro.core.models import PAPER_GNN_CONFIGS, make_gnn
+from repro.core.packing import PackItem
+from repro.core.scheduler import BatchScheduler, QueueConfig
+from repro.data.graphs import molhiv_like
+from repro.kernels import ops as kops
+
+MODELS = sorted(PAPER_GNN_CONFIGS)
+MULTI_DEVICE = len(jax.devices()) >= 2
+
+
+def small_cfg(name):
+    cfg = PAPER_GNN_CONFIGS[name]
+    return cfg.replace(num_layers=2, hidden_dim=16,
+                       head_mlp=(8,) if cfg.head_mlp else ())
+
+
+def _make_engine(name, **kw):
+    cfg = small_cfg(name)
+    model = make_gnn(cfg)
+    params = model.init(jax.random.PRNGKey(0), cfg)
+    return GraphStreamEngine(cfg, params, **kw)
+
+
+def _item(n=8, e=16, seed=0, node_dim=4):
+    r = np.random.default_rng(seed)
+    return PackItem(
+        node_feat=r.normal(size=(n, node_dim)).astype(np.float32),
+        senders=r.integers(0, n, size=e).astype(np.int32),
+        receivers=r.integers(0, n, size=e).astype(np.int32))
+
+
+# ---------------------------------------------------------------------------
+# BatchScheduler: weighted-fair draining, per-queue deadlines
+# ---------------------------------------------------------------------------
+
+def _two_queue_scheduler(w_bulk=1.0, w_lat=4.0, max_batch=2):
+    return BatchScheduler(
+        [QueueConfig("bulk", weight=w_bulk, max_wait_ms=1000.0,
+                     max_batch=max_batch),
+         QueueConfig("latency", weight=w_lat, max_wait_ms=1000.0,
+                     max_batch=max_batch)])
+
+
+def test_scheduler_rejects_bad_config():
+    with pytest.raises(ValueError):
+        BatchScheduler([])
+    with pytest.raises(ValueError):
+        BatchScheduler([QueueConfig("a"), QueueConfig("a")])
+    with pytest.raises(ValueError):
+        QueueConfig("a", weight=0.0)
+    s = _two_queue_scheduler()
+    with pytest.raises(KeyError):
+        s.add("nope", _item())
+
+
+def test_weighted_fair_interleaves_tenants():
+    """A deep bulk backlog cannot starve the latency queue: with weight 4
+    vs 1, latency batches are served ~4x as often while both have work."""
+    s = _two_queue_scheduler(w_bulk=1.0, w_lat=4.0, max_batch=1)
+    for i in range(8):
+        s.add("bulk", _item(seed=i), now=0.0)
+        s.add("latency", _item(seed=100 + i), now=0.0)
+    order = []
+    while (nxt := s.next_batch()) is not None:
+        order.append(nxt[0])
+    assert len(order) == 16
+    # first five pops: the weight-4 queue gets 4 of them
+    assert order[:5].count("latency") == 4
+    # and the latency queue is fully drained well before bulk
+    assert order.index("bulk") < 6                # bulk is not starved either
+    assert max(i for i, q in enumerate(order) if q == "latency") < 12
+
+
+def test_fair_queue_reenters_at_service_floor():
+    """A queue that was idle must not bank credit: after bulk has been
+    served for a while, a newly arriving latency batch is served promptly
+    but bulk still gets its share (no infinite-preemption burst)."""
+    s = _two_queue_scheduler(w_bulk=1.0, w_lat=1.0, max_batch=1)
+    for i in range(6):
+        s.add("bulk", _item(seed=i), now=0.0)
+    for _ in range(4):                      # serve bulk alone for a while
+        assert s.next_batch()[0] == "bulk"
+    for i in range(3):
+        s.add("latency", _item(seed=50 + i), now=0.0)
+    order = [s.next_batch()[0] for _ in range(5)]
+    # equal weights from the floor: strict alternation, not a latency burst
+    assert order[:4].count("latency") == 2
+    assert order[0] != order[1] and order[1] != order[2]
+
+
+def test_long_idle_queue_cannot_monopolize_after_reentry():
+    """A queue idle through a long stretch of service must re-enter at the
+    SYSTEM virtual time, even if it happens to be the only ready queue at
+    the instant it flushes — otherwise its stale-low virtual time buys an
+    unbounded catch-up window against a busy tenant."""
+    s = _two_queue_scheduler(w_bulk=1.0, w_lat=16.0, max_batch=1)
+    for i in range(50):                     # bulk serves alone for a while
+        s.add("bulk", _item(seed=i), now=0.0)
+    for _ in range(50):
+        assert s.next_batch()[0] == "bulk"
+    # bulk's ready list is momentarily EMPTY when latency re-enters
+    for i in range(64):
+        s.add("latency", _item(seed=100 + i), now=0.0)
+    for i in range(50, 58):
+        s.add("bulk", _item(seed=i), now=0.0)
+    order = [s.next_batch()[0] for _ in range(24)]
+    # weight 16 earns latency ~16/17 of service — but NOT all of it: bulk
+    # must appear within the first 2/weight window, not after 50*16 pops
+    assert "bulk" in order[:18]
+    assert order.count("latency") >= 16
+
+
+def test_per_queue_deadlines_poll_independently():
+    s = BatchScheduler(
+        [QueueConfig("fast", max_wait_ms=1000.0, max_batch=8),
+         QueueConfig("slow", max_wait_ms=5000.0, max_batch=8)])
+    s.add("fast", _item(seed=1), now=0.0)
+    s.add("slow", _item(seed=2), now=0.0)
+    assert s.next_deadline() == pytest.approx(1.0)
+    assert s.poll(now=0.5) == 0
+    assert s.poll(now=1.5) == 1                 # fast expired, slow still open
+    assert s.next_batch()[0] == "fast"
+    assert s.open_batches == 1
+    assert s.poll(now=5.5) == 1
+    assert s.next_batch()[0] == "slow"
+
+
+def test_flush_oldest_open_and_flush_all():
+    s = _two_queue_scheduler()
+    s.add("bulk", _item(seed=1), now=10.0)      # deadline 11.0  (1000 ms)
+    s.add("latency", _item(seed=2), now=9.0)    # deadline 10.0
+    name, pb = s.flush_oldest_open()
+    assert name == "latency" and pb.num_graphs == 1
+    s.add("latency", _item(seed=3), now=12.0)
+    out = s.flush_all()
+    assert sorted(n for n, _ in out) == ["bulk", "latency"]
+    assert s.open_batches == 0 and s.pending_graphs == 0
+
+
+def test_graph_pads_reflect_per_queue_max_batch():
+    s = BatchScheduler([QueueConfig("a", max_batch=2),
+                        QueueConfig("b", max_batch=8),
+                        QueueConfig("c")], default_max_batch=8)
+    assert s.graph_pads() == (2, 8)
+
+
+# ---------------------------------------------------------------------------
+# engine facade: multi-tenant queues
+# ---------------------------------------------------------------------------
+
+def test_submit_rejects_unknown_queue():
+    with _make_engine("gin") as eng:
+        g = next(molhiv_like(seed=0, n_graphs=1))
+        with pytest.raises(KeyError):
+            eng.submit(g.node_feat, g.senders, g.receivers, g.edge_feat,
+                       g.node_pos, queue="nope")
+
+
+def test_two_tenant_stats_and_starvation_bound():
+    """The satellite acceptance: with the bulk queue saturated, the
+    latency queue's p90 stays bounded — its graphs jump the bulk backlog
+    via weighted-fair draining even though they arrived last."""
+    queues = [QueueConfig("bulk", weight=1.0, max_wait_ms=20.0, max_batch=8),
+              QueueConfig("latency", weight=16.0, max_wait_ms=1.0,
+                          max_batch=2)]
+    graphs = list(molhiv_like(seed=0, n_graphs=24))
+    with _make_engine("gin", queues=queues, eager_flush=False) as eng:
+        g0 = graphs[0]
+        eng.warmup(g0.node_feat, g0.senders, g0.receivers, g0.edge_feat,
+                   g0.node_pos)
+        bulk = [eng.submit(g.node_feat, g.senders, g.receivers, g.edge_feat,
+                           g.node_pos, queue="bulk")
+                for g in graphs for _ in range(3)]          # deep backlog
+        lat = [eng.submit(g.node_feat, g.senders, g.receivers, g.edge_feat,
+                          g.node_pos, queue="latency")
+               for g in graphs[:8]]                          # arrives last
+        eng.drain(timeout=300)
+        for f in bulk + lat:
+            f.result(timeout=5)
+        s = eng.stats.summary()
+    assert set(s["queues"]) == {"bulk", "latency"}
+    sb, sl = s["queues"]["bulk"], s["queues"]["latency"]
+    assert sb["count"] == 72.0 and sl["count"] == 8.0
+    # latency graphs arrived AFTER the whole bulk backlog, yet their p90
+    # beats the bulk p90 (they'd otherwise all complete dead last)
+    assert sl["p90_ms"] < sb["p90_ms"]
+    # and the global stats still see every graph exactly once
+    assert s["count"] == 80.0
+
+
+def test_same_result_from_any_queue():
+    """Queue routing must not change the math: the same graph served via
+    two different tenants is bitwise identical (same bucket)."""
+    queues = [QueueConfig("a", max_batch=1), QueueConfig("b", max_batch=1)]
+    g = next(molhiv_like(seed=2, n_graphs=1))
+    with _make_engine("gin", queues=queues) as eng:
+        fa = eng.submit(g.node_feat, g.senders, g.receivers, g.edge_feat,
+                        g.node_pos, queue="a")
+        fb = eng.submit(g.node_feat, g.senders, g.receivers, g.edge_feat,
+                        g.node_pos, queue="b")
+        eng.drain(timeout=120)
+        np.testing.assert_array_equal(fa.result(timeout=5),
+                                      fb.result(timeout=5))
+
+
+def test_per_queue_admission_backpressure():
+    """A bulk tenant pinned at ITS max_pending cap must not block a
+    latency tenant's submit() — admission backpressure is per queue."""
+    import threading
+
+    queues = [QueueConfig("bulk", max_pending=1, max_batch=64,
+                          max_wait_ms=10_000.0),
+              QueueConfig("latency", max_batch=64, max_wait_ms=10_000.0)]
+    g = next(molhiv_like(seed=0, n_graphs=1))
+    a = (g.node_feat, g.senders, g.receivers, g.edge_feat, g.node_pos)
+    with _make_engine("gin", queues=queues, eager_flush=False) as eng:
+        futs = [eng.submit(*a, queue="bulk")]      # bulk now AT its cap
+
+        blocked = threading.Event()
+        def second_bulk():
+            blocked.set()
+            futs.append(eng.submit(*a, queue="bulk"))   # blocks on cap
+        t = threading.Thread(target=second_bulk, daemon=True)
+        t.start()
+        blocked.wait(timeout=5)
+        time.sleep(0.2)                            # let it reach the wait
+
+        t0 = time.perf_counter()
+        lat = eng.submit(*a, queue="latency")      # must NOT block
+        assert time.perf_counter() - t0 < 2.0
+        eng.drain(timeout=120)                     # unblocks the bulk waiter
+        t.join(timeout=120)
+        assert not t.is_alive()
+        eng.drain(timeout=120)
+        for f in futs + [lat]:
+            assert f.result(timeout=5).shape == (1,)
+
+
+def test_drain_is_not_a_results_barrier():
+    """Streaming futures: a submitted graph's future resolves without any
+    drain() call once its batch completes (flush via deadline)."""
+    g = next(molhiv_like(seed=0, n_graphs=1))
+    with _make_engine("gin", max_batch=8, max_wait_ms=5.0) as eng:
+        fut = eng.submit(g.node_feat, g.senders, g.receivers, g.edge_feat,
+                         g.node_pos)
+        out = fut.result(timeout=120)        # no drain() anywhere
+        assert out.shape == (1,)
+
+
+@pytest.mark.filterwarnings(
+    "ignore::pytest.PytestUnhandledThreadExceptionWarning")
+def test_executor_worker_death_fails_batches_and_stop_does_not_hang():
+    """A worker-loop death (e.g. an escaping BaseException from the
+    completion callback) must resolve every held batch with an error and
+    leave stop() deadlock-free — not strand futures on a full staging
+    pipe."""
+    from repro.core.packing import PackedBatch
+
+    calls, fatal = [], []
+    boom = [True]
+
+    def on_complete(ex, done):
+        calls.append(done)
+        if boom[0]:
+            boom[0] = False
+            raise KeyboardInterrupt("completer dies")    # BaseException
+
+    ex = DeviceExecutor(
+        device=jax.devices()[0], index=0, params=None,
+        build_fn=lambda pb: pb,
+        program_fn=lambda e, key, g: (lambda p, gg: np.zeros((1, 1))),
+        unpack_fn=lambda pb, out: [np.zeros(1)] * pb.num_graphs,
+        on_complete=on_complete,
+        on_fatal=lambda e, exc: fatal.append(exc))
+    ex.start()
+    pbs = [PackedBatch(items=[_item(seed=i)], node_pad=32, edge_pad=64,
+                       graph_pad=1) for i in range(5)]
+    for pb in pbs:
+        ex.submit("q", pb)
+    deadline = time.time() + 20
+    while not fatal and time.time() < deadline:
+        time.sleep(0.02)
+    assert fatal, "fatal hook never fired"
+    ex.stop()                                 # must not deadlock
+    assert len(calls) == 5                    # every batch resolved
+    assert sum(d.err is not None for d in calls) >= 4
+    assert ex.backlog == 0
+
+
+# ---------------------------------------------------------------------------
+# multi-device executor pool (needs XLA_FLAGS host-device forcing; the
+# 4-device CI job runs these — single-device runs skip)
+# ---------------------------------------------------------------------------
+
+needs_multi = pytest.mark.skipif(
+    not MULTI_DEVICE, reason="needs >=2 devices "
+    "(XLA_FLAGS=--xla_force_host_platform_device_count=N)")
+
+
+def _serve_stream(name, devices, graphs):
+    args = [(g.node_feat, g.senders, g.receivers, g.edge_feat, g.node_pos)
+            for g in graphs]
+    with _make_engine(name, max_batch=4, max_wait_ms=100.0,
+                      eager_flush=False, devices=devices) as eng:
+        futs = [eng.submit(*a) for a in args]
+        eng.drain(timeout=300)
+        outs = [f.result(timeout=5) for f in futs]
+        return outs, eng.stats.summary()
+
+
+@needs_multi
+@pytest.mark.parametrize("name", MODELS)
+def test_multi_device_serving_is_bitwise_deterministic(name):
+    """THE multi-device acceptance property: the same submission stream on
+    1 vs N host devices yields bitwise-identical per-graph outputs."""
+    graphs = list(molhiv_like(seed=7, n_graphs=12))
+    outs_1, _ = _serve_stream(name, jax.devices()[:1], graphs)
+    outs_n, s_n = _serve_stream(name, jax.devices(), graphs)
+    for o1, on in zip(outs_1, outs_n):
+        np.testing.assert_array_equal(np.asarray(o1), np.asarray(on))
+    # the pool actually served (not everything on one executor)
+    assert len(s_n.get("devices", {})) >= 2
+
+
+@needs_multi
+def test_least_backlog_placement_uses_every_executor():
+    graphs = list(molhiv_like(seed=1, n_graphs=32))
+    _, s = _serve_stream("gin", jax.devices(), graphs)
+    assert len(s["devices"]) == len(jax.devices())
+    assert sum(int(d["count"]) for d in s["devices"].values()) == 32
+
+
+@needs_multi
+def test_warmup_all_covers_every_executor():
+    """After warmup_all, a stream hit on ANY executor compiles nothing."""
+    with _make_engine("gin", buckets=(32, 64), max_batch=2,
+                      devices=jax.devices()) as eng:
+        keys = eng.warmup_all()
+        assert set(keys) == {(32, 64, 2), (64, 128, 2)}
+        per_dev = [set(ex.compiled) for ex in eng._executors]
+        assert all(s == set(keys) for s in per_dev)
+        # constrain the stream so every flush — single (32, 64) or packed
+        # pair (64, 128) — lands inside the warmed bucket table
+        graphs = [g for g in molhiv_like(seed=0, n_graphs=64)
+                  if 17 <= g.node_feat.shape[0] <= 30
+                  and 40 <= g.senders.shape[0] <= 60][:12]
+        assert len(graphs) >= 8
+        futs = [eng.submit(g.node_feat, g.senders, g.receivers, g.edge_feat,
+                           g.node_pos) for g in graphs]
+        eng.drain(timeout=300)
+        for f in futs:
+            f.result(timeout=5)
+        assert all(set(ex.compiled) == set(keys) for ex in eng._executors)
+
+
+def test_autotune_fingerprint_namespaces_backend_and_device(tmp_path):
+    """The satellite acceptance: cache sections are keyed by backend +
+    device kind, and the report names the device each bucket was tuned
+    on — a cache written on one topology is never silently reused on
+    another."""
+    import json
+    cache = tmp_path / "autotune.json"
+    g = next(molhiv_like(seed=0, n_graphs=1))
+    with _make_engine("gin", max_batch=1, autotune=True,
+                      autotune_cache=str(cache)) as eng:
+        eng.process(g.node_feat, g.senders, g.receivers, g.edge_feat,
+                    g.node_pos)
+        (entry,) = eng.autotune_report().values()
+        assert entry["source"] == "autotuned"
+        dev0 = jax.devices()[0]
+        assert entry["device"] == f"{dev0.platform}:{dev0.id}"
+    saved = json.loads(cache.read_text())
+    (section_key,) = saved.keys()
+    backend = jax.default_backend()
+    assert section_key.startswith(f"{backend}:")
+    kind = str(getattr(dev0, "device_kind", dev0.platform)).replace(" ", "_")
+    assert kind in section_key
+
+
+# ---------------------------------------------------------------------------
+# PNA scaler-contraction epilogue: kernel vs oracle (the FusableUpdate
+# extension; end-to-end forward coverage lives in test_layer_fused.py)
+# ---------------------------------------------------------------------------
+
+def _pna_problem(e, d, n, seed=0, n_scalers=3):
+    r = np.random.default_rng(seed)
+    x = jnp.asarray(r.normal(size=(n, d)).astype(np.float32))
+    snd = jnp.asarray(r.integers(0, n, size=e).astype(np.int32))
+    rcv = jnp.asarray(r.integers(0, max(n - 4, 1), size=e).astype(np.int32))
+    mask = jnp.asarray(r.random(e) < 0.8)
+    deg = jax.ops.segment_sum(mask.astype(jnp.float32), rcv, num_segments=n)
+    scalers = jnp.asarray(
+        r.normal(size=(n, n_scalers)).astype(np.float32))
+    w1 = jnp.asarray(
+        r.normal(size=(d + n_scalers * 4 * d, d)).astype(np.float32))
+    b1 = jnp.asarray(r.normal(size=(d,)).astype(np.float32))
+    return x, snd, rcv, mask, deg, scalers, w1, b1
+
+
+@pytest.mark.parametrize("e,d,n,edge_tile,banks", [
+    (128, 16, 32, 32, 2),
+    (200, 8, 30, 64, 4),         # uneven: E % tile != 0, N % banks != 0
+    (96, 8, 17, 32, 5),          # uneven bank sizes + empty destinations
+])
+def test_layer_fused_pna_epilogue_vs_oracle(e, d, n, edge_tile, banks):
+    x, snd, rcv, mask, deg, scalers, w1, b1 = _pna_problem(e, d, n, seed=e)
+    r = np.random.default_rng(e + 1)
+    et = jnp.asarray(r.normal(size=(e, d)).astype(np.float32))
+    ni = jnp.asarray(r.normal(size=(n, d)).astype(np.float32))
+    kw = dict(w1=w1, b1=b1, node_input=ni, edge_term=et,
+              phi_activation="relu", scalers=scalers, degrees=deg,
+              out_activation="relu")
+    out = kops.layer_fused(x, snd, rcv, mask, n, edge_tile=edge_tile,
+                           num_banks=banks, **kw)
+    ref = kops.layer_fused_ref(x, snd, rcv, mask, n, **kw)
+    np.testing.assert_allclose(out, ref, atol=2e-4, rtol=2e-4)
+    assert out.shape == (n, d)
+
+
+def test_layer_fused_pna_epilogue_two_layer_mlp():
+    e, d, n = 160, 8, 24
+    x, snd, rcv, mask, deg, scalers, w1, _ = _pna_problem(e, d, n, seed=3)
+    r = np.random.default_rng(9)
+    d_ff = 2 * d
+    kw = dict(w1=jnp.asarray(r.normal(
+                  size=(d + 3 * 4 * d, d_ff)).astype(np.float32)),
+              b1=jnp.asarray(r.normal(size=(d_ff,)).astype(np.float32)),
+              w2=jnp.asarray(r.normal(size=(d_ff, d)).astype(np.float32)),
+              b2=jnp.asarray(r.normal(size=(d,)).astype(np.float32)),
+              scalers=scalers, degrees=deg)
+    out = kops.layer_fused(x, snd, rcv, mask, n, edge_tile=32, num_banks=4,
+                           **kw)
+    ref = kops.layer_fused_ref(x, snd, rcv, mask, n, **kw)
+    np.testing.assert_allclose(out, ref, atol=2e-4, rtol=2e-4)
+
+
+def test_layer_fused_pna_rejects_bad_input():
+    x, snd, rcv, mask, deg, scalers, w1, b1 = _pna_problem(64, 8, 16, seed=1)
+    with pytest.raises(ValueError):        # scalers need degrees
+        kops.layer_fused(x, snd, rcv, mask, 16, w1=w1, b1=b1,
+                         scalers=scalers)
+    with pytest.raises(ValueError):        # scalers exclude self_coeff
+        kops.layer_fused(x, snd, rcv, mask, 16, w1=w1, b1=b1,
+                         scalers=scalers, degrees=deg, self_coeff=1.0)
+    with pytest.raises(ValueError):        # wrong contraction width
+        kops.layer_fused(x, snd, rcv, mask, 16, w1=w1[:8], b1=b1,
+                         scalers=scalers, degrees=deg)

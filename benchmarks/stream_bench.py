@@ -14,17 +14,24 @@ drained): throughput is the steady-state packed-serving figure, while the
 latency percentiles include queue wait under that backlog — compare them
 against ``queue_wait_mean_ms``, not against single-graph device time.
 
+A chaos row (``bench.stream.chaos``) measures goodput under a 10%
+injected-fault rate (seeded dispatch errors + NaN corruption driving the
+retry/bisection/quarantine machinery, DESIGN.md §8) — informational, not
+gated: it tracks how much serving capacity survives sustained faults.
+
   PYTHONPATH=src python -m benchmarks.run stream
 """
 
 from __future__ import annotations
 
+import time
 from typing import Dict
 
 import jax
 
 from benchmarks.common import Csv
 from repro.core.engine import GraphStreamEngine
+from repro.core.faults import FaultInjector
 from repro.core.models import PAPER_GNN_CONFIGS, make_gnn
 from repro.data.graphs import molhiv_like
 from repro.distributed.sharding import device_kind
@@ -100,4 +107,71 @@ def stream_sweep(csv: Csv, model_name: str = "gin", n_graphs: int = 256,
             b64["graphs_per_s"] / max(b1["graphs_per_s"], 1e-9))
         payload["batch64_aggregate_speedup_vs_batch1"] = (
             b64["aggregate_gps"] / max(b1["aggregate_gps"], 1e-9))
+    payload["chaos"] = chaos_goodput(csv, model_name=model_name,
+                                     n_graphs=min(n_graphs, 128))
     return payload
+
+
+def chaos_goodput(csv: Csv, model_name: str = "gin", n_graphs: int = 128,
+                  max_batch: int = 8, seed: int = 0,
+                  fault_rate: float = 0.10) -> Dict:
+    """Goodput under sustained seeded faults (informational).
+
+    Splits ``fault_rate`` evenly between dispatch errors (poison graphs
+    that kill their co-packed batch until bisection isolates them) and
+    NaN corruption (caught by the output-validation gate). Goodput is
+    successfully-served graphs per wall second of the faulted stream;
+    ``goodput_frac`` is the success fraction. Failures must all be typed
+    quarantines — a stranded future would hang the bench, which is the
+    point: the chaos row exercises the same no-future-left-behind
+    contract CI asserts.
+    """
+    cfg = PAPER_GNN_CONFIGS[model_name]
+    model = make_gnn(cfg)
+    params = model.init(jax.random.PRNGKey(0), cfg)
+    graphs = list(molhiv_like(seed=0, n_graphs=n_graphs))
+    inj = FaultInjector(seed=seed,
+                        dispatch_error_rate=fault_rate / 2,
+                        nan_rate=fault_rate / 2)
+    eng = GraphStreamEngine(
+        cfg, params, max_batch=max_batch, max_wait_ms=20.0,
+        max_nodes_per_batch=64 * max_batch,
+        max_edges_per_batch=128 * max_batch,
+        eager_flush=False, fault_injector=inj)
+    try:
+        # warm pass without faults hitting compile windows: same stream,
+        # unrecorded (per-graph coins are keyed on request ids, so the
+        # warm pass consumes ids 0..n-1 and the measured pass n..2n-1)
+        warm = [eng.submit(g.node_feat, g.senders, g.receivers,
+                           g.edge_feat, g.node_pos, record=False)
+                for g in graphs]
+        eng.drain(timeout=600)
+        t0 = time.perf_counter()
+        futs = [eng.submit(g.node_feat, g.senders, g.receivers,
+                           g.edge_feat, g.node_pos) for g in graphs]
+        eng.drain(timeout=600)
+        wall = time.perf_counter() - t0
+        ok = sum(f.exception() is None for f in futs)
+        ok_warm = sum(f.exception() is None for f in warm)
+        s = eng.stats.summary()
+        out = {
+            "n_graphs": n_graphs,
+            "fault_rate": fault_rate,
+            "seed": seed,
+            "served_ok": int(ok),
+            "goodput_frac": ok / n_graphs,
+            "goodput_gps": ok / max(wall, 1e-9),
+            "retries": s.get("retries", 0),
+            "quarantined_graphs": s.get("quarantined_graphs", 0),
+            "injected": inj.summary(),
+            "warm_pass_ok": int(ok_warm),
+        }
+        csv.add("bench.stream.chaos",
+                out["goodput_gps"],
+                f"goodput_frac={out['goodput_frac']:.3f};"
+                f"quarantined={out['quarantined_graphs']};"
+                f"retries={out['retries']};"
+                f"fault_rate={fault_rate:.2f}")
+        return out
+    finally:
+        eng.close()

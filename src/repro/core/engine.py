@@ -29,10 +29,26 @@ tests/test_scheduler_executor.py pins 1-device vs N-device streams
 bitwise). Per-bucket autotuning is shared across the (homogeneous) pool
 and its JSON cache is namespaced by backend + device kind so winners
 tuned on one topology are never silently replayed on another.
+
+On top of that sits the failure-semantics layer (DESIGN.md §8): every
+submission is tracked in a request registry so its Future resolves
+*exactly once* no matter which failure path fires; failed batches retry
+with bounded exponential backoff on a different executor, then bisect
+(same bucket — no recompile, bitwise-stable survivors) until the poison
+graph is isolated and only ITS future fails (``PoisonGraph``); a
+non-finite output quarantines its graph instead of returning garbage;
+dead executors leave the rotation (``pool_degraded``), their work
+re-places on survivors, and they optionally respawn; per-request
+deadlines shed expired work before dispatch (``DeadlineExceeded``) and an
+in-flight watchdog fails batches stuck inside an executor; ``drain`` and
+``close`` accept timeouts after which remaining futures fail with
+``ExecutorDead`` rather than strand. Chaos is injectable and seeded
+(``core/faults.py``) so all of this is reproducibly testable.
 """
 
 from __future__ import annotations
 
+import heapq
 import json
 import os
 import threading
@@ -44,7 +60,10 @@ from typing import Any, Dict, List, Optional, Sequence, Tuple
 import jax
 import numpy as np
 
+from repro.core.errors import (BatchFailed, DeadlineExceeded, EngineClosed,
+                               EngineError, ExecutorDead, PoisonGraph)
 from repro.core.executor import CompletedBatch, DeviceExecutor
+from repro.core.faults import FaultInjector
 from repro.core.graph import GraphBatch, build_graph_batch, pad_bucket
 from repro.core.message_passing import (DEFAULT_DATAFLOW, DataflowConfig,
                                         count_edge_passes)
@@ -71,6 +90,16 @@ class StreamStats:
     hold the same shape of stats sliced per tenant queue and per executor
     device; ``aggregate_gps`` in ``summary()`` is the pool-level wall
     figure (graphs / span from first dispatch to last completion).
+
+    Failure accounting (DESIGN.md §8): ``retries`` counts batch
+    re-placements (transient retry, executor-death requeue, and each
+    bisection half), ``quarantined`` counts graphs failed as poison
+    (exhausted retries or non-finite output), ``shed_deadline`` counts
+    graphs dropped before dispatch because their deadline passed,
+    ``failed`` counts futures resolved with an error for any reason.
+    ``executor_deaths``/``respawns`` track supervision; ``pool_degraded``
+    is sticky-true from the first death until a respawn restores the full
+    pool.
     """
 
     latencies_s: List[float] = field(default_factory=list)
@@ -81,6 +110,13 @@ class StreamStats:
     t_last_done: Optional[float] = None
     by_queue: Dict[str, "StreamStats"] = field(default_factory=dict)
     by_device: Dict[str, "StreamStats"] = field(default_factory=dict)
+    retries: int = 0
+    quarantined: int = 0
+    shed_deadline: int = 0
+    failed: int = 0
+    executor_deaths: int = 0
+    respawns: int = 0
+    pool_degraded: bool = False
 
     def record_batch(self, *, latencies: Sequence[float],
                      queue_waits: Sequence[float], device_s: float,
@@ -106,9 +142,31 @@ class StreamStats:
                 device_s=device_s, batch_size=batch_size,
                 t_dispatch=t_dispatch, t_done=t_done)
 
+    def record_failure(self, *, queue: Optional[str] = None, retries: int = 0,
+                       quarantined: int = 0, shed: int = 0, failed: int = 0
+                       ) -> None:
+        self.retries += retries
+        self.quarantined += quarantined
+        self.shed_deadline += shed
+        self.failed += failed
+        if queue is not None:
+            self.by_queue.setdefault(queue, StreamStats()).record_failure(
+                retries=retries, quarantined=quarantined, shed=shed,
+                failed=failed)
+
+    @property
+    def _has_failures(self) -> bool:
+        return bool(self.retries or self.quarantined or self.shed_deadline
+                    or self.failed or self.executor_deaths or self.respawns
+                    or self.pool_degraded)
+
     def summary(self) -> Dict[str, Any]:
         if not self.latencies_s:
-            return {}
+            if not self._has_failures:
+                return {}
+            out: Dict[str, Any] = {}
+            self._failure_summary(out)
+            return out
         arr = np.array(self.latencies_s)
         out: Dict[str, Any] = {
             "count": float(arr.size),
@@ -139,6 +197,7 @@ class StreamStats:
             out["aggregate_gps"] = float(
                 sum(self.batch_sizes)
                 / (self.t_last_done - self.t_first_dispatch))
+        self._failure_summary(out)
         if self.by_queue:
             out["queues"] = {name: s.summary()
                              for name, s in sorted(self.by_queue.items())}
@@ -147,13 +206,45 @@ class StreamStats:
                               for name, s in sorted(self.by_device.items())}
         return out
 
+    def _failure_summary(self, out: Dict[str, Any]) -> None:
+        if not self._has_failures:
+            return
+        out["retries"] = int(self.retries)
+        out["quarantined_graphs"] = int(self.quarantined)
+        out["shed_deadline"] = int(self.shed_deadline)
+        out["failed"] = int(self.failed)
+        out["executor_deaths"] = int(self.executor_deaths)
+        out["respawns"] = int(self.respawns)
+        out["pool_degraded"] = bool(self.pool_degraded)
+
 
 @dataclass
 class _Request:
-    """Engine-side payload attached to each PackItem."""
+    """Engine-side payload attached to each PackItem.
+
+    ``req_id`` keys the engine's request registry — the single authority
+    over whether a future is still outstanding, which is what makes
+    resolution exactly-once across every completion/failure path.
+    ``deadline_t`` is an absolute ``perf_counter`` deadline (``None`` =
+    no deadline).
+    """
 
     future: Future
     record: bool
+    req_id: int = -1
+    queue: str = DEFAULT_QUEUE
+    deadline_t: Optional[float] = None
+    dispatched: bool = False     # on a device now: not sheddable
+
+
+@dataclass
+class _Inflight:
+    """One placed batch in the engine's in-flight registry (watchdog)."""
+
+    queue: str
+    batch: PackedBatch
+    ex: "DeviceExecutor"
+    t_placed: float
 
 
 def _resolve(fut: Future, result=None, exc: Optional[BaseException] = None
@@ -189,7 +280,14 @@ class GraphStreamEngine:
                  max_autotune: int = 5,
                  max_pending: int = 4096,
                  queues: Optional[Sequence[QueueConfig]] = None,
-                 devices: Optional[Sequence[Any]] = None):
+                 devices: Optional[Sequence[Any]] = None,
+                 max_retries: int = 1,
+                 retry_backoff_ms: float = 1.0,
+                 retry_backoff_max_ms: float = 50.0,
+                 validate_outputs: bool = True,
+                 inflight_timeout_s: Optional[float] = None,
+                 respawn_executors: bool = False,
+                 fault_injector: Optional[FaultInjector] = None):
         self.cfg = cfg
         self.params = params
         self.dataflow = dataflow
@@ -218,20 +316,30 @@ class GraphStreamEngine:
                             for qc in queue_cfgs}
         self._pending_by_queue = {qc.name: 0 for qc in queue_cfgs}
 
+        # failure-semantics knobs (DESIGN.md §8)
+        if max_retries < 0:
+            raise ValueError("max_retries must be >= 0")
+        self._max_retries = int(max_retries)
+        self._retry_backoff_s = max(0.0, retry_backoff_ms) * 1e-3
+        self._retry_backoff_max_s = max(0.0, retry_backoff_max_ms) * 1e-3
+        self._validate_outputs = bool(validate_outputs)
+        self._inflight_timeout_s = inflight_timeout_s
+        self._respawn = bool(respawn_executors)
+        self._faults = fault_injector
+
         # executor pool: one per device, params committed per device
         self._devices = (list(devices) if devices is not None
                          else list(jax.devices()))
         if not self._devices:
             raise ValueError("at least one device is required")
         self._executors = [
-            DeviceExecutor(device=d, index=i, params=p,
-                           build_fn=self._build_batch,
-                           program_fn=self._ensure_program,
-                           unpack_fn=self._unpack,
-                           on_complete=self._handle_completion,
-                           on_fatal=self._handle_fatal)
+            self._make_executor(d, i, p)
             for i, (d, p) in enumerate(
                 zip(self._devices, replicate_params(params, self._devices)))]
+        # executor-death requeues are bounded separately from poison
+        # retries: one hop per surviving executor plus slack covers any
+        # cascade of deaths without looping forever when the pool is gone
+        self._max_requeues = 2 * len(self._devices) + 2
 
         # autotune state; compiled programs live per executor (the
         # ``_compiled`` facade below merges them — its name is part of the
@@ -251,6 +359,20 @@ class GraphStreamEngine:
         self._closed = False
         self._stopped = False
         self._placer: Optional[threading.Thread] = None
+
+        # failure-semantics state, all under self._cv:
+        self._req_seq = 0                         # next request id
+        self._requests: Dict[int, _Request] = {}  # outstanding futures
+        self._retry_heap: List[Tuple[float, int, str, PackedBatch,
+                                     Optional[int]]] = []
+        self._retry_seq = 0
+        self._dispatch_seq = 0
+        self._inflight: Dict[int, _Inflight] = {}
+        self._deadline_heap: List[Tuple[float, int]] = []
+        self._deadlines_used = False
+        self._supervised: set = set()             # id(ex) already handled
+        self._watchdog: Optional[threading.Thread] = None
+        self._watchdog_stop = threading.Event()
 
     # ------------------------------------------------------------------
     # public API
@@ -278,7 +400,8 @@ class GraphStreamEngine:
     def submit(self, node_feat: np.ndarray, senders: np.ndarray,
                receivers: np.ndarray, edge_feat: Optional[np.ndarray] = None,
                node_pos: Optional[np.ndarray] = None,
-               record: bool = True, queue: Optional[str] = None) -> Future:
+               record: bool = True, queue: Optional[str] = None,
+               deadline: Optional[float] = None) -> Future:
         """Enqueue one arriving graph; the Future resolves to ITS prediction.
 
         Graph-level tasks resolve to a ``(out_dim,)`` vector; node-level
@@ -291,32 +414,48 @@ class GraphStreamEngine:
         queue must exist exactly (no silent remapping: a typo raises).
         Blocks (backpressure) while THIS tenant's ``max_pending`` graphs
         are outstanding — one queue at its cap never blocks another's
-        admission.
+        admission. ``deadline`` is a per-request budget in seconds from
+        enqueue: work whose deadline expires before it is dispatched is
+        shed and its future fails with ``DeadlineExceeded`` — expired
+        graphs never spend device time (DESIGN.md §8).
         """
         if edge_feat is None and self.cfg.edge_feat_dim != 1:
             raise ValueError("model expects edge features")
+        if deadline is not None and deadline <= 0:
+            raise ValueError("deadline must be > 0 seconds")
         if self._closed:        # don't spin up worker threads just to reject
-            raise RuntimeError("engine is closed")
+            raise EngineClosed("engine is closed")
         if queue is None:
             queue = self._scheduler.queue_names[0]
         elif queue not in self._scheduler.queue_names:
             raise KeyError(f"unknown queue '{queue}'; "
                            f"have {sorted(self._scheduler.queue_names)}")
+        with self._cv:
+            req_id = self._req_seq
+            self._req_seq += 1
+        if self._faults is not None:
+            self._faults.on_submit(req_id)       # may raise InjectedOOM
+        t_arrival = time.perf_counter()
         fut: Future = Future()
+        req = _Request(future=fut, record=record, req_id=req_id, queue=queue,
+                       deadline_t=(None if deadline is None
+                                   else t_arrival + deadline))
         item = PackItem(node_feat=node_feat, senders=senders,
                         receivers=receivers, edge_feat=edge_feat,
-                        node_pos=node_pos,
-                        payload=_Request(future=fut, record=record),
-                        t_arrival=time.perf_counter())
+                        node_pos=node_pos, payload=req, t_arrival=t_arrival)
         self._ensure_threads()
         cap = self._queue_caps[queue]
         with self._cv:
             self._cv.wait_for(
                 lambda: self._pending_by_queue[queue] < cap or self._closed)
             if self._closed:
-                raise RuntimeError("engine is closed")
+                raise EngineClosed("engine is closed")
             self._pending += 1
             self._pending_by_queue[queue] += 1
+            self._requests[req_id] = req
+            if req.deadline_t is not None:
+                self._deadlines_used = True
+                heapq.heappush(self._deadline_heap, (req.deadline_t, req_id))
             self._scheduler.add(queue, item, now=item.t_arrival)
             self._cv.notify_all()
         return fut
@@ -335,6 +474,12 @@ class GraphStreamEngine:
         Futures resolve incrementally as their batches complete — drain is
         a convenience barrier for callers that want the whole stream done,
         not a prerequisite for reading any individual result.
+
+        With ``timeout``, drain is BOUNDED even if an executor wedges: on
+        expiry every still-outstanding future fails with ``ExecutorDead``
+        (no caller is ever stranded on ``.result()``), then
+        ``TimeoutError`` is raised. Completions arriving after the
+        timeout are ignored via the request registry.
         """
         with self._cv:
             if self._placer is None:            # nothing ever submitted
@@ -343,14 +488,23 @@ class GraphStreamEngine:
             self._cv.notify_all()
             done = self._cv.wait_for(lambda: self._pending == 0, timeout)
             self._drain_requested = False
-            if not done:
-                raise TimeoutError("drain timed out")
+            victims = ([] if done else self._abandon_outstanding_locked())
+        if not done:
+            exc = ExecutorDead(
+                "drain timed out; outstanding work abandoned",
+                request_ids=tuple(r.req_id for r in victims))
+            for req in victims:
+                _resolve(req.future, exc=exc)
+            raise TimeoutError("drain timed out")
 
-    def close(self) -> None:
+    def close(self, timeout: Optional[float] = None) -> None:
         """Drain, stop the worker threads, and reject further submissions.
 
         Idempotent, and safe after a worker crash (which marks the engine
-        closed itself): each executor still gets its sentinel.
+        closed itself): each executor still gets its sentinel. With
+        ``timeout``, each join/stop is bounded; work still outstanding
+        after the budget fails with ``ExecutorDead`` instead of stranding
+        its caller (wedged daemon threads are abandoned).
         """
         with self._cv:
             self._closed = True
@@ -358,9 +512,37 @@ class GraphStreamEngine:
             self._stopped = True
             self._cv.notify_all()
         if self._placer is not None and not already_stopped:
-            self._placer.join()
+            self._placer.join(timeout)
             for ex in self._executors:
-                ex.stop()
+                ex.stop(timeout=timeout)
+            self._watchdog_stop.set()
+        with self._cv:
+            victims = self._abandon_outstanding_locked()
+        if victims:
+            exc = ExecutorDead(
+                "engine closed before completion",
+                request_ids=tuple(r.req_id for r in victims))
+            for req in victims:
+                _resolve(req.future, exc=exc)
+
+    def _abandon_outstanding_locked(self) -> List[_Request]:
+        """Pop EVERY outstanding request (scheduler-held, retrying, and
+        in-flight) so its future can be failed; late completions of
+        abandoned work become registry misses and are dropped. Must be
+        called under ``self._cv``; resolution happens outside it."""
+        self._scheduler.flush_all()
+        self._retry_heap.clear()
+        self._inflight.clear()
+        victims = list(self._requests.values())
+        self._requests.clear()
+        for req in victims:
+            self._pending -= 1
+            if req.queue in self._pending_by_queue:
+                self._pending_by_queue[req.queue] -= 1
+        if victims:
+            self.stats.record_failure(failed=len(victims))
+        self._cv.notify_all()
+        return victims
 
     def __enter__(self) -> "GraphStreamEngine":
         return self
@@ -439,6 +621,11 @@ class GraphStreamEngine:
             self._placer = threading.Thread(
                 target=self._place_loop, name="flowgnn-placer", daemon=True)
             self._placer.start()
+            if self._inflight_timeout_s is not None:
+                self._watchdog = threading.Thread(
+                    target=self._watchdog_loop, name="flowgnn-watchdog",
+                    daemon=True)
+                self._watchdog.start()
 
     def _place_loop(self) -> None:
         try:
@@ -449,28 +636,43 @@ class GraphStreamEngine:
 
     def _place_loop_inner(self) -> None:
         while True:
-            picked: Optional[Tuple[str, PackedBatch]] = None
+            picked = None          # (queue_name, pb, exclude_index)
+            to_fail: List[Tuple[_Request, BaseException]] = []
             with self._cv:
                 while picked is None:
                     now = time.perf_counter()
                     self._scheduler.poll(now)
+                    to_fail.extend(self._shed_scheduler_locked(now))
+                    if to_fail:
+                        break          # resolve outside the lock, re-enter
+                    has_cap = any(ex.has_capacity for ex in self._executors)
+                    # due retries jump the fairness queue: they are old
+                    # work that has already been charged virtual time
+                    if (has_cap and self._retry_heap
+                            and self._retry_heap[0][0] <= now):
+                        _, _, qn, pb, excl = heapq.heappop(self._retry_heap)
+                        picked = (qn, pb, excl)
+                        break
                     # pop from the scheduler only while some executor has
                     # pipeline room: excess backlog must queue HERE, where
                     # weighted fairness applies — not FIFO in an executor
                     # inbox where a late latency batch would sit behind
                     # the whole bulk backlog
-                    has_cap = any(ex.has_capacity for ex in self._executors)
                     if has_cap:
-                        picked = self._scheduler.next_batch()
-                        if picked is not None:
+                        nxt = self._scheduler.next_batch()
+                        if nxt is not None:
+                            picked = (nxt[0], nxt[1], None)
                             break
                     if self._drain_requested or self._closed:
                         if self._scheduler.open_batches:
                             self._scheduler.poll(float("inf"))
                             continue
-                        if self._closed and not self._scheduler.ready_batches:
+                        if (self._closed
+                                and not self._scheduler.ready_batches
+                                and not self._retry_heap):
                             return
-                        # ready batches remain, no capacity: wait below
+                        # ready/retrying batches remain, no capacity (or a
+                        # retry not yet due): wait below
                     elif (self._eager_flush and has_cap
                             and self._scheduler.open_batches
                             and any(ex.idle for ex in self._executors)):
@@ -478,38 +680,186 @@ class GraphStreamEngine:
                         # NOW beats waiting out its deadline (adaptive
                         # batching: under load, batches fill while every
                         # device is busy)
-                        picked = self._scheduler.flush_oldest_open()
+                        nxt = self._scheduler.flush_oldest_open()
+                        if nxt is not None:
+                            picked = (nxt[0], nxt[1], None)
                         break
-                    deadline = self._scheduler.next_deadline()
-                    self._cv.wait(timeout=None if deadline is None
-                                  else max(deadline - now, 0.0))
-            queue_name, pb = picked
-            # least-backlog placement across executors with pipeline room
-            # (ties: lowest index); dead executors are never chosen while
-            # an alive one exists
+                    wake = self._next_wake_locked(has_cap)
+                    self._cv.wait(timeout=None if wake is None
+                                  else max(wake - now, 0.0))
+                if picked is not None:
+                    # last-moment shedding: expired members of the popped
+                    # batch never reach a device
+                    queue_name, pb, exclude = picked
+                    pb, shed = self._shed_batch_locked(
+                        pb, time.perf_counter())
+                    to_fail.extend(shed)
+                    picked = (None if pb is None
+                              else (queue_name, pb, exclude))
+            for req, exc in to_fail:
+                _resolve(req.future, exc=exc)
+            if picked is not None:
+                self._place(*picked)
+
+    def _next_wake_locked(self, has_cap: bool) -> Optional[float]:
+        """Earliest reason for the placer to wake: a packer flush
+        deadline, a retry coming due (only useful with pipeline room —
+        a completion notifies when capacity frees), or a request deadline
+        to shed. Entries for requests already resolved or currently on a
+        device are discarded lazily (a dispatched request can no longer
+        be shed; if it requeues, pick-time shedding still covers it)."""
+        cands = []
+        d = self._scheduler.next_deadline()
+        if d is not None:
+            cands.append(d)
+        if has_cap and self._retry_heap:
+            cands.append(self._retry_heap[0][0])
+        while self._deadline_heap:
+            req = self._requests.get(self._deadline_heap[0][1])
+            if req is None or req.dispatched:
+                heapq.heappop(self._deadline_heap)
+                continue
+            cands.append(self._deadline_heap[0][0])
+            break
+        return min(cands) if cands else None
+
+    def _place(self, queue_name: str, pb: PackedBatch,
+               exclude: Optional[int] = None) -> None:
+        """Least-backlog placement across executors with pipeline room
+        (ties: lowest index); dead executors are never chosen while an
+        alive one exists, and a retry avoids the executor it failed on
+        (``exclude``) when any alternative is alive."""
+        with self._cv:
             cands = ([ex for ex in self._executors if ex.has_capacity]
-                     or [ex for ex in self._executors if not ex.dead]
-                     or self._executors)
-            ex = min(cands, key=lambda e: (e.backlog, e.index))
-            ex.submit(queue_name, pb)
+                     or [ex for ex in self._executors if not ex.dead])
+            if exclude is not None:
+                alt = [ex for ex in cands if ex.index != exclude]
+                cands = alt or cands
+            if not cands:          # whole pool dead: nothing can run this
+                reqs = self._take_requests_locked(pb)
+                self.stats.record_failure(queue=queue_name, failed=len(reqs))
+            else:
+                ex = min(cands, key=lambda e: (e.backlog, e.index))
+                pb.dispatch_id = self._dispatch_seq
+                self._dispatch_seq += 1
+                self._inflight[pb.dispatch_id] = _Inflight(
+                    queue=queue_name, batch=pb, ex=ex,
+                    t_placed=time.perf_counter())
+                for it in pb.items:
+                    it.payload.dispatched = True
+        if not cands:
+            exc = ExecutorDead("no live executor to run batch",
+                               request_ids=tuple(r.req_id for r in reqs))
+            for req in reqs:
+                _resolve(req.future, exc=exc)
+            return
+        ex.submit(queue_name, pb)
+
+    def _shed_scheduler_locked(self, now: float
+                               ) -> List[Tuple[_Request, BaseException]]:
+        """Shed expired graphs still held by the scheduler (under cv)."""
+        if not self._deadlines_used:
+            return []
+
+        def expired(it: PackItem) -> bool:
+            dt = it.payload.deadline_t
+            return dt is not None and dt <= now
+
+        out: List[Tuple[_Request, BaseException]] = []
+        for queue_name, it in self._scheduler.shed(expired):
+            req = self._requests.pop(it.payload.req_id, None)
+            if req is None:
+                continue
+            self._pending -= 1
+            if req.queue in self._pending_by_queue:
+                self._pending_by_queue[req.queue] -= 1
+            self.stats.record_failure(queue=req.queue, shed=1, failed=1)
+            out.append((req, DeadlineExceeded(
+                "deadline expired before dispatch",
+                request_ids=(req.req_id,))))
+        if out:
+            self._cv.notify_all()
+        return out
+
+    def _shed_batch_locked(self, pb: PackedBatch, now: float
+                           ) -> Tuple[Optional[PackedBatch],
+                                      List[Tuple[_Request, BaseException]]]:
+        """Shed expired members of a batch about to dispatch (under cv).
+
+        Survivors keep the sealed bucket shapes (``subset``) so the
+        compiled program — and result parity — are untouched. Returns
+        ``(None, fails)`` when every member expired."""
+        if not self._deadlines_used:
+            return pb, []
+        live: List[PackItem] = []
+        fails: List[Tuple[_Request, BaseException]] = []
+        for it in pb.items:
+            req = it.payload
+            if req.deadline_t is not None and req.deadline_t <= now:
+                popped = self._requests.pop(req.req_id, None)
+                if popped is None:
+                    continue       # already resolved elsewhere
+                self._pending -= 1
+                if req.queue in self._pending_by_queue:
+                    self._pending_by_queue[req.queue] -= 1
+                self.stats.record_failure(queue=req.queue, shed=1, failed=1)
+                fails.append((req, DeadlineExceeded(
+                    "deadline expired before dispatch",
+                    request_ids=(req.req_id,))))
+            else:
+                live.append(it)
+        if not fails:
+            return pb, []
+        self._cv.notify_all()
+        return (pb.subset(live) if live else None), fails
+
+    def _take_requests_locked(self, pb: PackedBatch) -> List[_Request]:
+        """Pop every still-outstanding request of ``pb`` (under cv)."""
+        out: List[_Request] = []
+        for it in pb.items:
+            req = self._requests.pop(it.payload.req_id, None)
+            if req is None:
+                continue
+            self._pending -= 1
+            if req.queue in self._pending_by_queue:
+                self._pending_by_queue[req.queue] -= 1
+            out.append(req)
+        if out:
+            self._cv.notify_all()
+        return out
 
     def _fail_scheduled(self, exc: BaseException) -> None:
-        """Placer died: close the engine and fail everything still queued."""
+        """Placer died: close the engine and fail everything not yet on an
+        executor (in-flight batches still complete normally)."""
         with self._cv:
             self._closed = True
             stranded = self._scheduler.flush_all()
-            for queue_name, pb in stranded:
-                self._pending -= pb.num_graphs
-                if queue_name in self._pending_by_queue:
-                    self._pending_by_queue[queue_name] -= pb.num_graphs
+            stranded.extend((qn, pb)
+                            for _, _, qn, pb, _ in self._retry_heap)
+            self._retry_heap.clear()
+            victims: List[_Request] = []
+            for _, pb in stranded:
+                victims.extend(self._take_requests_locked(pb))
+            if victims:
+                self.stats.record_failure(failed=len(victims))
             self._cv.notify_all()
-        for _, pb in stranded:
-            for it in pb.items:
-                _resolve(it.payload.future, exc=exc)
+        for req in victims:
+            _resolve(req.future, exc=exc)
 
     # ------------------------------------------------------------------
     # executor callbacks (dispatch threads / completer threads)
     # ------------------------------------------------------------------
+
+    def _make_executor(self, device, index: int, params) -> DeviceExecutor:
+        return DeviceExecutor(
+            device=device, index=index, params=params,
+            build_fn=self._build_batch,
+            program_fn=self._ensure_program,
+            unpack_fn=self._unpack,
+            on_complete=self._handle_completion,
+            on_fatal=self._handle_fatal,
+            fault_hook=(self._faults.executor_hook
+                        if self._faults is not None else None))
 
     def _build_batch(self, pb: PackedBatch) -> GraphBatch:
         return pb.build(pos_dim=self.cfg.pos_dim)
@@ -518,41 +868,240 @@ class GraphStreamEngine:
                            done: CompletedBatch) -> None:
         pb = done.batch
         with self._cv:
-            self._pending -= pb.num_graphs
-            if done.queue in self._pending_by_queue:
-                self._pending_by_queue[done.queue] -= pb.num_graphs
-            if done.err is None:
-                recorded = [it for it in pb.items if it.payload.record]
-                if recorded:
-                    self.stats.record_batch(
-                        latencies=[done.t_ready - it.t_arrival
-                                   for it in recorded],
-                        queue_waits=[done.t_build_start - it.t_arrival
-                                     for it in recorded],
-                        device_s=done.device_s, batch_size=len(recorded),
-                        t_dispatch=done.t_dispatch, t_done=done.t_ready,
-                        queue=done.queue, device=ex.label)
+            if pb.dispatch_id is not None:
+                if self._inflight.pop(pb.dispatch_id, None) is None:
+                    return      # superseded (watchdog/drain-timeout/close)
+        if done.err is None:
+            self._complete_ok(ex, done)
+        else:
+            self._complete_err(ex, done)
+
+    def _complete_ok(self, ex: DeviceExecutor, done: CompletedBatch) -> None:
+        pb = done.batch
+        resolved = []          # (future, result, exc)
+        with self._cv:
+            lat, qw = [], []
+            for i, it in enumerate(pb.items):
+                req = self._requests.pop(it.payload.req_id, None)
+                if req is None:
+                    continue   # resolved elsewhere (shed/abandoned)
+                self._pending -= 1
+                if req.queue in self._pending_by_queue:
+                    self._pending_by_queue[req.queue] -= 1
+                out = done.results[i]
+                if (self._validate_outputs
+                        and not bool(np.all(np.isfinite(out)))):
+                    # the output-validation gate: a non-finite result is
+                    # quarantined at the graph level, never returned
+                    self.stats.record_failure(queue=req.queue,
+                                              quarantined=1, failed=1)
+                    resolved.append((req.future, None, PoisonGraph(
+                        "non-finite output quarantined by validation gate",
+                        request_ids=(req.req_id,), executor_index=ex.index)))
+                    continue
+                if req.record:
+                    lat.append(done.t_ready - it.t_arrival)
+                    qw.append(done.t_build_start - it.t_arrival)
+                resolved.append((req.future, out, None))
+            if lat:
+                self.stats.record_batch(
+                    latencies=lat, queue_waits=qw, device_s=done.device_s,
+                    batch_size=len(lat), t_dispatch=done.t_dispatch,
+                    t_done=done.t_ready, queue=done.queue, device=ex.label)
             self._cv.notify_all()
-        for i, it in enumerate(pb.items):
-            if done.err is not None:
-                _resolve(it.payload.future, exc=done.err)
+        for fut, res, exc in resolved:
+            _resolve(fut, res, exc)
+
+    def _complete_err(self, ex: DeviceExecutor, done: CompletedBatch) -> None:
+        """Classify a failed batch: requeue (executor death), retry with
+        backoff (transient), bisect (retries exhausted, >1 graph), or
+        quarantine (single graph out of retries -> ``PoisonGraph``)."""
+        pb, err = done.batch, done.err
+        # a death-path failure (executor died / crash injected) is not
+        # evidence against the batch contents: requeue on survivors
+        is_death = (isinstance(err, ExecutorDead)
+                    or not isinstance(err, Exception))
+        resolved = []
+        with self._cv:
+            alive = any(not e.dead for e in self._executors)
+            retryable = not (self._stopped or self._closed) and alive
+            if is_death and retryable and pb.requeues < self._max_requeues:
+                pb.requeues += 1
+                self.stats.record_failure(queue=done.queue, retries=1)
+                self._push_retry_locked(done.queue, pb, delay=0.0,
+                                        exclude=ex.index)
+                return
+            if not is_death and retryable:
+                if pb.attempts < self._max_retries:
+                    pb.attempts += 1
+                    self.stats.record_failure(queue=done.queue, retries=1)
+                    self._push_retry_locked(
+                        done.queue, pb, delay=self._backoff(pb.attempts),
+                        exclude=ex.index)
+                    return
+                if pb.num_graphs > 1:
+                    # bisection quarantine: both halves re-run (same
+                    # bucket, no recompile); the poison graph is isolated
+                    # in log2(batch) steps while every healthy graph's
+                    # result stays bitwise identical to the fault-free run
+                    left, right = pb.split()
+                    self.stats.record_failure(queue=done.queue, retries=2)
+                    delay = self._backoff(1)
+                    self._push_retry_locked(done.queue, left, delay=delay,
+                                            exclude=ex.index)
+                    self._push_retry_locked(done.queue, right, delay=delay,
+                                            exclude=ex.index)
+                    return
+            # terminal: fail the futures
+            reqs = self._take_requests_locked(pb)
+            if not reqs:
+                return
+            ids = tuple(r.req_id for r in reqs)
+            if (not is_death and pb.num_graphs == 1
+                    and pb.attempts >= self._max_retries):
+                failure: EngineError = PoisonGraph(
+                    f"graph failed after {pb.attempts + 1} attempts: {err}",
+                    request_ids=ids, executor_index=ex.index)
+                self.stats.record_failure(queue=done.queue, quarantined=1,
+                                          failed=1)
+            elif is_death:
+                failure = ExecutorDead(
+                    f"executor died and work could not be re-placed: {err}",
+                    request_ids=ids, executor_index=ex.index)
+                self.stats.record_failure(queue=done.queue, failed=len(reqs))
             else:
-                _resolve(it.payload.future, done.results[i])
+                failure = BatchFailed(
+                    f"batch failed with retries exhausted: {err}",
+                    request_ids=ids, executor_index=ex.index)
+                self.stats.record_failure(queue=done.queue, failed=len(reqs))
+            failure.__cause__ = (err if isinstance(err, BaseException)
+                                 else None)
+            resolved = [(r.future, failure) for r in reqs]
+        for fut, exc in resolved:
+            _resolve(fut, exc=exc)
+
+    def _backoff(self, attempts: int) -> float:
+        """Bounded exponential backoff for attempt N (1-based)."""
+        return min(self._retry_backoff_s * (2.0 ** (attempts - 1)),
+                   self._retry_backoff_max_s)
+
+    def _push_retry_locked(self, queue: str, pb: PackedBatch, *,
+                           delay: float, exclude: Optional[int]) -> None:
+        pb.dispatch_id = None
+        for it in pb.items:
+            it.payload.dispatched = False    # sheddable again until placed
+        heapq.heappush(self._retry_heap,
+                       (time.perf_counter() + delay, self._retry_seq,
+                        queue, pb, exclude))
+        self._retry_seq += 1
+        self._cv.notify_all()
 
     def _handle_fatal(self, ex: DeviceExecutor, exc: BaseException) -> None:
-        # an executor loop died unexpectedly: stop accepting work and fail
-        # whatever the scheduler still holds (in-flight batches on other
-        # executors still complete normally)
-        self._fail_scheduled(exc)
+        # an executor loop died unexpectedly: supervision takes it out of
+        # rotation (its queued batches were failed by the executor and
+        # come back through _complete_err as requeues); the pool degrades
+        # instead of the engine dying with it
+        self._supervise(ex)
+
+    def _supervise(self, ex: DeviceExecutor) -> None:
+        """Take a dead executor out of rotation; optionally respawn it.
+
+        Runs on the dying worker thread (via ``on_fatal``) or the
+        watchdog. Idempotent per executor instance. With respawn enabled
+        a fresh executor (new committed params replica, empty program
+        cache) replaces it at the same pool slot; otherwise the pool
+        stays degraded and survivors absorb the work.
+        """
+        with self._cv:
+            if id(ex) in self._supervised:
+                return
+            self._supervised.add(id(ex))
+            self.stats.executor_deaths += 1
+            self.stats.pool_degraded = True
+            do_respawn = self._respawn and not self._stopped
+            self._cv.notify_all()
+        if do_respawn:
+            try:
+                fresh = self._make_executor(
+                    ex.device, ex.index,
+                    replicate_params(self.params, [ex.device])[0])
+                fresh.start()
+            except Exception:
+                fresh = None       # respawn failed: stay degraded
+            if fresh is not None:
+                with self._cv:
+                    self._executors[ex.index] = fresh
+                    self.stats.respawns += 1
+                    if not any(e.dead for e in self._executors):
+                        self.stats.pool_degraded = False
+                    self._cv.notify_all()
+                return
+        with self._cv:
+            if any(not e.dead for e in self._executors):
+                self._cv.notify_all()
+                return
+            # whole pool dead: nothing can serve — close and fail
+            # everything outstanding rather than strand submitters
+            self._closed = True
+            victims = self._abandon_outstanding_locked()
+        exc = ExecutorDead("every executor died",
+                           request_ids=tuple(r.req_id for r in victims))
+        for req in victims:
+            _resolve(req.future, exc=exc)
+
+    # ------------------------------------------------------------------
+    # in-flight watchdog
+    # ------------------------------------------------------------------
+
+    def _watchdog_loop(self) -> None:
+        """Fail batches stuck inside an executor past the in-flight
+        timeout: their executor is marked dead (its OTHER queued work
+        requeues on survivors via the death path) and the stuck batch's
+        futures fail with ``DeadlineExceeded`` — a wedged device never
+        strands a caller. The stuck batch is popped from the in-flight
+        registry first, so a late completion becomes a registry miss."""
+        timeout = self._inflight_timeout_s
+        interval = max(min(timeout / 4.0, 0.25), 1e-3)
+        while not self._watchdog_stop.wait(interval):
+            with self._cv:
+                if self._stopped:
+                    return
+                now = time.perf_counter()
+                stuck = [entry for entry in self._inflight.values()
+                         if now - entry.t_placed > timeout]
+                for entry in stuck:
+                    self._inflight.pop(entry.batch.dispatch_id, None)
+            for entry in stuck:
+                entry.ex.mark_dead(ExecutorDead(
+                    "executor exceeded the in-flight timeout",
+                    executor_index=entry.ex.index))
+                with self._cv:
+                    reqs = self._take_requests_locked(entry.batch)
+                    if reqs:
+                        self.stats.record_failure(queue=entry.queue,
+                                                  failed=len(reqs))
+                exc = DeadlineExceeded(
+                    f"batch stuck in flight > {timeout:.3f}s",
+                    request_ids=tuple(r.req_id for r in reqs),
+                    executor_index=entry.ex.index)
+                for req in reqs:
+                    _resolve(req.future, exc=exc)
+                self._supervise(entry.ex)
 
     def _unpack(self, pb: PackedBatch, out_np: np.ndarray
                 ) -> List[np.ndarray]:
         """Per-graph views of the packed output (copied so buffers detach)."""
         if self.cfg.task == "node":
             offs = pb.graph_offsets()
-            return [np.array(out_np[offs[i]:offs[i + 1]])
-                    for i in range(pb.num_graphs)]
-        return [np.array(out_np[i]) for i in range(pb.num_graphs)]
+            res = [np.array(out_np[offs[i]:offs[i + 1]])
+                   for i in range(pb.num_graphs)]
+        else:
+            res = [np.array(out_np[i]) for i in range(pb.num_graphs)]
+        if self._faults is not None:
+            # chaos: scripted NaN corruption lands here, between device
+            # readback and the engine's validation gate
+            res = self._faults.corrupt_outputs(pb, res)
+        return res
 
     # ------------------------------------------------------------------
     # per-executor program cache + shared per-bucket autotuning

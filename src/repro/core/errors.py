@@ -1,0 +1,66 @@
+"""Typed failure hierarchy for the serving stack (DESIGN.md §8).
+
+Every failure path in the scheduler/executor split resolves futures with
+one of these instead of a stringly ``RuntimeError``, so callers can
+``except PoisonGraph`` / ``except DeadlineExceeded`` and tell "my graph is
+bad" from "the pool is unhealthy" from "I asked for too little time".
+
+All of them subclass ``RuntimeError`` (pre-existing callers that caught
+``RuntimeError`` keep working) and carry
+
+  * ``request_ids``    — engine request ids of the affected graphs
+    (``GraphStreamEngine.submit`` assigns one per submission), and
+  * ``executor_index`` — the ``DeviceExecutor.index`` involved, when the
+    failure is attributable to one executor (``None`` otherwise).
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Sequence, Tuple
+
+
+class EngineError(RuntimeError):
+    """Base class for serving-stack failures."""
+
+    def __init__(self, message: str, *,
+                 request_ids: Sequence[int] = (),
+                 executor_index: Optional[int] = None):
+        self.request_ids: Tuple[int, ...] = tuple(request_ids)
+        self.executor_index = executor_index
+        tags = []
+        if self.request_ids:
+            ids = ",".join(map(str, self.request_ids[:8]))
+            if len(self.request_ids) > 8:
+                ids += ",..."
+            tags.append(f"requests=[{ids}]")
+        if executor_index is not None:
+            tags.append(f"executor={executor_index}")
+        super().__init__(f"{message} ({'; '.join(tags)})" if tags
+                         else message)
+
+
+class EngineClosed(EngineError):
+    """The engine was closed; no further submissions are accepted."""
+
+
+class BatchFailed(EngineError):
+    """A batch's execution failed after the retry budget was exhausted
+    without the failure being attributable to a single graph."""
+
+
+class PoisonGraph(BatchFailed):
+    """One graph was isolated as the cause of repeated batch failures
+    (bisection quarantine) or produced non-finite outputs (validation
+    gate). Only this graph's future fails; co-packed neighbors complete."""
+
+
+class DeadlineExceeded(EngineError):
+    """The graph's deadline (measured from enqueue time) expired before
+    dispatch, or its batch sat in an executor past the in-flight
+    timeout."""
+
+
+class ExecutorDead(EngineError):
+    """A ``DeviceExecutor`` worker died (crash, wedge past the watchdog
+    timeout, or shutdown) and the work could not be re-placed on a
+    survivor."""

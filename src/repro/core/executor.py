@@ -20,7 +20,19 @@ the engine injects
   * ``on_complete(ex, done)``        — called from this executor's
     completer thread with a ``CompletedBatch`` (results or error); the
     engine resolves futures and records stats there,
-  * ``on_fatal(ex, exc)``            — a worker loop died unexpectedly.
+  * ``on_fatal(ex, exc)``            — a worker loop died unexpectedly,
+  * ``fault_hook(site, ex, pb)``     — optional chaos-testing hook
+    (``core/faults.py``) called at the ``'dispatch'`` and ``'complete'``
+    sites; it may raise (injected failure/crash) or sleep (stall).
+
+Failure semantics (DESIGN.md §8): a worker-loop death marks the executor
+``dead``, fails the batch it was holding plus everything queued behind it
+with ``ExecutorDead`` (every future resolves; nothing is stranded on the
+staging pipe), and reports through ``on_fatal`` so the engine's
+supervisor can take this executor out of rotation and re-place the failed
+work on survivors. ``stop(timeout=...)`` bounds every join, so a wedged
+worker can never block shutdown; ``mark_dead`` is the engine watchdog's
+entry point for executors that are stuck rather than crashed.
 
 ``backlog`` (graphs submitted here and not yet completed) is what the
 engine's least-backlog placement reads; ``device_s`` in ``CompletedBatch``
@@ -39,6 +51,7 @@ from typing import Any, Callable, Dict, List, Optional, Tuple
 import jax
 import numpy as np
 
+from repro.core.errors import ExecutorDead
 from repro.core.packing import PackedBatch
 
 BucketKey = Tuple[int, int, int]
@@ -81,7 +94,9 @@ class DeviceExecutor:
                                      List[np.ndarray]],
                  on_complete: Callable[["DeviceExecutor", CompletedBatch],
                                        None],
-                 on_fatal: Callable[["DeviceExecutor", BaseException], None]):
+                 on_fatal: Callable[["DeviceExecutor", BaseException], None],
+                 fault_hook: Optional[Callable[[str, "DeviceExecutor",
+                                                PackedBatch], None]] = None):
         self.device = device
         self.index = index
         self.params = params                   # committed to ``device``
@@ -96,6 +111,7 @@ class DeviceExecutor:
         self._unpack_fn = unpack_fn
         self._on_complete = on_complete
         self._on_fatal = on_fatal
+        self._fault_hook = fault_hook
 
         self._inbox: "queue.Queue[Any]" = queue.Queue()
         # depth-2 staging = the double buffer: one batch executing, one
@@ -123,15 +139,34 @@ class DeviceExecutor:
         self._dispatcher.start()
         self._completer.start()
 
-    def stop(self) -> None:
+    def stop(self, timeout: Optional[float] = None) -> bool:
         """Finish queued work, then stop both threads. Idempotent, and
         safe after a worker-loop death (no deadlock on a full staging
-        queue; leftover batches fail rather than strand)."""
+        queue; leftover batches fail rather than strand).
+
+        With ``timeout`` every join is bounded: a wedged worker thread —
+        stuck inside a device computation, say — is declared dead instead
+        of blocking shutdown forever, and everything it still held fails
+        with ``ExecutorDead``. Returns True iff both threads exited
+        cleanly within the budget.
+        """
         if self._dispatcher is None or self._stopped:
-            return
+            return not self._dead
         self._stopped = True
+        deadline = (None if timeout is None
+                    else time.perf_counter() + timeout)
+
+        def _left() -> Optional[float]:
+            return (None if deadline is None
+                    else max(deadline - time.perf_counter(), 0.0))
+
         self._inbox.put(_SENTINEL)
-        self._dispatcher.join()
+        self._dispatcher.join(_left())
+        if self._dispatcher.is_alive():
+            self.mark_dead(ExecutorDead(
+                "executor dispatch thread wedged during stop",
+                executor_index=self.index))
+            return False
         while True:
             try:
                 self._staging.put(_SENTINEL, timeout=1.0)
@@ -139,9 +174,37 @@ class DeviceExecutor:
             except queue.Full:
                 if self._dead:       # completer is gone; drain below
                     break
-        self._completer.join()
-        self._drain_queues(RuntimeError("executor stopped after worker "
-                                        "death"))
+                left = _left()
+                if left is not None and left <= 0.0:
+                    self.mark_dead(ExecutorDead(
+                        "executor staging pipe wedged during stop",
+                        executor_index=self.index))
+                    return False
+        self._completer.join(_left())
+        if self._completer.is_alive():
+            self.mark_dead(ExecutorDead(
+                "executor completer thread wedged during stop",
+                executor_index=self.index))
+            return False
+        self._drain_queues(ExecutorDead(
+            "executor stopped after worker death",
+            executor_index=self.index))
+        return not self._dead
+
+    def mark_dead(self, exc: Optional[BaseException] = None) -> None:
+        """Declare this executor dead without waiting for its threads
+        (the engine watchdog's stuck-executor path, and wedged-stop).
+
+        Worker loops fail fast once ``_dead`` is set; everything queued
+        here resolves with ``exc`` immediately. The batch a wedged thread
+        is *currently* holding cannot be reached from here — the engine's
+        in-flight registry supersedes it (a late completion is ignored).
+        """
+        if exc is None:
+            exc = ExecutorDead("executor marked dead",
+                               executor_index=self.index)
+        self._dead = True
+        self._drain_queues(exc)
 
     # -- placement interface ---------------------------------------------
 
@@ -183,12 +246,11 @@ class DeviceExecutor:
             self._backlog += pb.num_graphs
             self._queued_batches += 1
         if self._dead:       # worker died since placement: fail, don't strand
-            self._fail_batch(queue_name, pb,
-                             RuntimeError("executor worker died"))
+            self._fail_batch(queue_name, pb, self._dead_exc())
             return
         self._inbox.put((queue_name, pb))
         if self._dead:       # raced a dying worker past its drain: re-drain
-            self._drain_queues(RuntimeError("executor worker died"))
+            self._drain_queues(self._dead_exc())
 
     def warm(self, key: BucketKey, g) -> None:
         """Compile (and run once) the bucket's program on this device."""
@@ -196,6 +258,10 @@ class DeviceExecutor:
         jax.block_until_ready(run(self.params, g))
 
     # -- worker loops -----------------------------------------------------
+
+    def _dead_exc(self) -> ExecutorDead:
+        return ExecutorDead("executor worker died",
+                            executor_index=self.index)
 
     def _finish(self, done: CompletedBatch) -> None:
         with self._lock:
@@ -226,27 +292,36 @@ class DeviceExecutor:
                 else:
                     self._fail_batch(item[0], item[1], exc)
 
-    def _loop_fatal(self, exc: BaseException) -> None:
+    def _loop_fatal(self, exc: BaseException,
+                    current: Optional[Tuple[str, PackedBatch]] = None
+                    ) -> None:
         # a worker loop died unexpectedly: mark the executor dead (the
         # surviving loop fails work instead of blocking on the pipe), fail
-        # everything still held here, then tell the engine
+        # the batch THIS loop was holding plus everything still queued
+        # here — no future is ever left unresolved — then tell the engine
         self._dead = True
+        if current is not None:
+            self._fail_batch(current[0], current[1], exc)
         self._drain_queues(exc)
         self._on_fatal(self, exc)
 
     def _dispatch_loop(self) -> None:
+        current: Optional[Tuple[str, PackedBatch]] = None
         try:
             while True:
                 item = self._inbox.get()
                 if item is _SENTINEL:
                     return
                 queue_name, pb = item
+                current = (queue_name, pb)
                 if self._dead:
-                    self._fail_batch(queue_name, pb,
-                                     RuntimeError("executor worker died"))
+                    self._fail_batch(queue_name, pb, self._dead_exc())
+                    current = None
                     continue
                 t_build = time.perf_counter()
                 try:
+                    if self._fault_hook is not None:
+                        self._fault_hook("dispatch", self, pb)
                     g = self._build_fn(pb)
                     run = self._program_fn(self, pb.bucket, g)
                     out = run(self.params, g)   # asynchronous dispatch
@@ -256,6 +331,7 @@ class DeviceExecutor:
                         queue=queue_name, batch=pb, results=None, err=exc,
                         t_build_start=t_build, t_dispatch=t, t_ready=t,
                         device_s=0.0))
+                    current = None
                     continue
                 # blocks while two batches are already staged (the double
                 # buffer): host packing overlaps device execution. The
@@ -265,28 +341,32 @@ class DeviceExecutor:
                                      time.perf_counter())
                 while True:
                     if self._dead:
-                        self._fail_batch(queue_name, pb,
-                                         RuntimeError("executor worker died"))
+                        self._fail_batch(queue_name, pb, self._dead_exc())
                         break
                     try:
                         self._staging.put(inflight, timeout=0.2)
                         break
                     except queue.Full:
                         continue
-        except BaseException as exc:            # pragma: no cover - defensive
-            self._loop_fatal(exc)
+                current = None
+        except BaseException as exc:
+            self._loop_fatal(exc, current)
             raise
 
     def _complete_loop(self) -> None:
         last_ready = 0.0
+        current: Optional[Tuple[str, PackedBatch]] = None
         try:
             while True:
                 item = self._staging.get()
                 if item is _SENTINEL:
                     return
+                current = (item.queue, item.batch)
                 err: Optional[Exception] = None
                 results: Optional[List[np.ndarray]] = None
                 try:
+                    if self._fault_hook is not None:
+                        self._fault_hook("complete", self, item.batch)
                     out_np = np.asarray(jax.block_until_ready(item.out))
                     results = self._unpack_fn(item.batch, out_np)
                 except Exception as exc:
@@ -296,11 +376,13 @@ class DeviceExecutor:
                 # in the staging pipe are not double-counted
                 device_s = t_ready - max(item.t_dispatch, last_ready)
                 last_ready = t_ready
+                current = None      # _finish resolves it (even if the
+                # engine callback then raises, the batch is accounted)
                 self._finish(CompletedBatch(
                     queue=item.queue, batch=item.batch, results=results,
                     err=err, t_build_start=item.t_build_start,
                     t_dispatch=item.t_dispatch, t_ready=t_ready,
                     device_s=device_s))
-        except BaseException as exc:            # pragma: no cover - defensive
-            self._loop_fatal(exc)
+        except BaseException as exc:
+            self._loop_fatal(exc, current)
             raise

@@ -26,7 +26,7 @@ from __future__ import annotations
 
 import time
 from dataclasses import dataclass, field
-from typing import Any, List, Optional, Tuple
+from typing import Any, Callable, List, Optional, Tuple
 
 import numpy as np
 
@@ -59,12 +59,24 @@ class PackItem:
 
 @dataclass
 class PackedBatch:
-    """A flushed batch: items in pack order plus the padded bucket shapes."""
+    """A flushed batch: items in pack order plus the padded bucket shapes.
+
+    ``attempts``/``requeues`` are the engine's retry bookkeeping
+    (DESIGN.md §8): ``attempts`` counts execution failures of this exact
+    item composition (when it exceeds the retry budget the batch is
+    bisected), ``requeues`` counts executor-death re-placements (which are
+    not evidence of a poison graph and have their own bound).
+    ``dispatch_id`` is the engine's in-flight registry key for the current
+    placement.
+    """
 
     items: List[PackItem]
     node_pad: int
     edge_pad: int
     graph_pad: int
+    attempts: int = 0
+    requeues: int = 0
+    dispatch_id: Optional[int] = None
 
     @property
     def num_graphs(self) -> int:
@@ -84,6 +96,31 @@ class PackedBatch:
         """(start, end) node rows of graph ``slot`` inside the packed batch."""
         offs = self.graph_offsets()
         return int(offs[slot]), int(offs[slot + 1])
+
+    def subset(self, items: List[PackItem]) -> "PackedBatch":
+        """A batch holding ``items`` in the SAME bucket as this one.
+
+        Keeping the parent's ``(node_pad, edge_pad, graph_pad)`` — rather
+        than re-sealing to a tighter bucket — means the already-compiled
+        program is reused (no compile on a retry path) and, by the packing
+        result-parity contract (§2/§5), every surviving graph's output
+        stays bitwise identical to the fault-free run.
+        """
+        sub = PackedBatch(items=list(items), node_pad=self.node_pad,
+                          edge_pad=self.edge_pad, graph_pad=self.graph_pad)
+        sub.attempts = self.attempts
+        return sub
+
+    def split(self) -> Tuple["PackedBatch", "PackedBatch"]:
+        """Bisect into two halves in pack order (bisection quarantine:
+        re-running both halves isolates a poison graph in log2 steps).
+        Halves keep this batch's bucket shapes and inherit ``attempts``,
+        so a failing half bisects again immediately instead of burning a
+        fresh retry budget per level."""
+        if self.num_graphs < 2:
+            raise ValueError("cannot split a single-graph batch")
+        mid = self.num_graphs // 2
+        return self.subset(self.items[:mid]), self.subset(self.items[mid:])
 
     def build(self, *, pos_dim: int = 1) -> GraphBatch:
         """Concatenate + pad into a device-ready ``GraphBatch`` (numpy work)."""
@@ -202,6 +239,28 @@ class GraphPacker:
         out = [self._seal(b) for b in self._open]
         self._open = []
         return out
+
+    def shed(self, expired: Callable[[PackItem], bool]) -> List[PackItem]:
+        """Remove (and return) every open item matching ``expired``.
+
+        The deadline-shedding path (DESIGN.md §8): a graph whose request
+        deadline has passed is dropped *before* it spends device time,
+        freeing its packing slot for live work. Emptied open batches are
+        discarded; survivors keep their flush deadline.
+        """
+        shed: List[PackItem] = []
+        for b in list(self._open):
+            keep = [it for it in b.items if not expired(it)]
+            if len(keep) == len(b.items):
+                continue
+            shed.extend(it for it in b.items if expired(it))
+            if not keep:
+                self._open.remove(b)
+                continue
+            b.items = keep
+            b.n_nodes = sum(it.num_nodes for it in keep)
+            b.n_edges = sum(it.num_edges for it in keep)
+        return shed
 
     def flush_oldest(self) -> Optional[PackedBatch]:
         """Flush the batch with the earliest deadline (idle-device path)."""

@@ -33,7 +33,7 @@ from __future__ import annotations
 
 import time
 from dataclasses import dataclass
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 from repro.core.packing import (DEFAULT_BUCKETS, GraphPacker, PackedBatch,
                                 PackItem)
@@ -176,6 +176,31 @@ class BatchScheduler:
             self._push_ready(q, flushed)
             moved += len(flushed)
         return moved
+
+    def shed(self, expired: Callable[[PackItem], bool]
+             ) -> List[Tuple[str, PackItem]]:
+        """Deadline shedding before dispatch (DESIGN.md §8): remove every
+        held graph matching ``expired`` — from open packer batches AND
+        already-flushed ready batches — and return them with their queue
+        names so the engine can fail their futures. Ready batches keep
+        their sealed bucket shapes (result parity for the survivors);
+        emptied ones vanish without charging virtual time."""
+        out: List[Tuple[str, PackItem]] = []
+        for q in self._queues.values():
+            for it in q.packer.shed(expired):
+                out.append((q.cfg.name, it))
+            kept: List[PackedBatch] = []
+            for pb in q.ready:
+                dead = [it for it in pb.items if expired(it)]
+                if dead:
+                    out.extend((q.cfg.name, it) for it in dead)
+                    live = [it for it in pb.items if not expired(it)]
+                    if not live:
+                        continue
+                    pb = pb.subset(live)
+                kept.append(pb)
+            q.ready = kept
+        return out
 
     def _push_ready(self, q: _TenantQueue, batches: List[PackedBatch]) -> None:
         if not batches:

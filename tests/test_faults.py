@@ -1,0 +1,431 @@
+"""Chaos suite: fault injection against the serving stack (DESIGN.md §8).
+
+Every test here drives the REAL engine through ``FaultInjector`` and
+asserts the failure-semantics contract: futures resolve exactly once
+(never stranded), poison graphs are isolated by retry-with-bisection so
+only THEIR futures fail, surviving graphs stay bitwise identical to a
+fault-free run (subsets keep the sealed bucket shapes), non-finite
+outputs are quarantined by the validation gate, deadlines shed expired
+work before dispatch, the in-flight watchdog reclaims wedged executors,
+and ``drain``/``close`` stay bounded with a timeout even when a worker
+is stuck. The acceptance scenario (poison graph co-packed with seven
+healthy ones while an executor is killed mid-stream on a multi-device
+pool) runs in the 4-host-device CI job.
+"""
+
+import time
+from concurrent.futures import Future
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core.engine import GraphStreamEngine
+from repro.core.errors import (BatchFailed, DeadlineExceeded, EngineClosed,
+                               EngineError, ExecutorDead, PoisonGraph)
+from repro.core.faults import FaultInjector, InjectedCrash, InjectedOOM
+from repro.core.models import PAPER_GNN_CONFIGS, make_gnn
+
+# injected worker crashes re-raise out of their (daemon) thread on
+# purpose — that IS the fault being tested, not a test bug
+pytestmark = pytest.mark.filterwarnings(
+    "ignore::pytest.PytestUnhandledThreadExceptionWarning")
+
+MULTI_DEVICE = len(jax.devices()) >= 2
+needs_multi = pytest.mark.skipif(
+    not MULTI_DEVICE, reason="needs >=2 devices "
+    "(XLA_FLAGS=--xla_force_host_platform_device_count=N)")
+
+
+def _cfg():
+    cfg = PAPER_GNN_CONFIGS["gin"]
+    return cfg.replace(num_layers=2, hidden_dim=16,
+                       head_mlp=(8,) if cfg.head_mlp else ())
+
+
+def _params(cfg):
+    return make_gnn(cfg).init(jax.random.PRNGKey(0), cfg)
+
+
+def _graphs(n, seed=3):
+    from repro.data.graphs import molhiv_like
+    return list(molhiv_like(seed=seed, n_graphs=n))
+
+
+def _engine(cfg, params, **kw):
+    kw.setdefault("max_batch", 8)
+    kw.setdefault("max_wait_ms", 200.0)
+    kw.setdefault("eager_flush", False)     # deterministic co-packing
+    return GraphStreamEngine(cfg, params, **kw)
+
+
+def _submit_all(eng, graphs, **kw):
+    return [eng.submit(g.node_feat, g.senders, g.receivers, g.edge_feat,
+                       g.node_pos, **kw) for g in graphs]
+
+
+def _baseline(cfg, params, graphs, **kw):
+    """Fault-free reference outputs for the same submission stream."""
+    with _engine(cfg, params, **kw) as eng:
+        futs = _submit_all(eng, graphs)
+        eng.drain(timeout=300)
+        return [f.result(timeout=5) for f in futs]
+
+
+def _assert_all_resolved(futs):
+    for i, f in enumerate(futs):
+        assert f.done(), f"future {i} left unresolved"
+
+
+# ---------------------------------------------------------------------------
+# injector determinism
+# ---------------------------------------------------------------------------
+
+def test_injector_coins_are_deterministic():
+    a = FaultInjector(seed=7, dispatch_error_rate=0.5, nan_rate=0.3)
+    b = FaultInjector(seed=7, dispatch_error_rate=0.5, nan_rate=0.3)
+    ids = range(200)
+    assert ([a.is_poison(r) for r in ids] == [b.is_poison(r) for r in ids])
+    assert ([a.is_nan(r) for r in ids] == [b.is_nan(r) for r in ids])
+    c = FaultInjector(seed=8, dispatch_error_rate=0.5)
+    assert ([a.is_poison(r) for r in ids] != [c.is_poison(r) for r in ids])
+    # rates actually bite: roughly half the coins land
+    hits = sum(a.is_poison(r) for r in ids)
+    assert 50 < hits < 150
+
+
+def test_injector_scripting():
+    inj = FaultInjector(seed=0).poison_request(3).nan_request(5)
+    assert inj.is_poison(3) and not inj.is_poison(4)
+    assert inj.is_nan(5) and not inj.is_nan(3)
+    inj.oom_request(1)
+    with pytest.raises(InjectedOOM):
+        inj.on_submit(1)
+    inj.on_submit(0)                         # healthy id passes
+
+
+# ---------------------------------------------------------------------------
+# poison isolation via retry + bisection quarantine
+# ---------------------------------------------------------------------------
+
+def test_poison_graph_isolated_by_bisection():
+    """One poison graph co-packed with 7 healthy ones: exactly its future
+    fails with PoisonGraph, every other output is bitwise identical to
+    the fault-free run, nothing is stranded, drain stays bounded."""
+    cfg, graphs = _cfg(), _graphs(8)
+    params = _params(cfg)
+    ref = _baseline(cfg, params, graphs)
+
+    inj = FaultInjector(seed=0).poison_request(3)
+    with _engine(cfg, params, fault_injector=inj) as eng:
+        futs = _submit_all(eng, graphs)
+        eng.drain(timeout=300)
+        _assert_all_resolved(futs)
+        with pytest.raises(PoisonGraph) as ei:
+            futs[3].result(timeout=5)
+        assert ei.value.request_ids == (3,)
+        for i, f in enumerate(futs):
+            if i == 3:
+                continue
+            np.testing.assert_array_equal(f.result(timeout=5), ref[i])
+        s = eng.stats.summary()
+        assert s["quarantined_graphs"] == 1
+        assert s["failed"] == 1
+        assert s["retries"] >= 2             # retry + bisection re-runs
+    assert inj.summary()["dispatch_error"] >= 2
+
+
+@needs_multi
+def test_acceptance_poison_with_executor_killed_mid_stream():
+    """The PR's acceptance scenario: a poison graph co-packed with 7
+    healthy ones on a multi-device pool with one executor killed
+    mid-stream. Exactly one future fails (PoisonGraph); all others are
+    bitwise identical to the fault-free run; no future is unresolved;
+    drain(timeout=...) returns within the timeout; the pool reports
+    degraded with one executor death."""
+    cfg, graphs = _cfg(), _graphs(8)
+    params = _params(cfg)
+    devices = list(jax.devices())
+    ref = _baseline(cfg, params, graphs, devices=devices)
+
+    inj = (FaultInjector(seed=0)
+           .poison_request(3)
+           .kill_executor(0, after_batches=0))
+    with _engine(cfg, params, devices=devices, fault_injector=inj) as eng:
+        futs = _submit_all(eng, graphs)
+        t0 = time.perf_counter()
+        eng.drain(timeout=300)
+        assert time.perf_counter() - t0 < 300
+        _assert_all_resolved(futs)
+        failed = [i for i, f in enumerate(futs) if f.exception() is not None]
+        assert failed == [3]
+        assert isinstance(futs[3].exception(), PoisonGraph)
+        for i, f in enumerate(futs):
+            if i == 3:
+                continue
+            np.testing.assert_array_equal(f.result(timeout=5), ref[i])
+        s = eng.stats.summary()
+        assert s["executor_deaths"] == 1
+        assert s["pool_degraded"] is True
+        assert s["quarantined_graphs"] == 1
+        assert eng._executors[0].dead
+    assert inj.summary()["crash"] == 1
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_seeded_rate_chaos_is_reproducible(seed):
+    """Randomized chaos at fixed seeds: the set of failed requests is
+    exactly the injector-predicted set (coins key on request ids, not on
+    thread interleaving), every failure is typed, every survivor is
+    bitwise identical to the fault-free run."""
+    cfg, graphs = _cfg(), _graphs(24)
+    params = _params(cfg)
+    ref = _baseline(cfg, params, graphs)
+
+    rates = dict(dispatch_error_rate=0.15, nan_rate=0.1)
+    inj = FaultInjector(seed=seed, **rates)
+    oracle = FaultInjector(seed=seed, **rates)
+    expected_failed = {r for r in range(len(graphs))
+                       if oracle.is_poison(r) or oracle.is_nan(r)}
+    assert expected_failed, "chaos seeds should hit at least one victim"
+
+    with _engine(cfg, params, fault_injector=inj) as eng:
+        futs = _submit_all(eng, graphs)
+        eng.drain(timeout=300)
+        _assert_all_resolved(futs)
+        failed = {i for i, f in enumerate(futs)
+                  if f.exception() is not None}
+        assert failed == expected_failed
+        for i, f in enumerate(futs):
+            if i in failed:
+                assert isinstance(f.exception(), PoisonGraph)
+            else:
+                np.testing.assert_array_equal(f.result(timeout=5), ref[i])
+
+
+# ---------------------------------------------------------------------------
+# NaN/Inf output-validation gate
+# ---------------------------------------------------------------------------
+
+def test_nan_gate_quarantines_offending_graph():
+    cfg, graphs = _cfg(), _graphs(4)
+    params = _params(cfg)
+    inj = FaultInjector(seed=0).nan_request(2)
+    with _engine(cfg, params, max_batch=4, fault_injector=inj) as eng:
+        futs = _submit_all(eng, graphs)
+        eng.drain(timeout=300)
+        _assert_all_resolved(futs)
+        with pytest.raises(PoisonGraph):
+            futs[2].result(timeout=5)
+        for i in (0, 1, 3):
+            out = futs[i].result(timeout=5)
+            assert np.all(np.isfinite(out))
+        assert eng.stats.quarantined == 1
+
+
+def test_nan_gate_can_be_disabled():
+    cfg, graphs = _cfg(), _graphs(2)
+    params = _params(cfg)
+    inj = FaultInjector(seed=0).nan_request(0)
+    with _engine(cfg, params, max_batch=2, fault_injector=inj,
+                 validate_outputs=False) as eng:
+        futs = _submit_all(eng, graphs)
+        eng.drain(timeout=300)
+        out = futs[0].result(timeout=5)
+        assert np.all(np.isnan(out))         # gate off: garbage flows
+
+
+# ---------------------------------------------------------------------------
+# submit-time OOM
+# ---------------------------------------------------------------------------
+
+def test_submit_oom_rejects_before_future_exists():
+    cfg, graphs = _cfg(), _graphs(3)
+    params = _params(cfg)
+    inj = FaultInjector(seed=0).oom_request(0)
+    with _engine(cfg, params, max_batch=2, fault_injector=inj) as eng:
+        with pytest.raises(InjectedOOM):
+            _submit_all(eng, graphs[:1])
+        futs = _submit_all(eng, graphs[1:])  # engine still serves
+        eng.drain(timeout=300)
+        for f in futs:
+            assert np.all(np.isfinite(f.result(timeout=5)))
+
+
+# ---------------------------------------------------------------------------
+# deadlines: shed before dispatch
+# ---------------------------------------------------------------------------
+
+def test_deadline_shed_before_dispatch():
+    cfg, graphs = _cfg(), _graphs(2)
+    params = _params(cfg)
+    with _engine(cfg, params, max_wait_ms=5000.0) as eng:
+        # never fills a batch, never flushes for 5s: the deadline fires
+        # long before dispatch could happen
+        fut = _submit_all(eng, graphs[:1], deadline=0.05)[0]
+        with pytest.raises(DeadlineExceeded):
+            fut.result(timeout=10)
+        assert eng.stats.shed_deadline == 1
+        # a generous deadline passes untouched
+        ok = _submit_all(eng, graphs[1:], deadline=30.0)[0]
+        eng.drain(timeout=300)
+        assert np.all(np.isfinite(ok.result(timeout=5)))
+
+
+def test_deadline_validation():
+    cfg = _cfg()
+    params = _params(cfg)
+    g = _graphs(1)[0]
+    with _engine(cfg, params) as eng:
+        with pytest.raises(ValueError):
+            eng.submit(g.node_feat, g.senders, g.receivers, g.edge_feat,
+                       g.node_pos, deadline=0.0)
+
+
+# ---------------------------------------------------------------------------
+# in-flight watchdog
+# ---------------------------------------------------------------------------
+
+def test_watchdog_reclaims_stalled_batch():
+    """A transfer stall longer than the in-flight timeout: the watchdog
+    fails the stuck batch with DeadlineExceeded, marks the executor dead,
+    and the late completion is ignored (registry miss, no crash)."""
+    cfg, graphs = _cfg(), _graphs(2)
+    params = _params(cfg)
+    inj = FaultInjector(seed=0, stall_s=1.5).stall_request(0)
+    with _engine(cfg, params, max_batch=2, fault_injector=inj,
+                 inflight_timeout_s=0.25) as eng:
+        # pre-compile the buckets this stream lands in: the in-flight
+        # clock starts at placement, so first-dispatch jit time would
+        # otherwise trip the watchdog before the stall does
+        eng.warmup_all(pairs=[(64, 128), (128, 256), (256, 512)])
+        futs = _submit_all(eng, graphs)
+        with pytest.raises(DeadlineExceeded):
+            futs[0].result(timeout=30)
+        _assert_all_resolved(futs)
+        assert eng.stats.executor_deaths >= 1
+        assert eng.stats.pool_degraded is True
+        time.sleep(1.6)        # let the stalled completer wake harmlessly
+        eng.close(timeout=10)
+    assert inj.summary()["stall"] == 1
+
+
+# ---------------------------------------------------------------------------
+# bounded drain/close: wedged executors never strand callers
+# ---------------------------------------------------------------------------
+
+def test_drain_timeout_fails_outstanding_futures():
+    cfg, graphs = _cfg(), _graphs(2)
+    params = _params(cfg)
+    inj = FaultInjector(seed=0, stall_s=6.0).stall_request(0)
+    eng = _engine(cfg, params, max_batch=2, fault_injector=inj)
+    futs = _submit_all(eng, graphs)
+    t0 = time.perf_counter()
+    with pytest.raises(TimeoutError):
+        eng.drain(timeout=0.5)
+    assert time.perf_counter() - t0 < 5.0
+    _assert_all_resolved(futs)
+    for f in futs:
+        assert isinstance(f.exception(), ExecutorDead)
+    assert eng.stats.failed == 2
+    t0 = time.perf_counter()
+    eng.close(timeout=1.0)                   # bounded despite the sleeper
+    assert time.perf_counter() - t0 < 10.0
+
+
+def test_close_timeout_is_bounded():
+    cfg, graphs = _cfg(), _graphs(1)
+    params = _params(cfg)
+    inj = FaultInjector(seed=0, stall_s=6.0).stall_request(0)
+    eng = _engine(cfg, params, max_batch=1, fault_injector=inj)
+    futs = _submit_all(eng, graphs)
+    time.sleep(0.3)                          # let it reach the stall
+    t0 = time.perf_counter()
+    eng.close(timeout=1.0)
+    assert time.perf_counter() - t0 < 10.0
+    _assert_all_resolved(futs)
+    assert isinstance(futs[0].exception(), ExecutorDead)
+
+
+def test_submit_after_close_raises_typed_error():
+    cfg = _cfg()
+    params = _params(cfg)
+    g = _graphs(1)[0]
+    eng = _engine(cfg, params)
+    eng.close()
+    with pytest.raises(EngineClosed):
+        eng.submit(g.node_feat, g.senders, g.receivers, g.edge_feat,
+                   g.node_pos)
+
+
+# ---------------------------------------------------------------------------
+# supervision: degradation and respawn
+# ---------------------------------------------------------------------------
+
+@needs_multi
+def test_executor_death_work_replaces_on_survivors():
+    """Kill one executor mid-stream on a pool: its work re-places on the
+    survivors, every future succeeds, the pool reports degraded."""
+    cfg, graphs = _cfg(), _graphs(12)
+    params = _params(cfg)
+    devices = list(jax.devices())
+    ref = _baseline(cfg, params, graphs, max_batch=4, devices=devices)
+    inj = FaultInjector(seed=0).kill_executor(0, after_batches=0)
+    with _engine(cfg, params, max_batch=4, devices=devices,
+                 fault_injector=inj) as eng:
+        futs = _submit_all(eng, graphs)
+        eng.drain(timeout=300)
+        _assert_all_resolved(futs)
+        for i, f in enumerate(futs):
+            np.testing.assert_array_equal(f.result(timeout=5), ref[i])
+        s = eng.stats.summary()
+        assert s["executor_deaths"] == 1
+        assert s["pool_degraded"] is True
+        assert s["retries"] >= 1             # the killed batch requeued
+
+
+def test_respawn_restores_the_pool():
+    """With respawn enabled a killed executor is replaced in its pool
+    slot (fresh params replica) and later submissions are served."""
+    cfg, graphs = _cfg(), _graphs(4)
+    params = _params(cfg)
+    inj = FaultInjector(seed=0).kill_executor(0, after_batches=0)
+    with _engine(cfg, params, max_batch=2, fault_injector=inj,
+                 respawn_executors=True) as eng:
+        first = _submit_all(eng, graphs[:2])
+        # the first batch dies with the executor; on a 1-device pool
+        # there is momentarily no survivor, so it may fail terminally —
+        # but it must RESOLVE either way
+        deadline = time.time() + 60
+        while eng.stats.respawns < 1 and time.time() < deadline:
+            time.sleep(0.02)
+        assert eng.stats.respawns == 1
+        later = _submit_all(eng, graphs[2:])
+        eng.drain(timeout=300)
+        _assert_all_resolved(first + later)
+        for f in later:
+            assert np.all(np.isfinite(f.result(timeout=5)))
+        for f in first:
+            if f.exception() is not None:
+                assert isinstance(f.exception(), EngineError)
+        assert eng.stats.pool_degraded is False
+        assert eng.stats.executor_deaths == 1
+
+
+def test_crash_rate_chaos_never_strands():
+    """Random crash chaos: whatever dies, every future resolves (success
+    or a typed EngineError) and drain/close stay bounded."""
+    cfg, graphs = _cfg(), _graphs(16)
+    params = _params(cfg)
+    inj = FaultInjector(seed=1, crash_rate=0.25)
+    with _engine(cfg, params, max_batch=4, fault_injector=inj,
+                 respawn_executors=True) as eng:
+        futs = _submit_all(eng, graphs)
+        try:
+            eng.drain(timeout=120)
+        except TimeoutError:
+            pass                             # bounded is the contract
+        _assert_all_resolved(futs)
+        for f in futs:
+            exc = f.exception()
+            assert exc is None or isinstance(exc, EngineError)

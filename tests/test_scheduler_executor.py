@@ -310,6 +310,90 @@ def test_executor_worker_death_fails_batches_and_stop_does_not_hang():
     assert ex.backlog == 0
 
 
+def _bare_executor(on_complete, on_fatal=None, fault_hook=None):
+    return DeviceExecutor(
+        device=jax.devices()[0], index=0, params=None,
+        build_fn=lambda pb: pb,
+        program_fn=lambda e, key, g: (lambda p, gg: np.zeros((1, 1))),
+        unpack_fn=lambda pb, out: [np.zeros(1)] * pb.num_graphs,
+        on_complete=on_complete,
+        on_fatal=on_fatal or (lambda e, exc: None),
+        fault_hook=fault_hook)
+
+
+def test_executor_dead_before_submit_fails_immediately():
+    """Work placed on an executor that is already dead must resolve with
+    ExecutorDead right away — never sit in a queue nobody drains."""
+    from repro.core.errors import ExecutorDead
+    from repro.core.packing import PackedBatch
+
+    calls = []
+    ex = _bare_executor(lambda e, done: calls.append(done))
+    ex.mark_dead()
+    pb = PackedBatch(items=[_item()], node_pad=32, edge_pad=64, graph_pad=1)
+    ex.submit("q", pb)
+    assert len(calls) == 1
+    assert isinstance(calls[0].err, ExecutorDead)
+    assert calls[0].err.executor_index == 0
+    assert ex.backlog == 0
+    assert not ex.has_capacity
+    assert ex.stop() is False                # dead executor reports it
+
+
+def test_executor_completer_crash_with_staged_batches():
+    """Completer death while batches sit in the depth-2 staging pipe:
+    the dispatcher's staging-put fallback must fail them instead of
+    blocking on the full pipe — every batch resolves, stop() returns."""
+    from repro.core.faults import InjectedCrash
+    from repro.core.packing import PackedBatch
+
+    calls, fatal = [], []
+
+    def crash_completer(site, ex, pb):
+        if site == "complete":
+            raise InjectedCrash("completer dies on first batch")
+
+    ex = _bare_executor(lambda e, done: calls.append(done),
+                        on_fatal=lambda e, exc: fatal.append(exc),
+                        fault_hook=crash_completer)
+    ex.start()
+    pbs = [PackedBatch(items=[_item(seed=i)], node_pad=32, edge_pad=64,
+                       graph_pad=1) for i in range(6)]
+    for pb in pbs:
+        ex.submit("q", pb)
+    deadline = time.time() + 20
+    while len(calls) < 6 and time.time() < deadline:
+        time.sleep(0.02)
+    assert ex.stop(timeout=10) is False
+    assert len(calls) == 6                   # no batch stranded
+    assert all(d.err is not None for d in calls)
+    assert any(isinstance(exc, InjectedCrash) for exc in fatal)
+    assert ex.backlog == 0
+    assert ex.dead
+
+
+def test_executor_stop_timeout_with_wedged_completer():
+    """stop(timeout=...) must return within the budget even when the
+    completer is stuck inside a long 'device' wait."""
+    from repro.core.packing import PackedBatch
+
+    def stall(site, ex, pb):
+        if site == "complete":
+            time.sleep(5.0)
+
+    calls = []
+    ex = _bare_executor(lambda e, done: calls.append(done),
+                        fault_hook=stall)
+    ex.start()
+    pb = PackedBatch(items=[_item()], node_pad=32, edge_pad=64, graph_pad=1)
+    ex.submit("q", pb)
+    time.sleep(0.2)                          # let it reach the stall
+    t0 = time.time()
+    assert ex.stop(timeout=0.5) is False
+    assert time.time() - t0 < 5.0
+    assert ex.dead
+
+
 # ---------------------------------------------------------------------------
 # multi-device executor pool (needs XLA_FLAGS host-device forcing; the
 # 4-device CI job runs these — single-device runs skip)

@@ -27,6 +27,12 @@ that committed the baseline) doesn't trip the gate: the calibration row —
 a plain XLA scatter at the standard shape — measures the machine, and
 what's gated is each kernel's slowdown *relative to it*. The calibration
 row itself is exempt by construction.
+
+``--edge-passes PATH`` gates the structural exit criterion: every
+``kernel.mp.edge_passes.<model>`` row in the file (per-layer edge-pass
+counts under forced-kernel ``impl='fused_layer'``) must be exactly 1,
+and all six models must be present. These rows hold counts, not
+timings, so they are machine-independent and never calibrated.
 """
 
 from __future__ import annotations
@@ -99,6 +105,29 @@ def check_stream(path: str, min_speedup: float,
     return failures
 
 
+EDGE_PASS_PREFIX = "kernel.mp.edge_passes."
+EDGE_PASS_MODELS = ("dgn", "gat", "gcn", "gin", "gin_vn", "pna")
+
+
+def check_edge_passes(path: str) -> list:
+    """Assert every model's per-layer edge-pass row is exactly 1."""
+    rows = load_rows(path)
+    failures = []
+    for model in EDGE_PASS_MODELS:
+        name = EDGE_PASS_PREFIX + model
+        passes = rows.get(name)
+        if passes is None:
+            print(f"FAIL {name}: row missing from {path}")
+            failures.append(f"{name}: row missing")
+            continue
+        ok = passes == 1
+        print(f"{'ok  ' if ok else 'FAIL'} {name}: "
+              f"{passes:g} edge pass(es) per layer (must be 1)")
+        if not ok:
+            failures.append(f"{name}: {passes:g} passes per layer != 1")
+    return failures
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("baseline", nargs="?", default=None,
@@ -129,12 +158,17 @@ def main(argv=None) -> int:
     ap.add_argument("--min-aggregate-speedup", type=float, default=1.8,
                     help="pool-scaling gate: minimum fresh/baseline "
                          "batch-64 aggregate_gps ratio")
+    ap.add_argument("--edge-passes", default=None, metavar="PATH",
+                    help="gate this BENCH_kernels.json's structural "
+                         "kernel.mp.edge_passes.* rows: every model must "
+                         "report exactly 1 pass per layer")
     args = ap.parse_args(argv)
 
     if bool(args.baseline) != bool(args.fresh):
         ap.error("baseline and fresh must be given together")
-    if not args.baseline and not args.stream:
-        ap.error("nothing to gate: give baseline+fresh and/or --stream")
+    if not args.baseline and not args.stream and not args.edge_passes:
+        ap.error("nothing to gate: give baseline+fresh, --stream "
+                 "and/or --edge-passes")
 
     if args.stream_baseline and not args.stream:
         ap.error("--stream-baseline needs --stream")
@@ -144,9 +178,11 @@ def main(argv=None) -> int:
             args.stream, args.min_batch64_speedup,
             baseline=args.stream_baseline,
             min_aggregate_speedup=args.min_aggregate_speedup)
+    if args.edge_passes:
+        stream_failures += check_edge_passes(args.edge_passes)
     if not args.baseline:
         if stream_failures:
-            print(f"\n{len(stream_failures)} stream gate failure(s)")
+            print(f"\n{len(stream_failures)} gate failure(s)")
             return 1
         print("\nno bench regressions")
         return 0

@@ -14,7 +14,8 @@ import numpy as np
 
 from benchmarks.common import Csv, time_best, time_fn
 from repro.core.graph import build_graph_batch
-from repro.core.message_passing import (FusableMessage, banked_segment_sum,
+from repro.core.message_passing import (FusableAttention, FusableMessage,
+                                        banked_segment_sum,
                                         count_edge_passes,
                                         fused_edge_aggregate,
                                         precompute_graph_stats,
@@ -248,6 +249,173 @@ def fused_layer_paths(csv: Csv):
     csv.add("kernel.mp.fused_layer.staged", best["staged"] * 1e6, shape)
 
 
+def attention_fused_paths(csv: Csv):
+    """The one-launch GAT and DGN layer edge phases (DESIGN.md §6/§7) vs
+    the staged sequences they replace, at the standard E=4096,D=64,N=1024
+    point.
+
+    ``fused_layer.gat`` runs the whole attention edge phase — per-edge
+    logits, leaky_relu, the flash-style online softmax (running max +
+    rescaled denominator per destination), and the weighted scatter —
+    under ONE dispatch (1 edge pass). ``fused_layer.gat_staged`` is the
+    pre-PR7 sequence: the 3-sweep softmax pre-pass as its own dispatch
+    with the (E, H) attention stream materialized between, then the
+    weighted-scatter pipeline (4 edge passes total). ``fused_layer.dgn``
+    / ``.dgn_staged`` repeat the comparison for the directional-field
+    layer: one dispatch for gather, stacked [src | src*w] lanes,
+    sum+mean aggregation, the |s1 - x·wsum| combine and the post MLP —
+    vs the edge phase and the combine+MLP epilogue as two dispatches
+    with the (N, 4D) aggregate round-tripping between them.
+    """
+    rng = np.random.default_rng(8)
+    e, d, n, h = 4096, 64, 1024, 4
+    x = rng.normal(size=(n, d)).astype(np.float32)
+    snd = rng.integers(0, n, size=e).astype(np.int32)
+    rcv = rng.integers(0, n, size=e).astype(np.int32)
+    g = build_graph_batch(x, snd, rcv, node_pad=n, edge_pad=e)
+    stats = precompute_graph_stats(g)
+    xj = jnp.asarray(x)
+    df_fl = DataflowConfig(impl="fused_layer")
+    df_pipe = DataflowConfig(impl="pipeline")
+
+    # --- GAT: in-sweep online softmax vs softmax pre-pass ---
+    a_s = jnp.asarray(rng.normal(size=(n, h)).astype(np.float32))
+    a_d = jnp.asarray(rng.normal(size=(n, h)).astype(np.float32))
+
+    def gat_one_launch(xx, asrc, adst):
+        return fused_edge_aggregate(
+            g, xx, FusableMessage(attention=FusableAttention(
+                src_logits=asrc, dst_logits=adst)),
+            kinds=("sum",), dataflow=df_fl, stats=stats)["sum"]
+
+    with count_edge_passes() as ps:
+        jax.eval_shape(gat_one_launch, xj, a_s, a_d)
+    passes_gat = ps.passes
+
+    softmax_prepass = jax.jit(lambda asrc, adst: segment_softmax(
+        jax.nn.leaky_relu(
+            jnp.take(asrc, g.senders, axis=0)
+            + jnp.take(adst, g.receivers, axis=0), negative_slope=0.2),
+        g.receivers, g.n_node_pad, edge_mask=g.edge_mask))
+    weighted_scatter = jax.jit(lambda xx, att: fused_edge_aggregate(
+        g, xx, FusableMessage(src_weight=att), kinds=("sum",),
+        dataflow=df_pipe, stats=stats)["sum"])
+
+    def gat_staged(xx, asrc, adst):
+        # (E, H) attention stream materializes between the dispatches
+        return weighted_scatter(xx, softmax_prepass(asrc, adst))
+
+    with count_edge_passes() as ps:
+        jax.eval_shape(
+            lambda xx, asrc, adst: fused_edge_aggregate(
+                g, xx, FusableMessage(src_weight=segment_softmax(
+                    jax.nn.leaky_relu(
+                        jnp.take(asrc, g.senders, axis=0)
+                        + jnp.take(adst, g.receivers, axis=0),
+                        negative_slope=0.2),
+                    g.receivers, g.n_node_pad, edge_mask=g.edge_mask)),
+                kinds=("sum",), dataflow=df_pipe, stats=stats)["sum"],
+            xj, a_s, a_d)
+    passes_gat_staged = ps.passes
+
+    # --- DGN: in-launch field combine vs staged edge phase + epilogue ---
+    wdir = jnp.asarray(rng.normal(size=(e,)).astype(np.float32))
+    w_sum = jax.ops.segment_sum(wdir, jnp.asarray(rcv), num_segments=n)
+    lane_w = jnp.concatenate(
+        [jnp.ones((e, d), jnp.float32),
+         jnp.broadcast_to(wdir[:, None], (e, d))], axis=-1)
+    w_post = jnp.asarray(rng.normal(size=(3 * d, d)).astype(np.float32) * 0.1)
+    b_post = jnp.zeros((d,), jnp.float32)
+
+    def dgn_edge(xx, df):
+        return fused_edge_aggregate(
+            g, xx, FusableMessage(
+                node_input=jnp.concatenate([xx, xx], axis=-1),
+                src_weight=lane_w),
+            kinds=("sum", "mean"), dataflow=df, stats=stats)
+
+    def dgn_combine(xx, agg):
+        m_mean = agg["mean"][:, :d]
+        m_dx = jnp.abs(agg["sum"][:, d:] - xx * w_sum[:, None])
+        z = jnp.concatenate([xx, m_mean, m_dx], axis=-1)
+        return jax.nn.relu(z @ w_post + b_post)
+
+    def dgn_one_launch(xx):
+        return dgn_combine(xx, dgn_edge(xx, df_fl))
+
+    with count_edge_passes() as ps:
+        jax.eval_shape(dgn_one_launch, xj)
+    passes_dgn = ps.passes
+
+    dgn_edge_stage = jax.jit(lambda xx: dgn_edge(xx, df_pipe))
+    dgn_epilogue = jax.jit(dgn_combine)
+
+    best = time_best({
+        "gat": functools.partial(jax.jit(gat_one_launch), xj, a_s, a_d),
+        "gat_staged": lambda: gat_staged(xj, a_s, a_d),
+        "dgn": functools.partial(jax.jit(dgn_one_launch), xj),
+        "dgn_staged": lambda: dgn_epilogue(xj, dgn_edge_stage(xj)),
+    }, rounds=7, iters=9)
+    shape = f"E={e},D={d},N={n},H={h}"
+    csv.add("kernel.mp.fused_layer.gat", best["gat"] * 1e6,
+            f"{shape};edge_passes={passes_gat};"
+            f"speedup_vs_staged={best['gat_staged'] / best['gat']:.2f}x;"
+            f"in-sweep online softmax, jnp mirror path")
+    csv.add("kernel.mp.fused_layer.gat_staged", best["gat_staged"] * 1e6,
+            f"{shape};edge_passes={passes_gat_staged};"
+            f"softmax pre-pass + weighted scatter")
+    csv.add("kernel.mp.fused_layer.dgn", best["dgn"] * 1e6,
+            f"E={e},D={d},N={n};edge_passes={passes_dgn};"
+            f"speedup_vs_staged={best['dgn_staged'] / best['dgn']:.2f}x;"
+            f"directional-field combine in-launch, jnp mirror path")
+    csv.add("kernel.mp.fused_layer.dgn_staged", best["dgn_staged"] * 1e6,
+            f"E={e},D={d},N={n};edge phase + combine/MLP as two dispatches")
+
+
+def edge_pass_paths(csv: Csv):
+    """Structural acceptance rows (PR 7 exit criterion): per-layer edge
+    passes for ALL SIX models under forced-kernel ``impl='fused_layer'``
+    must be exactly 1. The figure is the L=3 minus L=2 trace-time count,
+    which cancels each model's hoisted (layer-invariant) stats sweeps.
+    ``us_per_call`` holds the pass count, not a time — gated structurally
+    by ``check_regression.py --edge-passes``."""
+    from repro.core import message_passing as mp_mod
+    from repro.core.graph import concat_raw_graphs
+    from repro.core.models import PAPER_GNN_CONFIGS, make_gnn
+    from repro.data.graphs import molhiv_like
+
+    raw = concat_raw_graphs(list(molhiv_like(seed=0, n_graphs=1)))
+    g = build_graph_batch(
+        raw["node_feat"], raw["senders"], raw["receivers"],
+        edge_feat=raw["edge_feat"], node_pos=raw["node_pos"],
+        graph_offsets=raw["graph_offsets"], node_pad=64, edge_pad=128,
+        graph_pad=1)
+
+    mp_mod._FORCE_PIPELINE_KERNEL = True
+    try:
+        for name in sorted(PAPER_GNN_CONFIGS):
+            counts = {}
+            for layers in (2, 3):
+                cfg = PAPER_GNN_CONFIGS[name].replace(
+                    num_layers=layers, hidden_dim=16,
+                    head_mlp=(8,) if PAPER_GNN_CONFIGS[name].head_mlp
+                    else ())
+                model = make_gnn(cfg)
+                params = model.init(jax.random.PRNGKey(0), cfg)
+                df = DataflowConfig(impl="fused_layer")
+                with count_edge_passes() as ps:
+                    jax.eval_shape(
+                        lambda p, gg, _c=cfg, _m=model: _m.apply(
+                            p, gg, _c, df), params, g)
+                counts[layers] = ps.passes
+            per_layer = counts[3] - counts[2]
+            csv.add(f"kernel.mp.edge_passes.{name}", float(per_layer),
+                    f"per-layer edge passes, forced-kernel fused_layer "
+                    f"(L=3 count {counts[3]} - L=2 count {counts[2]})")
+    finally:
+        mp_mod._FORCE_PIPELINE_KERNEL = False
+
+
 def vs_segment_ops_paths(csv: Csv):
     """ROADMAP item: the Pallas MP-unit kernels against the plain
     ``jax.ops.segment_*`` lowerings at the standard E=4096,D=64,N=1024
@@ -331,6 +499,39 @@ def vs_segment_ops_paths(csv: Csv):
     csv.add("kernel.mp.vs_segment_ops.layer_fused_pna", t_pna * 1e6,
             f"E={e},D={d},N={n},layer=pna(13d->d);interpret-mode "
             f"one-launch scaler-epilogue kernel (structural)")
+
+    # the in-sweep online-softmax form (GAT): logits, flash-style
+    # rescale, weighted scatter inside the pipeline kernel
+    h = 4
+    a_s = jnp.asarray(rng.normal(size=(n, h)).astype(np.float32))
+    a_d = jnp.asarray(rng.normal(size=(n, h)).astype(np.float32))
+    t_att = time_fn(
+        lambda: kops.mp_pipeline(x, snd, rcv, mask, n, stats=("sum",),
+                                 att_src=a_s, att_dst=a_d),
+        warmup=1, iters=2)
+    csv.add("kernel.mp.vs_segment_ops.pipeline_attention", t_att * 1e6,
+            f"E={e},D={d},N={n},H={h};interpret-mode in-sweep online "
+            f"softmax kernel (structural)")
+
+    # the directional-field epilogue form (DGN): |s1 - x·wsum| combine
+    # + post MLP in-launch
+    wdir = jnp.asarray(rng.normal(size=(e,)).astype(np.float32))
+    wsum = jax.ops.segment_sum(wdir, rcv, num_segments=n)
+    lane_w = jnp.concatenate(
+        [jnp.ones((e, d), jnp.float32),
+         jnp.broadcast_to(wdir[:, None], (e, d))], axis=-1)
+    x2 = jnp.concatenate([x, x], axis=-1)
+    w_field = jnp.asarray(
+        rng.normal(size=(3 * d, d)).astype(np.float32) * 0.1)
+    t_dgn = time_fn(
+        lambda: kops.layer_fused(x, snd, rcv, mask, n, w1=w_field,
+                                 b1=b_post, node_input=x2,
+                                 src_weight=lane_w, field_wsum=wsum,
+                                 degrees=deg, out_activation="relu"),
+        warmup=1, iters=2)
+    csv.add("kernel.mp.vs_segment_ops.layer_fused_dgn", t_dgn * 1e6,
+            f"E={e},D={d},N={n},layer=dgn(3d->d);interpret-mode "
+            f"one-launch field-epilogue kernel (structural)")
 
 
 def forward_trace_paths(csv: Csv):

@@ -45,6 +45,8 @@ TABLES = {
                             kernel_bench.multi_agg_paths(csv),
                             kernel_bench.pipeline_paths(csv),
                             kernel_bench.fused_layer_paths(csv),
+                            kernel_bench.attention_fused_paths(csv),
+                            kernel_bench.edge_pass_paths(csv),
                             kernel_bench.vs_segment_ops_paths(csv),
                             kernel_bench.forward_trace_paths(csv),
                             kernel_bench.softmax_paths(csv),

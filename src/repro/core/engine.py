@@ -1190,10 +1190,16 @@ class GraphStreamEngine:
             bt = clamp(banks, tile)
             if bt not in pairs:
                 pairs.append(bt)
-        cands = [self.dataflow.replace(num_banks=b, edge_tile=t)
-                 for b, t in pairs[:3]]
-        for impl in impls[1:]:
-            cands.append(cands[0].replace(impl=impl))
+        # impl diversity outranks tile diversity under truncation: the
+        # staged default must survive into every bucket's timed set (the
+        # PNA fused-pipeline regression showed a fused candidate can lose
+        # to staged by 15%+, so fused vs staged stays a measured choice)
+        base = self.dataflow.replace(num_banks=pairs[0][0],
+                                     edge_tile=pairs[0][1])
+        cands = [base]
+        cands += [base.replace(impl=impl) for impl in impls[1:]]
+        cands += [self.dataflow.replace(num_banks=b, edge_tile=t)
+                  for b, t in pairs[1:3]]
 
         if self._max_autotune > len(cands):
             seen = {(c.num_banks, c.edge_tile, c.impl) for c in cands}
@@ -1213,7 +1219,7 @@ class GraphStreamEngine:
         candidates on the first batch of this bucket (on the executor that
         received it); cache and persist the winner for the whole pool."""
         timings: Dict[str, float] = {}
-        best_df, best_t = None, float("inf")
+        best_df, best_t, best_name = None, float("inf"), None
         for df in self._candidate_dataflows(key):
             run = self._make_run(df, donate=False)
             try:
@@ -1226,12 +1232,14 @@ class GraphStreamEngine:
                 name += f"_{df.impl}"
             timings[name] = t * 1e6
             if t < best_t:
-                best_df, best_t = df, t
+                best_df, best_t, best_name = df, t, name
         if best_df is None:                # every candidate failed: fall back
             best_df = self.dataflow
         self._tuned[key] = best_df
         log: Dict[str, Any] = {"candidates_us": timings,
                                "device": ex.label}
+        if best_name is not None:
+            log["winner"] = best_name
         if np.isfinite(best_t):
             log["best_us"] = best_t * 1e6
         self._tune_log[key] = log
@@ -1246,6 +1254,13 @@ class GraphStreamEngine:
     # ------------------------------------------------------------------
     # autotune cache persistence
     # ------------------------------------------------------------------
+
+    # Bumped whenever the candidate set or the lowering behind an impl
+    # name changes meaning (schema 2: one-launch attention/field forms —
+    # GAT/DGN buckets tuned against the pre-flash candidate set must not
+    # stay pinned to the old staged winners). A cache file whose
+    # "__schema__" does not match is ignored on load and rebuilt on save.
+    AUTOTUNE_CACHE_SCHEMA = 2
 
     def _cache_fingerprint(self) -> str:
         """Workload + topology identity for the autotune cache.
@@ -1268,6 +1283,10 @@ class GraphStreamEngine:
             raw = json.loads(open(path).read())
         except (OSError, ValueError):
             return
+        if not isinstance(raw, dict):
+            return
+        if raw.get("__schema__") != self.AUTOTUNE_CACHE_SCHEMA:
+            return                 # stale (or pre-versioning) cache: re-tune
         section = raw.get(self._cache_fingerprint(), {})
         if not isinstance(section, dict):
             return
@@ -1296,6 +1315,9 @@ class GraphStreamEngine:
                     existing = {}
             except (OSError, ValueError):
                 existing = {}
+        if existing.get("__schema__") != self.AUTOTUNE_CACHE_SCHEMA:
+            existing = {}              # drop every stale-schema section
+        existing["__schema__"] = self.AUTOTUNE_CACHE_SCHEMA
         existing[self._cache_fingerprint()] = {
             "x".join(map(str, key)): {"num_banks": df.num_banks,
                                       "edge_tile": df.edge_tile,

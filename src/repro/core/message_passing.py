@@ -315,6 +315,34 @@ DEFAULT_DATAFLOW = DataflowConfig()
 
 
 @dataclass(frozen=True)
+class FusableAttention:
+    """An edge softmax the pipeline kernel folds INTO the sweep (DESIGN.md §6).
+
+    Describes GAT-style additive attention through its per-node halves:
+
+        logit_e = leaky_relu( src_logits[senders[e]]
+                              + dst_logits[receivers[e]], slope )   # (H,)
+        weight  = softmax over each destination's incoming edges, per head
+
+    On the kernel path the softmax runs flash-attention style inside the
+    fused gather-phi-scatter sweep — a per-(dest, head) running max and an
+    online-rescaled denominator carried in the VMEM accumulator, with a
+    per-bank normalization epilogue — so the logits, exp-rescale, weighted
+    scatter and epilogue are ONE launch (no 2-sweep softmax pre-pass). The
+    jnp mirror computes the identical 2-pass ``segment_softmax`` weights
+    and stays bitwise-equal to the unfused model path.
+
+      src_logits  (N, H)  per-node source attention half (NT side)
+      dst_logits  (N, H)  per-node destination attention half
+      slope       float   leaky_relu negative slope (GAT uses 0.2)
+    """
+
+    src_logits: Array
+    dst_logits: Array
+    slope: float = 0.2
+
+
+@dataclass(frozen=True)
 class FusableMessage:
     """A phi the pipeline kernel can apply in-register (DESIGN.md §6).
 
@@ -335,11 +363,15 @@ class FusableMessage:
                           node-side matmuls (PNA's W_src) belong here — NT
                           work on N rows instead of E rows
       src_weight  (E,) or (E, D)  multiplicative per-edge weight on the
-                          gathered row (GCN norm, GAT attention lanes)
+                          gathered row (GCN norm, precomputed edge weights)
       edge_term   (E, D)  additive per-edge term (edge embeddings); an
                           x-independent input stream, not a message buffer
       bias        (D,)    additive bias
       activation  str     'none' | 'relu'
+      attention   :class:`FusableAttention`  in-sweep online softmax
+                          weighting of the phi output (GAT); restricts the
+                          aggregation to ``kinds=('sum',)`` and is mutually
+                          exclusive with ``src_weight``
     """
 
     node_input: Optional[Array] = None
@@ -347,6 +379,7 @@ class FusableMessage:
     edge_term: Optional[Array] = None
     bias: Optional[Array] = None
     activation: str = "none"
+    attention: Optional[FusableAttention] = None
 
 
 # the multi-statistic bundle the scaler-epilogue form consumes, in the
@@ -375,19 +408,35 @@ class FusableUpdate:
     invariant, from ``PrecomputedGraphStats``): the kernel derives the
     four statistics from its sum/sumsq/keyed-max/keyed-min accumulators
     and contracts the scalers in-register, so PNA's whole layer is one
-    launch too. Updates with non-linear combines on the aggregate (DGN's
-    ``|·|``) or no matmul at all (GAT) stay on the two-stage pipeline
-    path — ``propagate`` falls back automatically.
+    launch too. And the **directional field** form (``field_wsum`` set),
+    DGN's absolute-value combine over the stacked [x | x·w-lane] buffer:
+
+        x' = act_out( mlp( concat(x, s1[:, :D_x]/deg,
+                                  |s1[:, D_x:] - x·field_wsum|) ) )
+
+    where ``field_wsum`` is the per-destination sum of the directional
+    field weights (layer-invariant, from ``PrecomputedGraphStats``): the
+    kernel closes the ``|B_dx X|`` derivative on its single sum
+    accumulator, so DGN's layer is one launch too. Updates with no matmul
+    at all (GAT) instead run the attention-fused pipeline
+    (:class:`FusableAttention`) as their one launch.
 
       self_coeff  scalar or (N,)  weight on the residual self term (None
                                   drops it; mutually exclusive with
-                                  ``scalers``)
+                                  ``scalers``/``field_wsum``)
       scalers     (N, S)          per-node degree scalers: selects the
                                   scaler-contraction epilogue (aggregate
                                   kinds must be ``PNA_STAT_KINDS`` and
                                   shared ``stats.degrees`` must be present)
+      field_wsum  (N,)            per-destination field-weight sums:
+                                  selects the directional-field epilogue
+                                  (aggregate kinds must be
+                                  ``('sum', 'mean')``, ``stats.degrees``
+                                  must be present, and the fusable phi
+                                  must gather the stacked 2·D_x buffer)
       w1, b1      (D_in, D_ff), (D_ff,)   first dense layer (D_in = D for
-                                  the self form, D + S·4·D for scalers)
+                                  the self form, D + S·4·D for scalers,
+                                  3·D_x for the field form)
       w2, b2      (D_ff, D_out), (D_out,)  optional second layer; a ReLU
                                   is applied between the two
       out_activation  'none' | 'relu'   final activation. Layer-position-
@@ -401,6 +450,7 @@ class FusableUpdate:
     b1: Array
     self_coeff: Optional[Union[Array, float]] = None
     scalers: Optional[Array] = None
+    field_wsum: Optional[Array] = None
     w2: Optional[Array] = None
     b2: Optional[Array] = None
     out_activation: str = "none"
@@ -440,6 +490,14 @@ def fused_edge_aggregate(
     for k in kinds:
         if k not in AGG_KINDS:
             raise ValueError(f"unknown aggregation '{k}'")
+    if fusable.attention is not None:
+        if kinds != ("sum",):
+            raise ValueError(
+                f"attention-fused aggregation requires kinds=('sum',), "
+                f"got {kinds}")
+        if fusable.src_weight is not None:
+            raise ValueError(
+                "attention and src_weight are mutually exclusive")
     y = x if fusable.node_input is None else fusable.node_input
     degrees = stats.degrees if stats is not None else None
     out_dtype = y.dtype
@@ -450,8 +508,22 @@ def fused_edge_aggregate(
             return _pipeline_kernel_stats(
                 graph, y, fusable, kinds, dataflow, degrees, out_dtype)
         from repro.kernels.mp_pipeline import apply_fusable_phi
+        src_weight = fusable.src_weight
+        if fusable.attention is not None:
+            # the mirror computes the 2-pass softmax weights with the
+            # exact op sequence of the unfused model path (bitwise-parity
+            # contract); the kernel path above folds the softmax into the
+            # sweep instead
+            att = fusable.attention
+            logits = jax.nn.leaky_relu(
+                att.src_logits[graph.senders]
+                + att.dst_logits[graph.receivers],
+                negative_slope=att.slope)
+            src_weight = segment_softmax(
+                logits, graph.receivers, graph.n_node_pad,
+                edge_mask=graph.edge_mask)
         msg = apply_fusable_phi(
-            y, graph.senders, src_weight=fusable.src_weight,
+            y, graph.senders, src_weight=src_weight,
             edge_term=fusable.edge_term, bias=fusable.bias,
             activation=fusable.activation).astype(out_dtype)
         inner = dataflow.replace(impl="fused")
@@ -481,11 +553,15 @@ def _pipeline_kernel_stats(graph, y, fusable, kinds, dataflow, degrees,
         "count": degrees is None and (want_moments or "max" in kinds
                                       or "min" in kinds),
     }
+    att = fusable.attention
     raw = kops.mp_pipeline(
         y, graph.senders, graph.receivers, graph.edge_mask,
         graph.n_node_pad, stats=tuple(s for s, w in want.items() if w),
         src_weight=fusable.src_weight, edge_term=fusable.edge_term,
         bias=fusable.bias, activation=fusable.activation,
+        att_src=None if att is None else att.src_logits,
+        att_dst=None if att is None else att.dst_logits,
+        att_slope=0.2 if att is None else att.slope,
         edge_tile=dataflow.edge_tile, num_banks=dataflow.num_banks)
     deg = degrees if degrees is not None else raw.get("count")
     if deg is not None and deg.ndim == 2:
@@ -888,7 +964,8 @@ def propagate(
     if dataflow.impl in ("pipeline", "fused_layer") and fusable is not None:
         fu = fusable_update
         if (dataflow.impl == "fused_layer" and fu is not None
-                and fu.scalers is None and kinds == ("sum",)
+                and fu.scalers is None and fu.field_wsum is None
+                and kinds == ("sum",) and fusable.attention is None
                 and fusable.node_input is None and _pipeline_uses_kernel()):
             # the one-launch layer step: NT epilogue inside the kernel
             _count_pass()
@@ -923,6 +1000,30 @@ def propagate(
                     edge_term=fusable.edge_term, phi_bias=fusable.bias,
                     phi_activation=fusable.activation,
                     scalers=fu.scalers, degrees=stats.degrees,
+                    w2=fu.w2, b2=fu.b2,
+                    out_activation=fu.out_activation,
+                    edge_tile=dataflow.edge_tile,
+                    num_banks=dataflow.num_banks)
+            return jnp.where(graph.node_mask[:, None], out, 0.0)
+        if (dataflow.impl == "fused_layer" and fu is not None
+                and fu.field_wsum is not None and kinds == ("sum", "mean")
+                and stats is not None and stats.degrees is not None
+                and fusable.node_input is not None
+                and _pipeline_uses_kernel()):
+            # the directional-field one-launch layer step (DGN): plain and
+            # field-weighted message lanes accumulate side by side and the
+            # |s1 - x·wsum| combine + update MLP run in the epilogue
+            _count_pass()
+            with _uncounted():
+                from repro.kernels import ops as kops
+                out = kops.layer_fused(
+                    x, graph.senders, graph.receivers, graph.edge_mask,
+                    graph.n_node_pad, w1=fu.w1, b1=fu.b1,
+                    node_input=fusable.node_input,
+                    src_weight=fusable.src_weight,
+                    edge_term=fusable.edge_term, phi_bias=fusable.bias,
+                    phi_activation=fusable.activation,
+                    field_wsum=fu.field_wsum, degrees=stats.degrees,
                     w2=fu.w2, b2=fu.b2,
                     out_activation=fu.out_activation,
                     edge_tile=dataflow.edge_tile,

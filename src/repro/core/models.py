@@ -21,6 +21,7 @@ from repro.core.graph import GraphBatch
 from repro.core.message_passing import (
     DEFAULT_DATAFLOW,
     DataflowConfig,
+    FusableAttention,
     FusableMessage,
     FusableUpdate,
     PrecomputedGraphStats,
@@ -31,7 +32,6 @@ from repro.core.message_passing import (
     propagate,
     scan_layers,
     segment_aggregate,
-    segment_multi_aggregate,
     segment_softmax,
 )
 
@@ -368,21 +368,24 @@ def gat_apply(params, graph: GraphBatch, cfg: GNNConfig,
         # per-node attention halves (computed once per node — NT side)
         alpha_src = jnp.einsum("nhd,hd->nh", h, p["a_src"])
         alpha_dst = jnp.einsum("nhd,hd->nh", h, p["a_dst"])
-        logits = jax.nn.leaky_relu(
-            alpha_src[graph.senders] + alpha_dst[graph.receivers],
-            negative_slope=0.2)                                   # (E, H)
-        att = segment_softmax(logits, graph.receivers, N,
-                              edge_mask=graph.edge_mask,
-                              dataflow=dataflow)                  # (E, H)
         if dataflow.impl in _FUSABLE_IMPLS:
-            # the softmax pre-pass stays, but the h[senders] * att scatter
-            # fuses: the (E, H) attention lanes ride along as-is and the
-            # kernel/mirror broadcast them across head_dim in-register —
-            # the (E, H·Dh) expansion never costs host bandwidth
+            # one-launch attention: per-edge logits, leaky_relu, the flash
+            # style online softmax (running max + rescaled denominator per
+            # dest bank) and the weighted scatter all fold into the edge
+            # sweep (DESIGN.md §6) — no seg_softmax pre-pass and no (E, H)
+            # attention stream through HBM
             agg = fused_edge_aggregate(
-                graph, h.reshape(N, H * Dh), FusableMessage(src_weight=att),
+                graph, h.reshape(N, H * Dh),
+                FusableMessage(attention=FusableAttention(
+                    src_logits=alpha_src, dst_logits=alpha_dst)),
                 kinds=("sum",), dataflow=dataflow, stats=stats)["sum"]
         else:
+            logits = jax.nn.leaky_relu(
+                alpha_src[graph.senders] + alpha_dst[graph.receivers],
+                negative_slope=0.2)                               # (E, H)
+            att = segment_softmax(logits, graph.receivers, N,
+                                  edge_mask=graph.edge_mask,
+                                  dataflow=dataflow)              # (E, H)
             msg = h[graph.senders] * att[..., None]               # (E, H, Dh)
             _count_pass()         # the gather + weight message rewrite
             agg = segment_aggregate(
@@ -540,29 +543,37 @@ def dgn_apply(params, graph: GraphBatch, cfg: GNNConfig,
              jnp.broadcast_to(w[:, None], (e_pad, d))], axis=-1)
 
     def layer_step(xx, p):
+        # single-pass multi-statistic sweep: the mean aggregator and the
+        # directional sum come out of ONE pass over [x_src | x_src*w]
+        # (degrees and the field normalizer come precomputed via ``stats``)
+        def message(src, dst, ee):
+            return jnp.concatenate([src, src * w[:, None]], axis=-1)
+
+        def update(xv, m, _p=p):
+            # m = concat(sum, mean) over the stacked lanes: (N, 4D)
+            m_mean = m[:, 2 * d:3 * d]
+            m_dir = m[:, d:2 * d]
+            m_dx = jnp.abs(m_dir - xv * w_sum[:, None])       # |B_dx X|
+            h = _dense(_p["post"], jnp.concatenate([xv, m_mean, m_dx], -1))
+            return jax.nn.relu(h)
+
+        # fusable gamma: the directional-field epilogue — under
+        # impl='fused_layer' on kernel backends the |s1 - x·wsum| combine
+        # and the post MLP run inside the same launch as the edge sweep
+        # (DESIGN.md §7), so DGN is one launch per layer too
+        fus = None
+        fu = None
         if dataflow.impl in _FUSABLE_IMPLS:
-            agg = fused_edge_aggregate(
-                graph, xx, FusableMessage(
-                    node_input=jnp.concatenate([xx, xx], axis=-1),
-                    src_weight=lane_w),
-                kinds=("sum", "mean"), dataflow=dataflow, stats=stats)
-        else:
-            # single-pass multi-statistic MP unit: the mean aggregator and
-            # the directional sum come out of ONE sweep over
-            # [x_src | x_src*w] (degrees and the field normalizer come
-            # precomputed via ``stats``).
-            x_src = xx[graph.senders]
-            stacked = jnp.concatenate([x_src, x_src * w[:, None]], axis=-1)
-            _count_pass()         # the gather + stacking message rewrite
-            agg = segment_multi_aggregate(
-                stacked, graph.receivers, N, kinds=("sum", "mean"),
-                edge_mask=graph.edge_mask, dataflow=dataflow,
-                degrees=stats.degrees)
-        m_mean = agg["mean"][:, :d]
-        m_dir = agg["sum"][:, d:2 * d]
-        m_dx = jnp.abs(m_dir - xx * w_sum[:, None])           # |B_dx X|
-        h = _dense(p["post"], jnp.concatenate([xx, m_mean, m_dx], -1))
-        return jnp.where(graph.node_mask[:, None], jax.nn.relu(h), 0.0)
+            fus = FusableMessage(
+                node_input=jnp.concatenate([xx, xx], axis=-1),
+                src_weight=lane_w)
+            if dataflow.impl == "fused_layer":
+                fu = FusableUpdate(w1=p["post"]["w"], b1=p["post"]["b"],
+                                   field_wsum=w_sum, out_activation="relu")
+
+        return propagate(graph, xx, message_fn=message, update_fn=update,
+                         aggregate=("sum", "mean"), dataflow=dataflow,
+                         stats=stats, fusable=fus, fusable_update=fu)
 
     if dataflow.scan_layers and cfg.num_layers > 1:
         def body(xx, p):

@@ -35,9 +35,17 @@ materialization* (Fig. 4b). This kernel closes that gap (DESIGN.md §7):
   (PNA's pre-linear node-side transform) swaps the resident gather buffer
   while the self/concat rows still come from the carry ``x``.
 
-Gammas outside both forms (DGN's |·| combine, GAT's no-matmul update)
-keep the two-stage ``mp_pipeline`` path under ``impl='fused_layer'`` —
-see ``core.message_passing.propagate``.
+  **field** (DGN's directional |·| combine) — one sum accumulator over
+  the stacked [x | x·w-lane] gather buffer (width 2·D_x):
+
+      mean = s1[:, :D_x] / deg
+      dx   = |s1[:, D_x:] - x_bank · field_wsum|     # |B_dx X| closed in-register
+      out  = act_out( mlp( concat(x_bank, mean, dx) ) )
+
+GAT's attention-weighted aggregate has no update matmul; it runs the
+attention-fused ``mp_pipeline`` (online softmax in the edge sweep) as its
+one launch under ``impl='fused_layer'`` — see
+``core.message_passing.propagate``.
 
 VMEM sizing: on top of the ``mp_pipeline`` working set (resident node
 buffer N_pad × D, gather route edge_tile × N_pad), a grid step holds the
@@ -67,19 +75,21 @@ def _layer_fused_kernel(*refs, bank_size: int, edge_tile: int, n_pad: int,
                         sw_mode: str, head_dim: int, has_et: bool,
                         has_phi_bias: bool, phi_activation: str,
                         self_mode: str, two_layer: bool,
-                        out_activation: str, epilogue: str, n_scalers: int):
+                        out_activation: str, epilogue: str, n_scalers: int,
+                        d_x: int = 0):
     it = iter(refs)
     snd_ref, recv_ref, mask_ref = next(it), next(it), next(it)
     sw_ref = next(it) if sw_mode != "none" else None
     et_ref = next(it) if has_et else None
     pb_ref = next(it) if has_phi_bias else None
     y_ref = next(it)                                  # resident (n_pad, D)
-    # the bank's own slice of the carry x (self term / scaler concat)
-    needs_xb = self_mode != "none" or epilogue == "scalers"
+    # the bank's own slice of the carry x (self term / epilogue concat)
+    needs_xb = self_mode != "none" or epilogue in ("scalers", "field")
     xb_ref = next(it) if needs_xb else None
     sc_ref = next(it) if self_mode != "none" else None
     scal_ref = next(it) if epilogue == "scalers" else None
-    deg_ref = next(it) if epilogue == "scalers" else None
+    deg_ref = next(it) if epilogue in ("scalers", "field") else None
+    wsum_ref = next(it) if epilogue == "field" else None
     w1_ref, b1_ref = next(it), next(it)
     w2_ref = next(it) if two_layer else None
     b2_ref = next(it) if two_layer else None
@@ -102,7 +112,7 @@ def _layer_fused_kernel(*refs, bank_size: int, edge_tile: int, n_pad: int,
     mask = mask_ref[...].reshape(edge_tile)
     valid = mask != 0
 
-    msg = _gather_phi_tile(
+    msg, _ = _gather_phi_tile(
         y_ref, snd, valid, sw_ref, et_ref, pb_ref, edge_tile=edge_tile,
         n_pad=n_pad, sw_mode=sw_mode, head_dim=head_dim,
         activation=phi_activation)
@@ -163,6 +173,19 @@ def _layer_fused_kernel(*refs, bank_size: int, edge_tile: int, n_pad: int,
             z = jnp.concatenate(
                 [xb_ref[...].astype(jnp.float32)]
                 + [m * sc[:, k:k + 1] for k in range(n_scalers)], axis=-1)
+        elif epilogue == "field":
+            # DGN's |·| directional combine (DESIGN.md §7): the single sum
+            # accumulator carries the stacked [x_src | x_src·w] lanes; the
+            # mean half is degree-normalized and the directional half
+            # closes the derivative |Σ w·x_src - x·Σw| in-register
+            acc = scratch[0][...]
+            deg = deg_ref[...].astype(jnp.float32)            # (bank, 1)
+            rdenom = 1.0 / jnp.maximum(deg, 1.0)
+            xb = xb_ref[...].astype(jnp.float32)
+            mean = acc[:, :d_x] * rdenom
+            dx = jnp.abs(acc[:, d_x:] - xb * wsum_ref[...].astype(
+                jnp.float32))
+            z = jnp.concatenate([xb, mean, dx], axis=-1)
         else:
             z = scratch[0][...]
             if self_mode == "scalar":
@@ -183,6 +206,7 @@ def layer_fused(x: Array, senders: Array, receivers: Array, edge_mask: Array,
                 edge_term: Array = None, phi_bias: Array = None,
                 phi_activation: str = "none", self_coeff=None,
                 scalers: Array = None, degrees: Array = None,
+                field_wsum: Array = None,
                 w2: Array = None, b2: Array = None,
                 out_activation: str = "none", edge_tile: int = 128,
                 num_banks: int = 4, interpret: bool = True) -> Array:
@@ -202,9 +226,17 @@ def layer_fused(x: Array, senders: Array, receivers: Array, edge_mask: Array,
         m   = concat(mean, std, max, min)          # derived in-register
         out = act_out( mlp( concat(x, s_0*m, ..., s_{S-1}*m) ) )
 
-    ``mlp`` is one dense layer (w1, b1) or two with a ReLU between
-    (w1, b1, w2, b2). Returns (num_nodes, D_out) in ``x.dtype``. Uneven
-    E / num_nodes are padded internally.
+    or — with ``field_wsum`` (N,) and ``degrees`` — DGN's directional
+    field form: the gather buffer is the stacked [x | x·w-lane] pair
+    (width 2·D_x) and the epilogue derives
+
+        out = act_out( mlp( concat(x, s1[:, :D_x]/deg,
+                                   |s1[:, D_x:] - x·field_wsum|) ) )
+
+    from the single sum accumulator. ``mlp`` is one dense layer (w1, b1)
+    or two with a ReLU between (w1, b1, w2, b2). Returns
+    (num_nodes, D_out) in ``x.dtype``. Uneven E / num_nodes are padded
+    internally.
     """
     if phi_activation not in ("none", "relu"):
         raise ValueError(f"unsupported activation '{phi_activation}'")
@@ -212,10 +244,12 @@ def layer_fused(x: Array, senders: Array, receivers: Array, edge_mask: Array,
         raise ValueError(f"unsupported activation '{out_activation}'")
     if (w2 is None) != (b2 is None):
         raise ValueError("w2 and b2 must be given together")
-    if scalers is not None and self_coeff is not None:
-        raise ValueError("self_coeff and scalers are mutually exclusive")
-    if scalers is not None and degrees is None:
-        raise ValueError("the scalers epilogue needs the shared degrees")
+    if sum(p is not None for p in (self_coeff, scalers, field_wsum)) > 1:
+        raise ValueError(
+            "self_coeff, scalers and field_wsum are mutually exclusive")
+    if (scalers is not None or field_wsum is not None) and degrees is None:
+        raise ValueError(
+            "the scalers/field epilogues need the shared degrees")
     n, d_x = x.shape
     if n != num_nodes:
         raise ValueError(f"node buffer has {n} rows, expected {num_nodes}")
@@ -224,11 +258,18 @@ def layer_fused(x: Array, senders: Array, receivers: Array, edge_mask: Array,
         raise ValueError(
             f"node_input has {y.shape[0]} rows, expected {num_nodes}")
     d = y.shape[1]                        # message / accumulator width
-    epilogue = "scalers" if scalers is not None else "self_mlp"
+    epilogue = ("scalers" if scalers is not None
+                else "field" if field_wsum is not None else "self_mlp")
     n_scalers = 0
     if epilogue == "scalers":
         n_scalers = scalers.shape[1]
         d_in = d_x + n_scalers * 4 * d
+    elif epilogue == "field":
+        if d != 2 * d_x:
+            raise ValueError(
+                f"the field epilogue expects a stacked gather buffer of "
+                f"width 2·{d_x}, got {d}")
+        d_in = d_x + d
     else:
         d_in = d
     if w1.shape[0] != d_in:
@@ -307,6 +348,20 @@ def layer_fused(x: Array, senders: Array, receivers: Array, edge_mask: Array,
             pl.BlockSpec((bank_size, n_scalers), lambda b, t: (b, 0)))
         inputs.append(deg)
         in_specs.append(pl.BlockSpec((bank_size, 1), lambda b, t: (b, 0)))
+    elif epilogue == "field":
+        # the carry rows join the concat; degrees + field weight sums
+        # stream per bank
+        inputs.append(x)
+        in_specs.append(pl.BlockSpec((bank_size, d_x), lambda b, t: (b, 0)))
+        deg = jnp.asarray(degrees, jnp.float32).reshape(num_nodes, 1)
+        wsum = jnp.asarray(field_wsum, jnp.float32).reshape(num_nodes, 1)
+        if n_pad != num_nodes:
+            deg = jnp.pad(deg, ((0, n_pad - num_nodes), (0, 0)))
+            wsum = jnp.pad(wsum, ((0, n_pad - num_nodes), (0, 0)))
+        inputs.append(deg)
+        in_specs.append(pl.BlockSpec((bank_size, 1), lambda b, t: (b, 0)))
+        inputs.append(wsum)
+        in_specs.append(pl.BlockSpec((bank_size, 1), lambda b, t: (b, 0)))
 
     d_ff = w1.shape[1]
     inputs += [w1, b1.astype(jnp.float32).reshape(1, d_ff)]
@@ -323,7 +378,7 @@ def layer_fused(x: Array, senders: Array, receivers: Array, edge_mask: Array,
         has_et=edge_term is not None, has_phi_bias=phi_bias is not None,
         phi_activation=phi_activation, self_mode=self_mode,
         two_layer=two_layer, out_activation=out_activation,
-        epilogue=epilogue, n_scalers=n_scalers)
+        epilogue=epilogue, n_scalers=n_scalers, d_x=d_x)
 
     n_acc = 4 if epilogue == "scalers" else 1
     out = pl.pallas_call(
@@ -345,6 +400,7 @@ def layer_fused_ref(x: Array, senders: Array, receivers: Array,
                     edge_term: Array = None, phi_bias: Array = None,
                     phi_activation: str = "none", self_coeff=None,
                     scalers: Array = None, degrees: Array = None,
+                    field_wsum: Array = None,
                     w2: Array = None, b2: Array = None,
                     out_activation: str = "none") -> Array:
     """Pure-jnp oracle for ``layer_fused`` (identical contract)."""
@@ -353,7 +409,20 @@ def layer_fused_ref(x: Array, senders: Array, receivers: Array,
                             edge_term=edge_term, bias=phi_bias,
                             activation=phi_activation)
     own = edge_mask[:, None]
-    if scalers is not None:
+    if field_wsum is not None:
+        if degrees is None:
+            raise ValueError("the field epilogue needs the shared degrees")
+        d_x = x.shape[1]
+        s1 = jax.ops.segment_sum(jnp.where(own, msg, 0.0), receivers,
+                                 num_segments=num_nodes)
+        deg = jnp.asarray(degrees, jnp.float32)[:, None]
+        rdenom = 1.0 / jnp.maximum(deg, 1.0)
+        xf = x.astype(jnp.float32)
+        mean = s1[:, :d_x] * rdenom
+        dx = jnp.abs(s1[:, d_x:]
+                     - xf * jnp.asarray(field_wsum, jnp.float32)[:, None])
+        z = jnp.concatenate([xf, mean, dx], axis=-1)
+    elif scalers is not None:
         if degrees is None:
             raise ValueError("the scalers epilogue needs the shared degrees")
         m0 = jnp.where(own, msg, 0.0)

@@ -60,6 +60,11 @@ Array = jax.Array
 # true for any finite activation a GNN layer produces.
 BIG = 1e30
 
+# Online-softmax carry accumulators, appended to the requested stats when
+# attention is on: per dest-node per head, the running keyed max and the
+# online-rescaled denominator (flash attention's (m, l) pair, DESIGN.md §6).
+ATT_STATS = ("att_max", "att_denom")
+
 
 def _gather_phi_tile(y_ref, snd, valid, sw_ref, et_ref, b_ref, *,
                      edge_tile: int, n_pad: int, sw_mode: str, head_dim: int,
@@ -69,7 +74,9 @@ def _gather_phi_tile(y_ref, snd, valid, sw_ref, et_ref, b_ref, *,
     Shared between ``mp_pipeline`` and the fused-layer kernel
     (kernels/layer_fused.py). ``sw_mode='head'`` expands (edge_tile, H)
     attention lanes to (edge_tile, H·head_dim) *inside* the kernel — GAT's
-    per-head broadcast never materializes on the host.
+    per-head broadcast never materializes on the host. Returns
+    ``(msg, g_route)`` so callers can reuse the gather route for other
+    node-side streams (the attention source halves).
     """
     # --- gather: one-hot matmul against the resident node buffer (MXU).
     # Masked edges get an all-zero route row, so they gather zeros.
@@ -94,7 +101,7 @@ def _gather_phi_tile(y_ref, snd, valid, sw_ref, et_ref, b_ref, *,
         msg = msg + b_ref[...]
     if activation == "relu":
         msg = jnp.maximum(msg, 0.0)
-    return msg
+    return msg, g_route
 
 
 def _src_weight_mode(src_weight, d: int):
@@ -113,12 +120,15 @@ def _src_weight_mode(src_weight, d: int):
 
 def _mp_pipeline_kernel(*refs, bank_size: int, edge_tile: int, n_pad: int,
                         stats, sw_mode: str, head_dim: int, has_et: bool,
-                        has_bias: bool, activation: str):
+                        has_bias: bool, activation: str,
+                        att_heads: int = 0, att_slope: float = 0.2):
     it = iter(refs)
     snd_ref, recv_ref, mask_ref = next(it), next(it), next(it)
     sw_ref = next(it) if sw_mode != "none" else None
     et_ref = next(it) if has_et else None
     b_ref = next(it) if has_bias else None
+    as_ref = next(it) if att_heads else None
+    ad_in_ref = next(it) if att_heads else None
     y_ref = next(it)
     out = dict(zip(stats, it))
 
@@ -127,7 +137,7 @@ def _mp_pipeline_kernel(*refs, bank_size: int, edge_tile: int, n_pad: int,
     @pl.when(pl.program_id(1) == 0)
     def _init():
         for name, ref in out.items():
-            if name == "max":
+            if name in ("max", "att_max"):
                 ref[...] = jnp.full_like(ref, -BIG)
             elif name == "min":
                 ref[...] = jnp.full_like(ref, BIG)
@@ -139,7 +149,7 @@ def _mp_pipeline_kernel(*refs, bank_size: int, edge_tile: int, n_pad: int,
     mask = mask_ref[...].reshape(edge_tile)
     valid = mask != 0
 
-    msg = _gather_phi_tile(
+    msg, g_route = _gather_phi_tile(
         y_ref, snd, valid, sw_ref, et_ref, b_ref, edge_tile=edge_tile,
         n_pad=n_pad, sw_mode=sw_mode, head_dim=head_dim,
         activation=activation)
@@ -148,7 +158,54 @@ def _mp_pipeline_kernel(*refs, bank_size: int, edge_tile: int, n_pad: int,
     route_b = _route_matrix(recv, mask, bank, bank_size, edge_tile)
     route = route_b.astype(jnp.float32)
     dn = (((0,), (0,)), ((), ()))                    # route^T @ rhs
-    if "sum" in out:
+    if att_heads:
+        # flash-style online softmax, folded into the edge sweep
+        # (DESIGN.md §6): the gather route pulls the per-node source
+        # attention half, the scatter route the destination half; the
+        # keyed logits share the finite-additive-key trick of max/min, so
+        # unowned lanes sit at -BIG and the per-(bank, head) running max
+        # m and denominator d obey the flash recurrence
+        #     m' = max(m, tile_max);  d' = d·exp(m - m') + Σ exp(l - m')
+        # with the weighted numerator (the "sum" accumulator) rescaled by
+        # the same exp(m - m') carry. The min(·, 0) clamp is exact for
+        # owned lanes (m' ≥ their logit by construction) and stops the
+        # exp from overflowing on unowned -BIG lanes before the route
+        # zeroes them.
+        a_s = jax.lax.dot(g_route, as_ref[...].astype(jnp.float32),
+                          preferred_element_type=jnp.float32)  # (tile, H)
+        a_d = jax.lax.dot(route, ad_in_ref[...].astype(jnp.float32),
+                          preferred_element_type=jnp.float32)  # (tile, H)
+        logits = a_s + a_d
+        logits = jnp.where(logits >= 0.0, logits, att_slope * logits)
+        key = (route - 1.0) * BIG                    # (tile, bank)
+        keyed = logits[:, None, :] + key[:, :, None]  # (tile, bank, H)
+        m_old = out["att_max"][...]
+        m_new = jnp.maximum(m_old, jnp.max(keyed, axis=0))
+        corr = jnp.exp(m_old - m_new)                # (bank, H), ≤ 1
+        p = (jnp.exp(jnp.minimum(keyed - m_new[None], 0.0))
+             * route[:, :, None])                    # (tile, bank, H)
+        out["att_denom"][...] = (out["att_denom"][...] * corr
+                                 + jnp.sum(p, axis=0))
+        out["att_max"][...] = m_new
+        hd = msg.shape[1] // att_heads
+        msg_h = msg.reshape(edge_tile, att_heads, hd)
+        acc = out["sum"][...].reshape(bank_size, att_heads, hd)
+        num = jnp.einsum("ebh,ehd->bhd", p, msg_h,
+                         preferred_element_type=jnp.float32)
+        out["sum"][...] = (acc * corr[:, :, None] + num).reshape(
+            bank_size, -1)
+
+        @pl.when(pl.program_id(1) == pl.num_programs(1) - 1)
+        def _att_normalize():
+            # per-bank normalization epilogue: the rescaled numerator is
+            # divided by the final denominator; empty destinations
+            # (denom 0) come back as exact zeros
+            den = out["att_denom"][...]
+            wgt = jnp.where(den > 0.0,
+                            1.0 / jnp.maximum(den, 1e-16), 0.0)
+            s = out["sum"][...].reshape(bank_size, att_heads, hd)
+            out["sum"][...] = (s * wgt[:, :, None]).reshape(bank_size, -1)
+    elif "sum" in out:
         out["sum"][...] += jax.lax.dot_general(
             route, msg, dimension_numbers=dn,
             preferred_element_type=jnp.float32)
@@ -175,14 +232,16 @@ def _mp_pipeline_kernel(*refs, bank_size: int, edge_tile: int, n_pad: int,
 
 @functools.partial(
     jax.jit,
-    static_argnames=("num_nodes", "stats", "activation", "edge_tile",
-                     "num_banks", "interpret"),
+    static_argnames=("num_nodes", "stats", "activation", "att_slope",
+                     "edge_tile", "num_banks", "interpret"),
 )
 def mp_pipeline(x: Array, senders: Array, receivers: Array, edge_mask: Array,
                 num_nodes: int, *, stats, src_weight: Array = None,
                 edge_term: Array = None, bias: Array = None,
-                activation: str = "none", edge_tile: int = 128,
-                num_banks: int = 4, interpret: bool = True):
+                activation: str = "none", att_src: Array = None,
+                att_dst: Array = None, att_slope: float = 0.2,
+                edge_tile: int = 128, num_banks: int = 4,
+                interpret: bool = True):
     """One-launch edge phase: gather + fusable phi + multi-stat scatter.
 
     ``x`` is the (num_nodes, D) node buffer; phi for edge e is
@@ -198,15 +257,42 @@ def mp_pipeline(x: Array, senders: Array, receivers: Array, edge_mask: Array,
     destinations come back ∓BIG (finite; recover validity from count or
     degrees — see the module docstring). Uneven E / num_nodes are padded
     internally, like ``mp_scatter_multi``.
+
+    ``att_src``/``att_dst`` (N, H) switch on the in-sweep online softmax
+    (DESIGN.md §6): per edge the attention logit is
+    ``leaky_relu(att_src[snd] + att_dst[recv], att_slope)`` per head, the
+    per-(dest, head) running max and online-rescaled denominator are
+    carried in the accumulator flash-attention style, and the "sum"
+    statistic becomes the softmax-weighted per-head aggregation —
+    normalized in a per-bank epilogue on the last edge tile, still ONE
+    launch. The carries come back as extra ``att_max`` (empty dests at
+    -BIG) / ``att_denom`` (empty dests at 0) entries, both (N, H).
+    Attention restricts ``stats`` to ("sum",) plus an optional "count".
     """
     stats = tuple(s for s in MULTI_STATS if s in stats)
     if not stats:
         raise ValueError("stats must name at least one accumulator")
     if activation not in ("none", "relu"):
         raise ValueError(f"unsupported activation '{activation}'")
+    if (att_src is None) != (att_dst is None):
+        raise ValueError("att_src and att_dst must be given together")
     n, d = x.shape
     if n != num_nodes:
         raise ValueError(f"node buffer has {n} rows, expected {num_nodes}")
+    att_heads = 0
+    if att_src is not None:
+        if "sum" not in stats or set(stats) - {"sum", "count"}:
+            raise ValueError(
+                "attention supports stats ('sum',) plus optional 'count', "
+                f"got {stats}")
+        if att_src.shape != att_dst.shape or att_src.shape[0] != num_nodes:
+            raise ValueError(
+                f"attention halves must both be ({num_nodes}, H), got "
+                f"{att_src.shape} / {att_dst.shape}")
+        att_heads = att_src.shape[1]
+        if att_heads == 0 or d % att_heads != 0:
+            raise ValueError(
+                f"attention head count {att_heads} must divide D={d}")
     e = senders.shape[0]
     e_pad = _ceil_to(e, edge_tile)
     n_pad = _ceil_to(num_nodes, num_banks)
@@ -235,10 +321,26 @@ def mp_pipeline(x: Array, senders: Array, receivers: Array, edge_mask: Array,
     if bias is not None:
         inputs.append(bias.astype(jnp.float32).reshape(1, d))
         in_specs.append(pl.BlockSpec((1, d), lambda b, t: (0, 0)))
+    if att_heads:
+        a_s = att_src.astype(jnp.float32)
+        a_d = att_dst.astype(jnp.float32)
+        if n_pad != n:
+            a_s = jnp.pad(a_s, ((0, n_pad - n), (0, 0)))
+            a_d = jnp.pad(a_d, ((0, n_pad - n), (0, 0)))
+        # the source half rides the resident gather route; the destination
+        # half streams per bank alongside the accumulators
+        inputs.append(a_s)
+        in_specs.append(pl.BlockSpec((n_pad, att_heads), lambda b, t: (0, 0)))
+        inputs.append(a_d)
+        in_specs.append(
+            pl.BlockSpec((bank_size, att_heads), lambda b, t: (b, 0)))
     inputs.append(x)                                   # resident node buffer
     in_specs.append(pl.BlockSpec((n_pad, d), lambda b, t: (0, 0)))
 
-    widths = {"sum": d, "sumsq": d, "count": 1, "max": d, "min": d}
+    if att_heads:
+        stats = stats + ATT_STATS
+    widths = {"sum": d, "sumsq": d, "count": 1, "max": d, "min": d,
+              "att_max": att_heads, "att_denom": att_heads}
     out_shapes = [jax.ShapeDtypeStruct((n_pad, widths[s]), jnp.float32)
                   for s in stats]
     out_specs = [pl.BlockSpec((bank_size, widths[s]), lambda b, t: (b, 0))
@@ -248,7 +350,7 @@ def mp_pipeline(x: Array, senders: Array, receivers: Array, edge_mask: Array,
         _mp_pipeline_kernel, bank_size=bank_size, edge_tile=edge_tile,
         n_pad=n_pad, stats=stats, sw_mode=sw_mode, head_dim=head_dim,
         has_et=edge_term is not None, has_bias=bias is not None,
-        activation=activation)
+        activation=activation, att_heads=att_heads, att_slope=att_slope)
 
     outs = pl.pallas_call(
         kernel,
@@ -264,18 +366,43 @@ def mp_pipeline(x: Array, senders: Array, receivers: Array, edge_mask: Array,
 def mp_pipeline_ref(x: Array, senders: Array, receivers: Array,
                     edge_mask: Array, num_nodes: int, stats, *,
                     src_weight: Array = None, edge_term: Array = None,
-                    bias: Array = None, activation: str = "none"):
+                    bias: Array = None, activation: str = "none",
+                    att_src: Array = None, att_dst: Array = None,
+                    att_slope: float = 0.2):
     """Pure-jnp oracle for ``mp_pipeline`` (raw f32 accumulators).
 
     Mirrors the kernel contract exactly, including the finite ∓BIG
-    neutral for empty-destination max/min.
+    neutral for empty-destination max/min and the attention carries
+    (``att_max`` at -BIG / ``att_denom`` at 0 for empty destinations,
+    softmax-weighted normalized "sum").
     """
     msg = apply_fusable_phi(x, senders, src_weight=src_weight,
                             edge_term=edge_term, bias=bias,
                             activation=activation)
     own = edge_mask[:, None]
     out = {}
-    if "sum" in stats:
+    if att_src is not None:
+        e_n, d = msg.shape
+        heads = att_src.shape[1]
+        hd = d // heads
+        logits = (jnp.take(att_src, senders, axis=0)
+                  + jnp.take(att_dst, receivers, axis=0)).astype(jnp.float32)
+        logits = jnp.where(logits >= 0.0, logits, att_slope * logits)
+        m = jnp.maximum(jax.ops.segment_max(
+            jnp.where(own, logits, -BIG), receivers,
+            num_segments=num_nodes), -BIG)
+        p = jnp.where(own, jnp.exp(logits - jnp.take(m, receivers, axis=0)),
+                      0.0)
+        denom = jax.ops.segment_sum(p, receivers, num_segments=num_nodes)
+        num = jax.ops.segment_sum(
+            (p[:, :, None] * msg.reshape(e_n, heads, hd)).reshape(e_n, d),
+            receivers, num_segments=num_nodes)
+        wgt = jnp.where(denom > 0.0, 1.0 / jnp.maximum(denom, 1e-16), 0.0)
+        out["sum"] = (num.reshape(num_nodes, heads, hd)
+                      * wgt[:, :, None]).reshape(num_nodes, d)
+        out["att_max"] = m
+        out["att_denom"] = denom
+    elif "sum" in stats:
         out["sum"] = jax.ops.segment_sum(
             jnp.where(own, msg, 0.0), receivers, num_segments=num_nodes)
     if "sumsq" in stats:

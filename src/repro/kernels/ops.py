@@ -57,30 +57,39 @@ def mp_scatter_multi(msg, receivers, edge_mask, num_nodes, *,
 
 def mp_pipeline(x, senders, receivers, edge_mask, num_nodes, *, stats,
                 src_weight=None, edge_term=None, bias=None,
-                activation="none", edge_tile=128, num_banks=4) -> dict:
-    """Fused gather-phi-scatter edge pipeline; returns raw f32 accumulators."""
+                activation="none", att_src=None, att_dst=None,
+                att_slope=0.2, edge_tile=128, num_banks=4) -> dict:
+    """Fused gather-phi-scatter edge pipeline; returns raw f32 accumulators.
+
+    ``att_src``/``att_dst`` (N, H) switch on the in-sweep online softmax
+    (GAT's attention logits, exp-rescale, weighted scatter in ONE launch)."""
     return _mp_pipeline(x, senders, receivers, edge_mask, num_nodes,
                         stats=stats, src_weight=src_weight,
                         edge_term=edge_term, bias=bias,
-                        activation=activation, edge_tile=edge_tile,
+                        activation=activation, att_src=att_src,
+                        att_dst=att_dst, att_slope=att_slope,
+                        edge_tile=edge_tile,
                         num_banks=num_banks, interpret=_interpret())
 
 
 def layer_fused(x, senders, receivers, edge_mask, num_nodes, *, w1, b1,
                 node_input=None, src_weight=None, edge_term=None,
                 phi_bias=None, phi_activation="none", self_coeff=None,
-                scalers=None, degrees=None, w2=None, b2=None,
+                scalers=None, degrees=None, field_wsum=None,
+                w2=None, b2=None,
                 out_activation="none", edge_tile=128, num_banks=4) -> Array:
     """One-launch NT+MP layer step (gather + phi + aggregate + update MLP).
 
     ``self_coeff`` selects the self-term epilogue (GIN/GCN); ``scalers``
-    (+ shared ``degrees``) the PNA scaler-contraction epilogue."""
+    (+ shared ``degrees``) the PNA scaler-contraction epilogue;
+    ``field_wsum`` (+ ``degrees``) DGN's directional-field epilogue."""
     return _layer_fused(x, senders, receivers, edge_mask, num_nodes,
                         w1=w1, b1=b1, node_input=node_input,
                         src_weight=src_weight,
                         edge_term=edge_term, phi_bias=phi_bias,
                         phi_activation=phi_activation, self_coeff=self_coeff,
                         scalers=scalers, degrees=degrees,
+                        field_wsum=field_wsum,
                         w2=w2, b2=b2, out_activation=out_activation,
                         edge_tile=edge_tile, num_banks=num_banks,
                         interpret=_interpret())

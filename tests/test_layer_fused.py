@@ -244,8 +244,9 @@ def test_scanned_forward_under_jit_and_grad():
 # ---------------------------------------------------------------------------
 
 @pytest.mark.parametrize("scan", [False, True])
-@pytest.mark.parametrize("name,overhead", [("gin", 0), ("gcn", 1),
-                                           ("pna", 1)])
+@pytest.mark.parametrize("name,overhead", [("gin", 0), ("gin_vn", 0),
+                                           ("gcn", 1), ("pna", 1),
+                                           ("gat", 0), ("dgn", 3)])
 def test_fused_layer_one_pass_per_layer(name, scan, overhead):
     """The acceptance contract: impl='fused_layer' is ONE pass over the
     edge stream per layer (plus the model's hoisted stats sweeps), and the
@@ -351,7 +352,14 @@ def test_candidate_set_includes_fused_layer_and_grid_expands():
         assert {d.num_banks for d in wide} >= {1, 2, 4, 8}
         assert {d.edge_tile for d in wide} >= {32, 64, 128}
     with _make_engine("gin", max_autotune=2) as eng_narrow:
-        assert len(eng_narrow._candidate_dataflows(key)) == 2
+        narrow = eng_narrow._candidate_dataflows(key)
+        assert len(narrow) == 2
+        # impl diversity outranks tile diversity under truncation: the
+        # staged default and the fused pipeline must BOTH survive so fused
+        # vs staged stays a measured choice in every bucket (the PNA
+        # regression guard)
+        assert {d.impl for d in narrow} == {eng_narrow.dataflow.impl,
+                                            "pipeline"}
 
 
 def test_autotune_cache_roundtrips_fused_layer(tmp_path):
@@ -366,7 +374,8 @@ def test_autotune_cache_roundtrips_fused_layer(tmp_path):
         (entry,) = eng.autotune_report().values()
         assert entry["source"] == "autotuned"
     saved = json.loads(cache.read_text())
-    (section,) = saved.values()
+    assert saved["__schema__"] == GraphStreamEngine.AUTOTUNE_CACHE_SCHEMA
+    (section,) = (v for k, v in saved.items() if k != "__schema__")
     (bucket_entry,) = section.values()
     bucket_entry["impl"] = "fused_layer"
     cache.write_text(json.dumps(saved))
@@ -378,3 +387,27 @@ def test_autotune_cache_roundtrips_fused_layer(tmp_path):
         assert entry2["source"] == "cache"
         assert entry2["impl"] == "fused_layer"
     np.testing.assert_allclose(base, out, atol=1e-5, rtol=1e-5)
+
+
+def test_autotune_cache_stale_schema_invalidated(tmp_path):
+    """A cache written under an older schema (or none at all, the pre-PR7
+    format) is ignored on load — its impl winners were tuned against a
+    different candidate set — and the file is rebuilt on save."""
+    cache = tmp_path / "autotune.json"
+    g = next(molhiv_like(seed=0, n_graphs=1))
+    with _make_engine("gin", max_batch=1, autotune=True,
+                      autotune_cache=str(cache)) as eng:
+        eng.process(g.node_feat, g.senders, g.receivers, g.edge_feat,
+                    g.node_pos)
+    saved = json.loads(cache.read_text())
+    stale = {k: v for k, v in saved.items() if k != "__schema__"}
+    stale["__schema__"] = GraphStreamEngine.AUTOTUNE_CACHE_SCHEMA - 1
+    cache.write_text(json.dumps(stale))
+    with _make_engine("gin", max_batch=1, autotune=True,
+                      autotune_cache=str(cache)) as eng2:
+        eng2.process(g.node_feat, g.senders, g.receivers, g.edge_feat,
+                     g.node_pos)
+        (entry,) = eng2.autotune_report().values()
+        assert entry["source"] == "autotuned"     # stale cache was ignored
+    rebuilt = json.loads(cache.read_text())
+    assert rebuilt["__schema__"] == GraphStreamEngine.AUTOTUNE_CACHE_SCHEMA

@@ -477,7 +477,7 @@ def test_autotune_fingerprint_namespaces_backend_and_device(tmp_path):
         dev0 = jax.devices()[0]
         assert entry["device"] == f"{dev0.platform}:{dev0.id}"
     saved = json.loads(cache.read_text())
-    (section_key,) = saved.keys()
+    (section_key,) = (k for k in saved if k != "__schema__")
     backend = jax.default_backend()
     assert section_key.startswith(f"{backend}:")
     kind = str(getattr(dev0, "device_kind", dev0.platform)).replace(" ", "_")

@@ -103,9 +103,10 @@ def test_autotune_picks_and_persists(tmp_path):
         assert entry["num_banks"] >= 1 and entry["edge_tile"] >= 8
         assert len(entry["candidates_us"]) >= 2
     saved = json.loads(cache.read_text())
-    # one workload-fingerprint section holding one bucket entry
-    assert len(saved) == 1
-    (section,) = saved.values()
+    # schema tag plus one workload-fingerprint section holding one bucket
+    sections = {k: v for k, v in saved.items() if k != "__schema__"}
+    assert len(sections) == 1
+    (section,) = sections.values()
     assert len(section) == 1
 
     # a fresh engine loads the cache and skips the candidate search
@@ -142,7 +143,7 @@ def test_autotune_candidates_include_pipeline_and_cache_roundtrips_impl(
 
     # force a pipeline winner into the cache section and reload it
     saved = json.loads(cache.read_text())
-    (section,) = saved.values()
+    (section,) = (v for k, v in saved.items() if k != "__schema__")
     (bucket_entry,) = section.values()
     bucket_entry["impl"] = "pipeline"
     cache.write_text(json.dumps(saved))

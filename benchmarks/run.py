@@ -12,7 +12,10 @@ Alongside the CSV on stdout, kernel-level rows (``kernel.*``) are written to
 single-pass vs per-kind multi-aggregation comparison — can be tracked
 across PRs. The ``stream`` target additionally writes ``BENCH_stream.json``
 (p50/p99 latency and batch-aware graphs/s at batch sizes 1/8/64/256, plus
-the per-bucket autotuned dataflow knobs).
+the per-bucket autotuned dataflow knobs, the chaos-goodput row, and the
+``overload``/``drift`` sections behind the ``check_regression.py --stream``
+SLO gates) and ``BENCH_overload_trace.json`` (the replayed trace plus all
+three overload-run summaries — the CI artifact).
 """
 
 import json
@@ -28,9 +31,16 @@ BENCH_STREAM_JSON = _ROOT / "BENCH_stream.json"
 
 _STREAM_PAYLOAD = {}
 
+# CI uploads this as the trace-replay artifact (per-event arrival schedule
+# + per-run engine summaries for all three overload runs)
+OVERLOAD_TRACE_JSON = _ROOT / "BENCH_overload_trace.json"
+
 
 def _run_stream(csv: Csv) -> None:
     _STREAM_PAYLOAD.update(stream_bench.stream_sweep(csv))
+    _STREAM_PAYLOAD["overload"] = stream_bench.overload_bench(
+        csv, trace_out=str(OVERLOAD_TRACE_JSON))
+    _STREAM_PAYLOAD["drift"] = stream_bench.drift_bench(csv)
 
 
 TABLES = {

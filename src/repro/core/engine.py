@@ -49,6 +49,7 @@ in-flight watchdog fails batches stuck inside an executor; ``drain`` and
 from __future__ import annotations
 
 import heapq
+import itertools
 import json
 import os
 import threading
@@ -100,6 +101,13 @@ class StreamStats:
     ``executor_deaths``/``respawns`` track supervision; ``pool_degraded``
     is sticky-true from the first death until a respawn restores the full
     pool.
+
+    Load accounting (DESIGN.md §5): ``preemptions`` counts bulk batches
+    split by a priority tenant's preempt window, ``retunes`` counts
+    drift-triggered re-autotunes, and ``program_evictions`` counts compiled
+    programs dropped by the per-executor LRU cap — none of these are
+    failures; they are how the engine absorbs traffic it was not tuned
+    for, surfaced so overload benches and tests can assert they fired.
     """
 
     latencies_s: List[float] = field(default_factory=list)
@@ -117,6 +125,9 @@ class StreamStats:
     executor_deaths: int = 0
     respawns: int = 0
     pool_degraded: bool = False
+    preemptions: int = 0
+    retunes: int = 0
+    program_evictions: int = 0
 
     def record_batch(self, *, latencies: Sequence[float],
                      queue_waits: Sequence[float], device_s: float,
@@ -160,12 +171,18 @@ class StreamStats:
                     or self.failed or self.executor_deaths or self.respawns
                     or self.pool_degraded)
 
+    @property
+    def _has_load_events(self) -> bool:
+        return bool(self.preemptions or self.retunes
+                    or self.program_evictions)
+
     def summary(self) -> Dict[str, Any]:
         if not self.latencies_s:
-            if not self._has_failures:
+            if not self._has_failures and not self._has_load_events:
                 return {}
             out: Dict[str, Any] = {}
             self._failure_summary(out)
+            self._load_summary(out)
             return out
         arr = np.array(self.latencies_s)
         out: Dict[str, Any] = {
@@ -198,6 +215,7 @@ class StreamStats:
                 sum(self.batch_sizes)
                 / (self.t_last_done - self.t_first_dispatch))
         self._failure_summary(out)
+        self._load_summary(out)
         if self.by_queue:
             out["queues"] = {name: s.summary()
                              for name, s in sorted(self.by_queue.items())}
@@ -216,6 +234,13 @@ class StreamStats:
         out["executor_deaths"] = int(self.executor_deaths)
         out["respawns"] = int(self.respawns)
         out["pool_degraded"] = bool(self.pool_degraded)
+
+    def _load_summary(self, out: Dict[str, Any]) -> None:
+        if not self._has_load_events:
+            return
+        out["preemptions"] = int(self.preemptions)
+        out["retunes"] = int(self.retunes)
+        out["program_evictions"] = int(self.program_evictions)
 
 
 @dataclass
@@ -245,6 +270,37 @@ class _Inflight:
     batch: PackedBatch
     ex: "DeviceExecutor"
     t_placed: float
+
+
+@dataclass
+class _BucketLoad:
+    """Per-bucket running traffic stats driving drift re-autotune (§5).
+
+    EWMAs (window = ``drift_window`` batches) of the batch fill, the
+    marginal device time, and the inter-completion gap (an arrival-rate
+    proxy) are compared against the *tuned envelope*: ``tuned_device_s``
+    is the autotune winner's timed best, ``tuned_fill`` the fill of the
+    first batch served after (re)tuning — the regime the winner was picked
+    for. When traffic leaves that envelope (device time inflated beyond
+    ``drift_device_factor``, or fill drifted beyond ``drift_fill_factor``
+    either way) the bucket's winner is invalidated and the next batch
+    re-runs the autotune search — bounded by ``max_retunes`` per bucket
+    and ``drift_cooldown_s`` between tunes, so a noisy bucket can never
+    thrash the compile lock.
+    """
+
+    batches: int = 0
+    graphs: int = 0
+    ewma_fill: Optional[float] = None
+    ewma_device_s: Optional[float] = None
+    ewma_gap_s: Optional[float] = None
+    last_seen_t: Optional[float] = None
+    tuned_fill: Optional[float] = None
+    tuned_device_s: Optional[float] = None
+    batches_since_tune: int = 0
+    last_tune_t: float = float("-inf")
+    retunes: int = 0
+    last_reason: Optional[str] = None
 
 
 def _resolve(fut: Future, result=None, exc: Optional[BaseException] = None
@@ -280,6 +336,15 @@ class GraphStreamEngine:
                  max_autotune: int = 5,
                  max_pending: int = 4096,
                  queues: Optional[Sequence[QueueConfig]] = None,
+                 preempt: bool = True,
+                 preempt_chunk: int = 4,
+                 preempt_horizon_ms: float = 20.0,
+                 max_cached_programs: Optional[int] = 128,
+                 drift_window: int = 32,
+                 drift_device_factor: float = 3.0,
+                 drift_fill_factor: float = 2.0,
+                 drift_cooldown_s: float = 2.0,
+                 max_retunes: int = 2,
                  devices: Optional[Sequence[Any]] = None,
                  max_retries: int = 1,
                  retry_backoff_ms: float = 1.0,
@@ -306,7 +371,9 @@ class GraphStreamEngine:
             default_max_wait_s=max_wait_ms * 1e-3,
             buckets=buckets,
             default_max_nodes=max_nodes_per_batch,
-            default_max_edges=max_edges_per_batch)
+            default_max_edges=max_edges_per_batch,
+            preempt_chunk=(int(preempt_chunk) if preempt else None),
+            preempt_horizon_s=preempt_horizon_ms * 1e-3)
         self._eager_flush = eager_flush
         # admission backpressure is PER TENANT: a bulk queue pinned at its
         # cap must not block a latency queue's submissions
@@ -351,6 +418,20 @@ class GraphStreamEngine:
         self._tuned: Dict[BucketKey, DataflowConfig] = {}
         self._tune_log: Dict[BucketKey, Dict[str, Any]] = {}
         self._load_autotune_cache()
+
+        # drift detection + LRU program eviction (DESIGN.md §5): per-bucket
+        # running stats under self._cv; eviction state under _compile_lock.
+        if max_cached_programs is not None and max_cached_programs < 1:
+            raise ValueError("max_cached_programs must be >= 1 or None")
+        self._max_cached_programs = max_cached_programs
+        self._drift_window = max(1, int(drift_window))
+        self._drift_device_factor = float(drift_device_factor)
+        self._drift_fill_factor = max(1.0, float(drift_fill_factor))
+        self._drift_cooldown_s = max(0.0, float(drift_cooldown_s))
+        self._max_retunes = max(0, int(max_retunes))
+        self._bucket_load: Dict[BucketKey, _BucketLoad] = {}
+        self._evict_log: Dict[BucketKey, int] = {}
+        self._touch = itertools.count(1)   # engine-wide LRU touch sequence
 
         # async machinery (threads started lazily on first submit)
         self._cv = threading.Condition()
@@ -417,7 +498,12 @@ class GraphStreamEngine:
         admission. ``deadline`` is a per-request budget in seconds from
         enqueue: work whose deadline expires before it is dispatched is
         shed and its future fails with ``DeadlineExceeded`` — expired
-        graphs never spend device time (DESIGN.md §8).
+        graphs never spend device time (DESIGN.md §8). The deadline clock
+        starts at enqueue, BEFORE admission: a deadline'd request blocked
+        at backpressure waits at most its remaining budget, then fails
+        fast instead of burning the whole budget in the admission queue —
+        an already-expired request is never admitted, let alone
+        dispatched.
         """
         if edge_feat is None and self.cfg.edge_feat_dim != 1:
             raise ValueError("model expects edge features")
@@ -446,18 +532,42 @@ class GraphStreamEngine:
         self._ensure_threads()
         cap = self._queue_caps[queue]
         with self._cv:
-            self._cv.wait_for(
-                lambda: self._pending_by_queue[queue] < cap or self._closed)
+            admitted = lambda: (self._pending_by_queue[queue] < cap
+                                or self._closed)
+            if req.deadline_t is None:
+                self._cv.wait_for(admitted)
+            else:
+                # the admission-vs-deadline hole (DESIGN.md §8): the
+                # deadline clock started at t_arrival, so the wait is
+                # bounded by the REMAINING budget — wait_for re-arms
+                # across spurious wakeups until room or timeout
+                self._cv.wait_for(
+                    admitted,
+                    timeout=max(req.deadline_t - time.perf_counter(), 0.0))
             if self._closed:
                 raise EngineClosed("engine is closed")
-            self._pending += 1
-            self._pending_by_queue[queue] += 1
-            self._requests[req_id] = req
-            if req.deadline_t is not None:
-                self._deadlines_used = True
-                heapq.heappush(self._deadline_heap, (req.deadline_t, req_id))
-            self._scheduler.add(queue, item, now=item.t_arrival)
+            if req.deadline_t is not None and (
+                    self._pending_by_queue[queue] >= cap
+                    or time.perf_counter() >= req.deadline_t):
+                # budget burned at backpressure (or expired the instant
+                # room appeared): shed now — never admit, never dispatch
+                self.stats.record_failure(queue=queue, shed=1, failed=1)
+                expired_req = req
+            else:
+                expired_req = None
+                self._pending += 1
+                self._pending_by_queue[queue] += 1
+                self._requests[req_id] = req
+                if req.deadline_t is not None:
+                    self._deadlines_used = True
+                    heapq.heappush(self._deadline_heap,
+                                   (req.deadline_t, req_id))
+                self._scheduler.add(queue, item, now=item.t_arrival)
             self._cv.notify_all()
+        if expired_req is not None:
+            _resolve(fut, exc=DeadlineExceeded(
+                "deadline expired at admission backpressure",
+                request_ids=(req_id,)))
         return fut
 
     def process(self, node_feat: np.ndarray, senders: np.ndarray,
@@ -589,10 +699,17 @@ class GraphStreamEngine:
 
     def autotune_report(self) -> Dict[str, Dict[str, Any]]:
         """Per-bucket chosen (num_banks, edge_tile, impl) + candidate
-        timings + the device each bucket was tuned on."""
+        timings + the device each bucket was tuned on, plus the bucket's
+        observed-load envelope (EWMA fill / device time / arrival rate),
+        drift re-tune count, and cold-program eviction count. Evicted
+        buckets stay in the report — their tuning and history outlive the
+        executable."""
         report: Dict[str, Dict[str, Any]] = {}
         with self._compile_lock:
-            for key in self._compiled:
+            keys = (set(self._compiled) | set(self._tuned)
+                    | set(self._tune_log) | set(self._bucket_load)
+                    | set(self._evict_log))
+            for key in keys:
                 df = self._tuned.get(key, self.dataflow)
                 entry: Dict[str, Any] = {
                     "num_banks": df.num_banks,
@@ -603,6 +720,25 @@ class GraphStreamEngine:
                 }
                 if key in self._tune_log:
                     entry.update(self._tune_log[key])
+                load = self._bucket_load.get(key)
+                if load is not None and load.batches:
+                    entry["load"] = {
+                        "batches": int(load.batches),
+                        "graphs": int(load.graphs),
+                        "ewma_fill": (None if load.ewma_fill is None
+                                      else round(load.ewma_fill, 3)),
+                        "ewma_device_us": (
+                            None if load.ewma_device_s is None
+                            else round(load.ewma_device_s * 1e6, 1)),
+                        "arrival_hz": (
+                            None if not load.ewma_gap_s
+                            else round(1.0 / load.ewma_gap_s, 2)),
+                        "retunes": int(load.retunes),
+                        "last_retune_reason": load.last_reason,
+                    }
+                ev = self._evict_log.get(key)
+                if ev:
+                    entry["evictions"] = int(ev)
                 report["x".join(map(str, key))] = entry
         return report
 
@@ -658,10 +794,26 @@ class GraphStreamEngine:
                     # weighted fairness applies — not FIFO in an executor
                     # inbox where a late latency batch would sit behind
                     # the whole bulk backlog
-                    if has_cap:
-                        nxt = self._scheduler.next_batch()
+                    # pipeline restraint (§5): while the preempt window is
+                    # open, non-priority batches are claimed only when some
+                    # executor is idle. Chunking alone is not enough — if
+                    # chunks STACK in an executor's FIFO pipeline, the claim
+                    # depth (PIPELINE_DEPTH x chunk time), not the chunk,
+                    # bounds the next priority arrival's wait. Priority pops
+                    # are never restrained, and a completion always wakes
+                    # this loop, so restraint never deadlocks: when the last
+                    # claimed batch finishes its executor goes idle.
+                    restrained = (has_cap
+                                  and self._scheduler.preempt_active(now)
+                                  and not self._scheduler.priority_ready
+                                  and not any(ex.idle for ex in
+                                              self._executors if not ex.dead))
+                    if has_cap and not restrained:
+                        nxt = self._scheduler.next_batch(now)
                         if nxt is not None:
                             picked = (nxt[0], nxt[1], None)
+                            self.stats.preemptions = (
+                                self._scheduler.preempt_splits)
                             break
                     if self._drain_requested or self._closed:
                         if self._scheduler.open_batches:
@@ -680,9 +832,11 @@ class GraphStreamEngine:
                         # NOW beats waiting out its deadline (adaptive
                         # batching: under load, batches fill while every
                         # device is busy)
-                        nxt = self._scheduler.flush_oldest_open()
+                        nxt = self._scheduler.flush_oldest_open(now)
                         if nxt is not None:
                             picked = (nxt[0], nxt[1], None)
+                            self.stats.preemptions = (
+                                self._scheduler.preempt_splits)
                         break
                     wake = self._next_wake_locked(has_cap)
                     self._cv.wait(timeout=None if wake is None
@@ -908,9 +1062,12 @@ class GraphStreamEngine:
                     latencies=lat, queue_waits=qw, device_s=done.device_s,
                     batch_size=len(lat), t_dispatch=done.t_dispatch,
                     t_done=done.t_ready, queue=done.queue, device=ex.label)
+            retune_reason = self._observe_bucket_locked(pb, done)
             self._cv.notify_all()
         for fut, res, exc in resolved:
             _resolve(fut, res, exc)
+        if retune_reason is not None:
+            self._trigger_retune(pb.bucket)
 
     def _complete_err(self, ex: DeviceExecutor, done: CompletedBatch) -> None:
         """Classify a failed batch: requeue (executor death), retry with
@@ -1104,6 +1261,83 @@ class GraphStreamEngine:
         return res
 
     # ------------------------------------------------------------------
+    # drift detection -> bounded re-autotune (DESIGN.md §5)
+    # ------------------------------------------------------------------
+
+    def _observe_bucket_locked(self, pb: PackedBatch,
+                               done: CompletedBatch) -> Optional[str]:
+        """Fold one completed batch into its bucket's running stats (under
+        ``self._cv``) and decide whether traffic has drifted out of the
+        tuned envelope. Returns the drift reason when a re-autotune should
+        fire (the trigger itself runs outside the cv), else ``None``.
+
+        The retune budget is spent HERE, inside the lock, so concurrent
+        completions of the same bucket can never double-trigger."""
+        key = pb.bucket
+        load = self._bucket_load.setdefault(key, _BucketLoad())
+        a = 2.0 / (self._drift_window + 1.0)
+
+        def ewma(old: Optional[float], new: float) -> float:
+            return new if old is None else (1.0 - a) * old + a * new
+
+        load.batches += 1
+        load.graphs += pb.num_graphs
+        load.batches_since_tune += 1
+        fill = float(pb.num_graphs)
+        load.ewma_fill = ewma(load.ewma_fill, fill)
+        if done.device_s > 0:
+            load.ewma_device_s = ewma(load.ewma_device_s, done.device_s)
+        if load.last_seen_t is not None:
+            load.ewma_gap_s = ewma(load.ewma_gap_s,
+                                   done.t_ready - load.last_seen_t)
+        load.last_seen_t = done.t_ready
+        if load.tuned_fill is None:
+            # first batch after (re)tuning anchors the envelope's mix
+            load.tuned_fill = fill
+
+        if not self._autotune or key not in self._tuned:
+            return None            # nothing tuned: nothing to re-tune
+        if (load.retunes >= self._max_retunes
+                or load.batches_since_tune < self._drift_window
+                or done.t_ready - load.last_tune_t < self._drift_cooldown_s):
+            return None
+        reason = None
+        if (load.tuned_device_s is not None
+                and load.ewma_device_s is not None
+                and load.ewma_device_s
+                > self._drift_device_factor * load.tuned_device_s):
+            reason = "device_time"
+        elif (load.tuned_fill is not None and load.ewma_fill is not None
+              and not (load.tuned_fill / self._drift_fill_factor
+                       <= load.ewma_fill
+                       <= load.tuned_fill * self._drift_fill_factor)):
+            reason = "batch_mix"
+        if reason is None:
+            return None
+        load.retunes += 1
+        load.last_tune_t = done.t_ready
+        load.batches_since_tune = 0
+        load.tuned_fill = None
+        load.tuned_device_s = None
+        load.last_reason = reason
+        self.stats.retunes += 1
+        return reason
+
+    def _trigger_retune(self, key: BucketKey) -> None:
+        """Invalidate a drifted bucket's tuned winner plus every
+        executor's compiled program for it, so the next batch re-runs the
+        autotune search against current traffic (``_ensure_program``'s
+        ordinary miss path). The bucket is never left unservable: a
+        dispatch that misses compiles on demand exactly like a first
+        touch, and an in-flight dispatch that already fetched the old
+        program finishes on it."""
+        with self._compile_lock:
+            self._tuned.pop(key, None)
+            for ex in self._executors:
+                ex.compiled.pop(key, None)
+                ex.touched.pop(key, None)
+
+    # ------------------------------------------------------------------
     # per-executor program cache + shared per-bucket autotuning
     # ------------------------------------------------------------------
 
@@ -1130,13 +1364,17 @@ class GraphStreamEngine:
         """
         # lock-free fast path: ex.compiled is written only under the
         # compile lock and only by this executor's bucket miss, so a hit
-        # here never blocks behind another bucket's autotune search
+        # here never blocks behind another bucket's autotune search. The
+        # touch write is a plain dict store (GIL-atomic) — LRU order is
+        # approximate across racing dispatch threads, which is fine.
         run = ex.compiled.get(key)
         if run is not None:
+            ex.touched[key] = next(self._touch)
             return run
         with self._compile_lock:
             run = ex.compiled.get(key)
             if run is not None:
+                ex.touched[key] = next(self._touch)
                 return run
             df = self._tuned.get(key)
             if df is None and self._autotune:
@@ -1149,7 +1387,28 @@ class GraphStreamEngine:
                     jax.eval_shape(run, ex.params, g)
                 self.edge_passes[key] = ps.passes
             ex.compiled[key] = run
+            ex.touched[key] = next(self._touch)
+            self._evict_cold_locked(ex, keep=key)
             return run
+
+    def _evict_cold_locked(self, ex: DeviceExecutor, keep: BucketKey) -> None:
+        """Bound ``ex``'s compiled-program namespace (under the compile
+        lock): while over ``max_cached_programs``, drop the least-recently
+        touched bucket — never the one just installed. Eviction only frees
+        the executable; the bucket stays servable (next touch recompiles,
+        reusing the still-cached tuned winner)."""
+        cap = self._max_cached_programs
+        if cap is None:
+            return
+        while len(ex.compiled) > cap:
+            victim = min((k for k in ex.compiled if k != keep),
+                         key=lambda k: ex.touched.get(k, 0), default=None)
+            if victim is None:
+                return
+            ex.compiled.pop(victim, None)
+            ex.touched.pop(victim, None)
+            self._evict_log[victim] = self._evict_log.get(victim, 0) + 1
+            self.stats.program_evictions += 1
 
     def _candidate_dataflows(self, key: BucketKey) -> List[DataflowConfig]:
         """Per-bucket DSE candidates (the paper's Fig. 10 design space:
@@ -1236,6 +1495,14 @@ class GraphStreamEngine:
         if best_df is None:                # every candidate failed: fall back
             best_df = self.dataflow
         self._tuned[key] = best_df
+        # anchor the drift envelope (plain field writes; the cv-protected
+        # observer tolerates them racing — they are monitoring state)
+        load = self._bucket_load.setdefault(key, _BucketLoad())
+        load.last_tune_t = time.perf_counter()
+        load.batches_since_tune = 0
+        load.tuned_fill = None             # next completion anchors the mix
+        if np.isfinite(best_t):
+            load.tuned_device_s = best_t
         log: Dict[str, Any] = {"candidates_us": timings,
                                "device": ex.label}
         if best_name is not None:

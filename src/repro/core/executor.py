@@ -103,8 +103,12 @@ class DeviceExecutor:
         self.label = f"{device.platform}:{device.id}"
         # per-device program namespace: {bucket: jitted program}. The
         # engine's ``_compiled`` facade merges these for the observable
-        # compile-count surface.
+        # compile-count surface. ``touched`` maps each bucket to its last
+        # engine-wide touch sequence number — the LRU order the engine's
+        # cold-program eviction reads when ``max_cached_programs`` bounds
+        # this namespace (DESIGN.md §5).
         self.compiled: Dict[BucketKey, Any] = {}
+        self.touched: Dict[BucketKey, int] = {}
 
         self._build_fn = build_fn
         self._program_fn = program_fn

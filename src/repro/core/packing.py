@@ -111,6 +111,28 @@ class PackedBatch:
         sub.attempts = self.attempts
         return sub
 
+    def rebucket(self, buckets: Tuple[int, ...]) -> "PackedBatch":
+        """Re-seal to the tightest node/edge bucket for this content.
+
+        The preempt path (§5) serves a chunk-sized head immediately; at
+        the parent's pads that head would cost a FULL batch's device
+        time (compute scales with ``node_pad``, not with the graphs
+        carried), so the served head re-buckets — its device quantum is
+        proportional to what it actually holds, which is the entire
+        point of chunking. ``graph_pad`` is kept so program families
+        stay shared, and per-graph results are unchanged bitwise by the
+        pad-parity contract (§2): a graph's output never depends on how
+        much padding rides alongside it.
+        """
+        n = sum(it.num_nodes for it in self.items)
+        e = sum(it.num_edges for it in self.items)
+        sub = PackedBatch(items=list(self.items),
+                          node_pad=pad_bucket(max(n, 1), buckets),
+                          edge_pad=pad_bucket(max(e, 1), buckets),
+                          graph_pad=self.graph_pad)
+        sub.attempts = self.attempts
+        return sub
+
     def split(self) -> Tuple["PackedBatch", "PackedBatch"]:
         """Bisect into two halves in pack order (bisection quarantine:
         re-running both halves isolates a poison graph in log2 steps).
@@ -134,13 +156,19 @@ class PackedBatch:
 
 
 class _OpenBatch:
-    __slots__ = ("items", "n_nodes", "n_edges", "deadline")
+    __slots__ = ("items", "n_nodes", "n_edges", "deadline", "pinned")
 
-    def __init__(self, deadline: float):
+    def __init__(self, deadline: float,
+                 pinned: Optional[Tuple[int, int, int]] = None):
         self.items: List[PackItem] = []
         self.n_nodes = 0
         self.n_edges = 0
         self.deadline = deadline
+        # a preempted remainder re-entering the packer: seal to EXACTLY
+        # these (node_pad, edge_pad, graph_pad) — the parent batch's sealed
+        # bucket — and accept no new items, so the already-compiled program
+        # is reused and survivors stay bitwise-identical (§2/§5 parity)
+        self.pinned = pinned
 
     def add(self, item: PackItem) -> None:
         self.items.append(item)
@@ -192,17 +220,20 @@ class GraphPacker:
     # -- packing ----------------------------------------------------------
 
     def _fits(self, b: _OpenBatch, item: PackItem) -> bool:
-        return (len(b.items) < self.max_batch
+        return (b.pinned is None      # readmitted remainders are closed
+                and len(b.items) < self.max_batch
                 and b.n_nodes + item.num_nodes <= self.max_nodes
                 and b.n_edges + item.num_edges <= self.max_edges)
 
     def _seal(self, b: _OpenBatch) -> PackedBatch:
-        return PackedBatch(
-            items=b.items,
-            node_pad=pad_bucket(max(b.n_nodes, 1), self.buckets),
-            edge_pad=pad_bucket(max(b.n_edges, 1), self.buckets),
-            graph_pad=self.max_batch,
-        )
+        if b.pinned is not None:
+            node_pad, edge_pad, graph_pad = b.pinned
+        else:
+            node_pad = pad_bucket(max(b.n_nodes, 1), self.buckets)
+            edge_pad = pad_bucket(max(b.n_edges, 1), self.buckets)
+            graph_pad = self.max_batch
+        return PackedBatch(items=b.items, node_pad=node_pad,
+                           edge_pad=edge_pad, graph_pad=graph_pad)
 
     def add(self, item: PackItem, now: Optional[float] = None
             ) -> List[PackedBatch]:
@@ -233,6 +264,22 @@ class GraphPacker:
         for b in expired:
             self._open.remove(b)
         return [self._seal(b) for b in expired]
+
+    def readmit(self, pb: PackedBatch, now: Optional[float] = None) -> None:
+        """Re-enter a preempted remainder (scheduler preempt path, §5).
+
+        The remainder becomes an open batch that is *closed* to new items
+        and *pinned* to the parent's sealed bucket, so when it re-flushes
+        it reuses the already-compiled program and its graphs' results
+        stay bitwise-identical to the never-preempted run. Its deadline is
+        ``now`` — already expired — so the next ``poll`` returns it to the
+        ready list immediately: preemption reorders service, it never
+        parks work. Inserted at the front so ``flush_oldest`` favors it."""
+        now = time.perf_counter() if now is None else now
+        b = _OpenBatch(deadline=now, pinned=pb.bucket)
+        for it in pb.items:
+            b.add(it)
+        self._open.insert(0, b)
 
     def flush_all(self) -> List[PackedBatch]:
         """Flush every open batch regardless of deadline (drain/shutdown)."""

@@ -59,6 +59,16 @@ class QueueConfig:
                  (``None`` inherits the engine default). Admission is
                  per-queue, so a bulk tenant pinned at its cap never
                  blocks a latency tenant's submissions.
+    priority   : a latency tenant. While a priority queue has work waiting
+                 (or arrived within the preempt horizon), popped batches of
+                 NON-priority queues are split down to the preempt chunk.
+                 The served head re-buckets to its own content — its device
+                 quantum is proportional to the chunk, not the parent batch
+                 — while the remainder re-enters its packer pinned to the
+                 sealed bucket (no recompile once the window closes). Both
+                 sides stay bitwise-stable under the §2 pad-parity
+                 contract, and the priority tenant's p99 is bounded by a
+                 chunk's device time, not a full bulk batch's.
     """
 
     name: str
@@ -68,6 +78,7 @@ class QueueConfig:
     max_nodes: Optional[int] = None
     max_edges: Optional[int] = None
     max_pending: Optional[int] = None
+    priority: bool = False
 
     def __post_init__(self):
         if not self.name:
@@ -98,9 +109,28 @@ class BatchScheduler:
                  default_max_wait_s: float = 2e-3,
                  buckets: Tuple[int, ...] = DEFAULT_BUCKETS,
                  default_max_nodes: Optional[int] = None,
-                 default_max_edges: Optional[int] = None):
+                 default_max_edges: Optional[int] = None,
+                 preempt_chunk: Optional[int] = None,
+                 preempt_horizon_s: float = 0.0):
         if not queues:
             raise ValueError("at least one queue is required")
+        if preempt_chunk is not None and preempt_chunk < 1:
+            raise ValueError("preempt_chunk must be >= 1")
+        # priority preemption (DESIGN.md §5): while a priority tenant has
+        # work waiting — or submitted within the last ``preempt_horizon_s``
+        # — a popped non-priority batch is served only ``preempt_chunk``
+        # graphs at a time. The served head re-buckets to its own content
+        # (a chunk must COST a chunk — at the parent's pads it would cost
+        # a full batch of device time); the remainder readmits to its
+        # packer pinned to the sealed bucket, so when the window closes
+        # the leftover dispatches on the already-compiled parent program.
+        # ``None`` disables splitting entirely.
+        self._preempt_chunk = preempt_chunk
+        self._buckets = tuple(buckets)
+        self._preempt_horizon_s = max(0.0, preempt_horizon_s)
+        self._preempt_until = float("-inf")
+        self.preempt_splits = 0        # batches split (engine stats mirror)
+        self.preempted_graphs = 0      # graphs deferred by those splits
         # system virtual time: the virtual start time of the last service.
         # Re-entering queues are floored to it, so a long-idle tenant can
         # neither bank credit NOR keep a stale-low vtime through a moment
@@ -123,6 +153,7 @@ class BatchScheduler:
                 max_edges=(qc.max_edges if qc.max_edges is not None
                            else default_max_edges))
             self._queues[qc.name] = _TenantQueue(qc, packer)
+        self._has_priority = any(qc.priority for qc in queues)
 
     # -- introspection ----------------------------------------------------
 
@@ -143,6 +174,15 @@ class BatchScheduler:
         """Graphs held here (open or ready), i.e. not yet handed out."""
         return sum(q.packer.pending_graphs + sum(b.num_graphs for b in q.ready)
                    for q in self._queues.values())
+
+    @property
+    def priority_ready(self) -> bool:
+        """A priority tenant has a flushed batch waiting. The placer's
+        preempt gate (engine §5): while the window is open, non-priority
+        claims must not stack in an executor's FIFO pipeline ahead of a
+        priority batch — or the claim depth, not the preempt chunk,
+        becomes the tail-latency bound."""
+        return any(q.cfg.priority and q.ready for q in self._queues.values())
 
     def graph_pads(self) -> Tuple[int, ...]:
         """Distinct flushed ``graph_pad`` values across queues (for warmup)."""
@@ -165,6 +205,12 @@ class BatchScheduler:
             raise KeyError(
                 f"unknown queue '{queue}'; have {sorted(self._queues)}")
         now = time.perf_counter() if now is None else now
+        if q.cfg.priority and self._preempt_chunk is not None:
+            # a latency arrival opens (or extends) the preempt window: bulk
+            # batches popped inside it are chunked even if this request is
+            # briefly the only priority work visible
+            self._preempt_until = max(self._preempt_until,
+                                      now + self._preempt_horizon_s)
         self._push_ready(q, q.packer.add(item, now=now))
 
     def poll(self, now: Optional[float] = None) -> int:
@@ -213,22 +259,70 @@ class BatchScheduler:
 
     # -- draining ---------------------------------------------------------
 
-    def next_batch(self) -> Optional[Tuple[str, PackedBatch]]:
+    def preempt_active(self, now: float) -> bool:
+        """True while non-priority pops must be chunked: a priority tenant
+        has work waiting here, or submitted within the horizon (its batch
+        may already be on a device — keeping bulk quanta small until the
+        window closes is what bounds the NEXT priority arrival's wait)."""
+        if self._preempt_chunk is None or not self._has_priority:
+            return False
+        if now <= self._preempt_until:
+            return True
+        return any(q.cfg.priority
+                   and (q.ready or q.packer.pending_graphs)
+                   for q in self._queues.values())
+
+    def _maybe_preempt(self, q: _TenantQueue, pb: PackedBatch,
+                       now: Optional[float]) -> PackedBatch:
+        """Split a popped non-priority batch down to the preempt chunk;
+        the remainder readmits to the packer pinned to the sealed bucket
+        (``GraphPacker.readmit``) and re-flushes on the next poll. The
+        served head re-buckets to its own content (``rebucket``): its
+        device quantum is proportional to the chunk, not the parent —
+        that proportionality is what bounds the priority tenant's wait.
+        Virtual time is charged only for what is actually served, so
+        fairness accounting is exact across the split."""
+        chunk = self._preempt_chunk
+        if (now is None or q.cfg.priority or chunk is None
+                or not self.preempt_active(now)):
+            return pb
+        if pb.num_graphs <= chunk:
+            # the final remainder of a split (or a small fresh seal) still
+            # re-buckets: at the pinned parent pads a chunk-sized leftover
+            # would cost a FULL batch's device time mid-window. Fresh small
+            # seals are already content-tight, so this is a no-op for them;
+            # pinned remainders popped after the window closes keep their
+            # parent bucket (the no-recompile path).
+            return pb.rebucket(self._buckets)
+        head = pb.subset(pb.items[:chunk]).rebucket(self._buckets)
+        rest = pb.subset(pb.items[chunk:])
+        q.packer.readmit(rest, now=now)
+        self.preempt_splits += 1
+        self.preempted_graphs += rest.num_graphs
+        return head
+
+    def next_batch(self, now: Optional[float] = None
+                   ) -> Optional[Tuple[str, PackedBatch]]:
         """Weighted-fair pop: the ready queue with the smallest virtual
-        time serves next (ties broken by name for determinism)."""
+        time serves next (ties broken by name for determinism). With
+        ``now``, non-priority batches popped during an active preempt
+        window are chunked (``None`` — e.g. drain — never splits)."""
         backlogged = [q for q in self._queues.values() if q.ready]
         if not backlogged:
             return None
         q = min(backlogged, key=lambda t: (t.vtime, t.cfg.name))
         pb = q.ready.pop(0)
+        pb = self._maybe_preempt(q, pb, now)
         self._vsys = max(self._vsys, q.vtime)
         q.vtime += pb.num_graphs / q.cfg.weight
         return q.cfg.name, pb
 
-    def flush_oldest_open(self) -> Optional[Tuple[str, PackedBatch]]:
+    def flush_oldest_open(self, now: Optional[float] = None
+                          ) -> Optional[Tuple[str, PackedBatch]]:
         """Seal + return the open batch with the earliest deadline across
         all queues (the idle-executor eager-flush path). Ready batches take
-        precedence — call ``next_batch`` first."""
+        precedence — call ``next_batch`` first. Chunked under an active
+        preempt window exactly like ``next_batch``."""
         best: Optional[_TenantQueue] = None
         for q in self._queues.values():
             d = q.packer.next_deadline()
@@ -239,6 +333,7 @@ class BatchScheduler:
         if best is None:
             return None
         pb = best.packer.flush_oldest()
+        pb = self._maybe_preempt(best, pb, now)
         best.vtime = max(best.vtime, self._vsys)
         self._vsys = max(self._vsys, best.vtime)
         best.vtime += pb.num_graphs / best.cfg.weight

@@ -26,7 +26,8 @@ floor sits under the lowest observed idle-host ratio; it still trips on
 the regressions it exists for (packing broken -> mean batch ~1 ->
 ratio ~1x, or pad blowup making batch-64 the slower path). The same flag gates the overload-robustness rows
 (``--max-slo-multiple`` / ``--min-preempt-gain`` /
-``--min-chaos-goodput`` and the drift retune+eviction invariants; see
+``--min-chaos-goodput`` / ``--min-degraded-goodput`` and the drift
+retune+eviction and degraded-ladder audit/breaker invariants; see
 ``check_stream``), all likewise self-relative.
 
 ``--calibrate NAME`` divides every ratio by that row's own fresh/baseline
@@ -64,7 +65,8 @@ def check_stream(path: str, min_speedup: float,
                  min_aggregate_speedup: float = 1.8,
                  max_slo_multiple: float = 8.0,
                  min_preempt_gain: float = 2.0,
-                 min_chaos_goodput: float = 0.85) -> list:
+                 min_chaos_goodput: float = 0.85,
+                 min_degraded_goodput: float = 0.5) -> list:
     """Validate BENCH_stream.json invariants; return failure strings.
 
     Beyond the batch-64 packing floor, three overload-robustness gates
@@ -82,6 +84,11 @@ def check_stream(path: str, min_speedup: float,
     * Drift gate: the traffic-mix-shift scenario triggered >=1 re-autotune
       and >=1 cold-program eviction with every graph served finite and the
       pool undegraded.
+    * Degraded-ladder gate (DESIGN.md §9): the broken-impl scenario's
+      shadow audits detected >=1 mismatch, the circuit breaker tripped
+      >=1 time, every graph was still served, and throughput on the
+      demoted rung stays at or above ``min_degraded_goodput`` x the
+      clean-engine throughput (self-relative, machine-independent).
 
     A missing section is a coverage failure, not a skip.
 
@@ -173,6 +180,29 @@ def check_stream(path: str, min_speedup: float,
             failures.append(
                 f"drift gate: retunes={retunes} evictions={evictions} "
                 f"served={served}/{total} degraded={degraded}")
+
+    deg = payload.get("degraded")
+    if not deg:
+        print(f"FAIL {path}: no 'degraded' section (degraded bench not run?)")
+        failures.append(f"{path}: degraded section missing")
+    else:
+        audits = deg.get("audits", 0)
+        mismatches = deg.get("audit_mismatches", 0)
+        trips = deg.get("breaker_trips", 0)
+        served = deg.get("served_ok", 0)
+        total = deg.get("n_graphs", -1)
+        frac = deg.get("degraded_goodput_frac", 0.0)
+        ok = (audits >= 1 and mismatches >= 1 and trips >= 1
+              and served == total and frac >= min_degraded_goodput)
+        print(f"{'ok  ' if ok else 'FAIL'} degraded ladder: {audits} "
+              f"audit(s), {mismatches} mismatch(es), {trips} trip(s), "
+              f"{served}/{total} served, goodput {frac:.3f} of clean "
+              f"(floor {min_degraded_goodput:.2f})")
+        if not ok:
+            failures.append(
+                f"degraded gate: audits={audits} mismatches={mismatches} "
+                f"trips={trips} served={served}/{total} "
+                f"goodput={frac:.3f} (floor {min_degraded_goodput:.2f})")
     if baseline:
         with open(baseline) as f:
             base = json.load(f)
@@ -253,6 +283,9 @@ def main(argv=None) -> int:
     ap.add_argument("--min-chaos-goodput", type=float, default=0.85,
                     help="stream gate: minimum goodput fraction under the "
                          "seeded fault rate")
+    ap.add_argument("--min-degraded-goodput", type=float, default=0.5,
+                    help="stream gate: minimum demoted-rung / clean-engine "
+                         "throughput ratio after a breaker demotion")
     ap.add_argument("--stream-baseline", default=None, metavar="PATH",
                     help="smaller-pool BENCH_stream.json from the SAME "
                          "machine: gate --stream's batch-64 aggregate_gps "
@@ -282,7 +315,8 @@ def main(argv=None) -> int:
             min_aggregate_speedup=args.min_aggregate_speedup,
             max_slo_multiple=args.max_slo_multiple,
             min_preempt_gain=args.min_preempt_gain,
-            min_chaos_goodput=args.min_chaos_goodput)
+            min_chaos_goodput=args.min_chaos_goodput,
+            min_degraded_goodput=args.min_degraded_goodput)
     if args.edge_passes:
         stream_failures += check_edge_passes(args.edge_passes)
     if not args.baseline:

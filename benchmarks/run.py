@@ -13,8 +13,8 @@ single-pass vs per-kind multi-aggregation comparison — can be tracked
 across PRs. The ``stream`` target additionally writes ``BENCH_stream.json``
 (p50/p99 latency and batch-aware graphs/s at batch sizes 1/8/64/256, plus
 the per-bucket autotuned dataflow knobs, the chaos-goodput row, and the
-``overload``/``drift`` sections behind the ``check_regression.py --stream``
-SLO gates) and ``BENCH_overload_trace.json`` (the replayed trace plus all
+``overload``/``drift``/``degraded`` sections behind the
+``check_regression.py --stream`` SLO gates) and ``BENCH_overload_trace.json`` (the replayed trace plus all
 three overload-run summaries — the CI artifact).
 """
 
@@ -41,6 +41,7 @@ def _run_stream(csv: Csv) -> None:
     _STREAM_PAYLOAD["overload"] = stream_bench.overload_bench(
         csv, trace_out=str(OVERLOAD_TRACE_JSON))
     _STREAM_PAYLOAD["drift"] = stream_bench.drift_bench(csv)
+    _STREAM_PAYLOAD["degraded"] = stream_bench.degraded_bench(csv)
 
 
 TABLES = {

@@ -597,3 +597,85 @@ def drift_bench(csv: Csv, model_name: str = "gin", seed: int = 0) -> Dict:
         return payload
     finally:
         eng.close(timeout=60)
+
+
+def degraded_bench(csv: Csv, model_name: str = "gin", n_graphs: int = 128,
+                   max_batch: int = 8, seed: int = 0,
+                   sample_rate: float = 1.0) -> Dict:
+    """Goodput while serving DEMOTED: the degradation-ladder row (§9).
+
+    A seeded broken impl (finite corruption invisible to the NaN gate)
+    is installed on the engine's default dataflow; the warm pass lets the
+    shadow auditor catch it and the circuit breaker demote every touched
+    bucket to the jnp floor. The measured pass then serves the whole
+    stream on the demoted rung — with auditing still sampling — and the
+    gate (``check_regression.py --stream --min-degraded-goodput``) floors
+    ``degraded_goodput_frac``: a demoted bucket must stay a serving
+    bucket, not a brick. Invariants checked downstream: ≥1 audit, ≥1
+    mismatch, ≥1 breaker trip, and every measured graph served OK
+    (demotion is curative — once off the broken impl, results are clean).
+    """
+    cfg = PAPER_GNN_CONFIGS[model_name]
+    model = make_gnn(cfg)
+    params = model.init(jax.random.PRNGKey(0), cfg)
+    graphs = list(molhiv_like(seed=0, n_graphs=n_graphs))
+
+    def run(eng):
+        t0 = time.perf_counter()
+        futs = [eng.submit(g.node_feat, g.senders, g.receivers,
+                           g.edge_feat, g.node_pos) for g in graphs]
+        eng.drain(timeout=600)
+        wall = time.perf_counter() - t0
+        return futs, wall
+
+    kw = dict(max_batch=max_batch, max_wait_ms=20.0,
+              max_nodes_per_batch=64 * max_batch,
+              max_edges_per_batch=128 * max_batch, eager_flush=False)
+    # clean reference throughput: same stream, healthy impl, no auditing
+    eng = GraphStreamEngine(cfg, params, **kw)
+    try:
+        run(eng)                                   # warm (compiles)
+        _, clean_wall = run(eng)
+    finally:
+        eng.close(timeout=60)
+
+    inj = FaultInjector(seed=seed).break_impl("fused", eps=0.05)
+    eng = GraphStreamEngine(cfg, params, audit_sample_rate=sample_rate,
+                            breaker_cooldown_s=3600.0, fault_injector=inj,
+                            **kw)
+    try:
+        run(eng)                                   # warm: audits catch it
+        assert eng.flush_audits(timeout=300)
+        run(eng)                                   # re-warm: demoted rung compiles
+        eng.flush_audits(timeout=300)
+        futs, wall = run(eng)                      # measured, demoted
+        eng.flush_audits(timeout=300)
+        ok = sum(f.exception() is None for f in futs)
+        s = eng.stats.summary()
+        report = eng.autotune_report()
+        payload = {
+            "n_graphs": n_graphs,
+            "seed": seed,
+            "sample_rate": sample_rate,
+            "served_ok": int(ok),
+            "clean_gps": n_graphs / max(clean_wall, 1e-9),
+            "degraded_gps": ok / max(wall, 1e-9),
+            "degraded_goodput_frac": clean_wall / max(wall, 1e-9),
+            "audits": s.get("audits", 0),
+            "audit_mismatches": s.get("audit_mismatches", 0),
+            "audit_dropped": s.get("audit_dropped", 0),
+            "breaker_trips": s.get("breaker_trips", 0),
+            "breaker_probes": s.get("breaker_probes", 0),
+            "demoted_buckets": {k: v["breaker"] for k, v in report.items()
+                                if "breaker" in v},
+            "injected": inj.summary(),
+        }
+        csv.add("bench.stream.degraded",
+                payload["degraded_gps"],
+                f"goodput_frac={payload['degraded_goodput_frac']:.3f};"
+                f"trips={payload['breaker_trips']};"
+                f"mismatches={payload['audit_mismatches']};"
+                f"served_ok={ok}/{n_graphs}")
+        return payload
+    finally:
+        eng.close(timeout=60)

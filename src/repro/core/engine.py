@@ -52,6 +52,7 @@ import heapq
 import itertools
 import json
 import os
+import queue as queue_lib
 import threading
 import time
 from concurrent.futures import Future
@@ -62,7 +63,9 @@ import jax
 import numpy as np
 
 from repro.core.errors import (BatchFailed, DeadlineExceeded, EngineClosed,
-                               EngineError, ExecutorDead, PoisonGraph)
+                               EngineError, ExecutorDead, InvalidGraph,
+                               InvalidRequest, ParamUpdateFailed, PoisonGraph,
+                               UnknownQueue)
 from repro.core.executor import CompletedBatch, DeviceExecutor
 from repro.core.faults import FaultInjector
 from repro.core.graph import GraphBatch, build_graph_batch, pad_bucket
@@ -71,7 +74,9 @@ from repro.core.message_passing import (DEFAULT_DATAFLOW, DataflowConfig,
 from repro.core.models import GNNConfig, make_gnn
 from repro.core.packing import PackedBatch, PackItem
 from repro.core.scheduler import BatchScheduler, QueueConfig
-from repro.distributed.sharding import device_kind, replicate_params
+from repro.core.validate import check_graph
+from repro.distributed.sharding import (device_kind, params_compatible,
+                                        replicate_params)
 
 BucketKey = Tuple[int, int, int]        # (node_pad, edge_pad, graph_pad)
 
@@ -108,6 +113,15 @@ class StreamStats:
     programs dropped by the per-executor LRU cap — none of these are
     failures; they are how the engine absorbs traffic it was not tuned
     for, surfaced so overload benches and tests can assert they fired.
+
+    Defense accounting (DESIGN.md §9): ``invalid_rejects`` counts graphs
+    rejected at admission validation (``InvalidGraph``),
+    ``audits``/``audit_mismatches``/``audit_dropped`` track the shadow
+    auditor (sampled re-execution on the jnp mirror),
+    ``breaker_trips``/``breaker_probes`` track the per-bucket impl
+    circuit breaker's demotions and cooldown re-probes, and
+    ``param_updates``/``param_rollbacks`` count hot parameter reloads
+    promoted vs rejected (canary failure / incompatible tree).
     """
 
     latencies_s: List[float] = field(default_factory=list)
@@ -128,6 +142,14 @@ class StreamStats:
     preemptions: int = 0
     retunes: int = 0
     program_evictions: int = 0
+    invalid_rejects: int = 0
+    audits: int = 0
+    audit_mismatches: int = 0
+    audit_dropped: int = 0
+    breaker_trips: int = 0
+    breaker_probes: int = 0
+    param_updates: int = 0
+    param_rollbacks: int = 0
 
     def record_batch(self, *, latencies: Sequence[float],
                      queue_waits: Sequence[float], device_s: float,
@@ -176,13 +198,22 @@ class StreamStats:
         return bool(self.preemptions or self.retunes
                     or self.program_evictions)
 
+    @property
+    def _has_defense_events(self) -> bool:
+        return bool(self.invalid_rejects or self.audits
+                    or self.audit_mismatches or self.audit_dropped
+                    or self.breaker_trips or self.breaker_probes
+                    or self.param_updates or self.param_rollbacks)
+
     def summary(self) -> Dict[str, Any]:
         if not self.latencies_s:
-            if not self._has_failures and not self._has_load_events:
+            if (not self._has_failures and not self._has_load_events
+                    and not self._has_defense_events):
                 return {}
             out: Dict[str, Any] = {}
             self._failure_summary(out)
             self._load_summary(out)
+            self._defense_summary(out)
             return out
         arr = np.array(self.latencies_s)
         out: Dict[str, Any] = {
@@ -216,6 +247,7 @@ class StreamStats:
                 / (self.t_last_done - self.t_first_dispatch))
         self._failure_summary(out)
         self._load_summary(out)
+        self._defense_summary(out)
         if self.by_queue:
             out["queues"] = {name: s.summary()
                              for name, s in sorted(self.by_queue.items())}
@@ -241,6 +273,18 @@ class StreamStats:
         out["preemptions"] = int(self.preemptions)
         out["retunes"] = int(self.retunes)
         out["program_evictions"] = int(self.program_evictions)
+
+    def _defense_summary(self, out: Dict[str, Any]) -> None:
+        if not self._has_defense_events:
+            return
+        out["invalid_graphs"] = int(self.invalid_rejects)
+        out["audits"] = int(self.audits)
+        out["audit_mismatches"] = int(self.audit_mismatches)
+        out["audit_dropped"] = int(self.audit_dropped)
+        out["breaker_trips"] = int(self.breaker_trips)
+        out["breaker_probes"] = int(self.breaker_probes)
+        out["param_updates"] = int(self.param_updates)
+        out["param_rollbacks"] = int(self.param_rollbacks)
 
 
 @dataclass
@@ -303,6 +347,37 @@ class _BucketLoad:
     last_reason: Optional[str] = None
 
 
+#: degradation-ladder floor: the unfused jnp mirror (DESIGN.md §9) — the
+#: same program the shadow auditor uses as its reference, so a bucket at
+#: the floor cannot, by construction, fail an audit.
+_JNP_RUNG = 3
+
+
+@dataclass
+class _BucketHealth:
+    """Per-bucket circuit-breaker ledger (DESIGN.md §9).
+
+    ``level`` is how many rungs BELOW its tuned impl the bucket currently
+    serves on (0 = healthy, serving the tuned winner). Trips — NaN-gate
+    quarantines, trace/compile failures, shadow-audit mismatches — demote
+    one rung at a time down the ladder ``fused_layer → pipeline →
+    single-pass jnp → unfused jnp``; the bucket stays servable at every
+    rung. After ``breaker_cooldown_s`` without a trip the breaker
+    half-opens: it promotes one rung back up and marks the bucket
+    ``probing``, which forces the next completions through the shadow
+    auditor — a clean audit confirms the probe, a mismatch re-demotes and
+    restarts the cooldown. ``probes`` is bounded by ``breaker_max_probes``
+    so a permanently-broken impl cannot oscillate forever.
+    """
+
+    level: int = 0
+    trips: int = 0
+    probes: int = 0
+    probing: bool = False
+    last_trip_t: float = float("-inf")
+    last_reason: Optional[str] = None
+
+
 def _resolve(fut: Future, result=None, exc: Optional[BaseException] = None
              ) -> None:
     """Resolve a submission future, tolerating caller-side cancellation.
@@ -352,7 +427,16 @@ class GraphStreamEngine:
                  validate_outputs: bool = True,
                  inflight_timeout_s: Optional[float] = None,
                  respawn_executors: bool = False,
-                 fault_injector: Optional[FaultInjector] = None):
+                 fault_injector: Optional[FaultInjector] = None,
+                 validate_inputs: bool = True,
+                 require_finite: bool = False,
+                 audit_sample_rate: float = 0.0,
+                 audit_rtol: float = 1e-3,
+                 audit_atol: float = 1e-5,
+                 audit_seed: int = 0,
+                 breaker: bool = True,
+                 breaker_cooldown_s: float = 1.0,
+                 breaker_max_probes: int = 2):
         self.cfg = cfg
         self.params = params
         self.dataflow = dataflow
@@ -393,6 +477,38 @@ class GraphStreamEngine:
         self._inflight_timeout_s = inflight_timeout_s
         self._respawn = bool(respawn_executors)
         self._faults = fault_injector
+
+        # defense-in-depth knobs + state (DESIGN.md §9)
+        self._validate_inputs = bool(validate_inputs)
+        self._require_finite = bool(require_finite)
+        if not 0.0 <= audit_sample_rate <= 1.0:
+            raise ValueError("audit_sample_rate must be in [0, 1]")
+        self._audit_rate = float(audit_sample_rate)
+        self._audit_rtol = float(audit_rtol)
+        self._audit_atol = float(audit_atol)
+        self._breaker = bool(breaker)
+        self._breaker_cooldown_s = max(0.0, float(breaker_cooldown_s))
+        self._breaker_max_probes = max(0, int(breaker_max_probes))
+        self._bucket_health: Dict[BucketKey, _BucketHealth] = {}
+        self._served_impl: Dict[BucketKey, str] = {}
+        # shadow auditor: bounded handoff queue + its own rng (sampling
+        # decisions happen under self._cv, so one engine-owned stream is
+        # deterministic per submission order)
+        self._audit_q: Optional[queue_lib.Queue] = (
+            queue_lib.Queue(maxsize=32) if self._audit_rate > 0 else None)
+        self._audit_thread: Optional[threading.Thread] = None
+        self._audit_rng = np.random.default_rng(int(audit_seed))
+        self._audit_ref = None         # lazily-jitted jnp mirror
+        self._audits_enqueued = 0
+        self._audits_done = 0
+        # versioned params (hot reload): in-flight batches pin the version
+        # their executor snapshot at dispatch; the auditor looks host
+        # trees up by version so late audits of pre-swap batches compare
+        # against the params that actually served them
+        self._param_version = 0
+        self._params_by_version: Dict[int, Any] = {0: params}
+        self._update_lock = threading.Lock()
+        self._canary_run = None        # lazily-jitted default-df program
 
         # executor pool: one per device, params committed per device
         self._devices = (list(devices) if devices is not None
@@ -506,21 +622,44 @@ class GraphStreamEngine:
         dispatched.
         """
         if edge_feat is None and self.cfg.edge_feat_dim != 1:
-            raise ValueError("model expects edge features")
+            raise InvalidRequest("model expects edge features")
         if deadline is not None and deadline <= 0:
-            raise ValueError("deadline must be > 0 seconds")
+            raise InvalidRequest("deadline must be > 0 seconds")
         if self._closed:        # don't spin up worker threads just to reject
             raise EngineClosed("engine is closed")
         if queue is None:
             queue = self._scheduler.queue_names[0]
         elif queue not in self._scheduler.queue_names:
-            raise KeyError(f"unknown queue '{queue}'; "
-                           f"have {sorted(self._scheduler.queue_names)}")
+            raise UnknownQueue(f"unknown queue '{queue}'; "
+                               f"have {sorted(self._scheduler.queue_names)}")
         with self._cv:
             req_id = self._req_seq
             self._req_seq += 1
         if self._faults is not None:
             self._faults.on_submit(req_id)       # may raise InjectedOOM
+            # chaos site: a "buggy client" corrupts its own arrays BEFORE
+            # admission validation — which must then reject them
+            node_feat, senders, receivers, edge_feat = (
+                self._faults.corrupt_input(req_id, node_feat, senders,
+                                           receivers, edge_feat))
+        if self._validate_inputs:
+            # defense layer 1 (DESIGN.md §9): cheap vectorized admission
+            # checks; a malformed graph fails HERE, typed and carrying its
+            # request id, instead of poisoning a packed batch downstream.
+            # edge_feat_dim 1 means "model takes no edge features" — any
+            # provided width is legal there (it is ignored), so the width
+            # check only binds when the model consumes edge features.
+            reason = check_graph(
+                node_feat, senders, receivers, edge_feat, node_pos,
+                node_feat_dim=self.cfg.node_feat_dim,
+                edge_feat_dim=(self.cfg.edge_feat_dim
+                               if self.cfg.edge_feat_dim != 1 else None),
+                pos_dim=self.cfg.pos_dim,
+                require_finite=self._require_finite)
+            if reason is not None:
+                with self._cv:
+                    self.stats.invalid_rejects += 1
+                raise InvalidGraph(reason, request_ids=(req_id,))
         t_arrival = time.perf_counter()
         fut: Future = Future()
         req = _Request(future=fut, record=record, req_id=req_id, queue=queue,
@@ -626,6 +765,9 @@ class GraphStreamEngine:
             for ex in self._executors:
                 ex.stop(timeout=timeout)
             self._watchdog_stop.set()
+            if self._audit_thread is not None:
+                self._audit_q.put(None)        # sentinel: drain then exit
+                self._audit_thread.join(timeout)
         with self._cv:
             victims = self._abandon_outstanding_locked()
         if victims:
@@ -708,7 +850,7 @@ class GraphStreamEngine:
         with self._compile_lock:
             keys = (set(self._compiled) | set(self._tuned)
                     | set(self._tune_log) | set(self._bucket_load)
-                    | set(self._evict_log))
+                    | set(self._evict_log) | set(self._bucket_health))
             for key in keys:
                 df = self._tuned.get(key, self.dataflow)
                 entry: Dict[str, Any] = {
@@ -739,6 +881,16 @@ class GraphStreamEngine:
                 ev = self._evict_log.get(key)
                 if ev:
                     entry["evictions"] = int(ev)
+                health = self._bucket_health.get(key)
+                if health is not None and (health.trips or health.probes):
+                    entry["breaker"] = {
+                        "level": int(health.level),
+                        "trips": int(health.trips),
+                        "probes": int(health.probes),
+                        "probing": bool(health.probing),
+                        "last_reason": health.last_reason,
+                        "serving_impl": self._served_impl.get(key, df.impl),
+                    }
                 report["x".join(map(str, key))] = entry
         return report
 
@@ -757,6 +909,11 @@ class GraphStreamEngine:
             self._placer = threading.Thread(
                 target=self._place_loop, name="flowgnn-placer", daemon=True)
             self._placer.start()
+            if self._audit_q is not None and self._audit_thread is None:
+                self._audit_thread = threading.Thread(
+                    target=self._audit_loop, name="flowgnn-auditor",
+                    daemon=True)
+                self._audit_thread.start()
             if self._inflight_timeout_s is not None:
                 self._watchdog = threading.Thread(
                     target=self._watchdog_loop, name="flowgnn-watchdog",
@@ -1005,7 +1162,7 @@ class GraphStreamEngine:
     # ------------------------------------------------------------------
 
     def _make_executor(self, device, index: int, params) -> DeviceExecutor:
-        return DeviceExecutor(
+        ex = DeviceExecutor(
             device=device, index=index, params=params,
             build_fn=self._build_batch,
             program_fn=self._ensure_program,
@@ -1014,6 +1171,9 @@ class GraphStreamEngine:
             on_fatal=self._handle_fatal,
             fault_hook=(self._faults.executor_hook
                         if self._faults is not None else None))
+        # respawns after a hot reload must pin the CURRENT version, not 0
+        ex.set_params(params, self._param_version)
+        return ex
 
     def _build_batch(self, pb: PackedBatch) -> GraphBatch:
         return pb.build(pos_dim=self.cfg.pos_dim)
@@ -1033,6 +1193,8 @@ class GraphStreamEngine:
     def _complete_ok(self, ex: DeviceExecutor, done: CompletedBatch) -> None:
         pb = done.batch
         resolved = []          # (future, result, exc)
+        tripped = False        # this batch tripped the NaN gate
+        invalidate = False     # breaker moved a rung: drop compiled programs
         with self._cv:
             lat, qw = [], []
             for i, it in enumerate(pb.items):
@@ -1052,6 +1214,7 @@ class GraphStreamEngine:
                     resolved.append((req.future, None, PoisonGraph(
                         "non-finite output quarantined by validation gate",
                         request_ids=(req.req_id,), executor_index=ex.index)))
+                    tripped = True
                     continue
                 if req.record:
                     lat.append(done.t_ready - it.t_arrival)
@@ -1062,10 +1225,41 @@ class GraphStreamEngine:
                     latencies=lat, queue_waits=qw, device_s=done.device_s,
                     batch_size=len(lat), t_dispatch=done.t_dispatch,
                     t_done=done.t_ready, queue=done.queue, device=ex.label)
+            now = done.t_ready
+            h = self._bucket_health.get(pb.bucket)
+            was_probing = h is not None and h.probing
+            if tripped:
+                # a NaN-producing impl and a NaN-producing graph look the
+                # same from here; demote one rung either way — the jnp
+                # floor is where "is it the graph?" is answered for sure
+                invalidate = self._record_trip_locked(
+                    pb.bucket, "nan_gate", now)
+            else:
+                if self._audit_q is not None:
+                    # probing buckets are ALWAYS audited (the probe's
+                    # verdict); healthy ones are sampled. The probing flag
+                    # is read BEFORE any promotion below, so the batch
+                    # that merely triggers a probe is not its verdict.
+                    if (was_probing
+                            or self._audit_rng.random() < self._audit_rate):
+                        try:
+                            self._audit_q.put_nowait(
+                                (pb, list(done.results),
+                                 done.params_version))
+                            self._audits_enqueued += 1
+                        except queue_lib.Full:
+                            self.stats.audit_dropped += 1
+                elif was_probing:
+                    # no auditor: a clean completion is the best probe
+                    # verdict available — confirm on it
+                    h.probing = False
+                invalidate = self._maybe_probe_locked(pb.bucket, now)
             retune_reason = self._observe_bucket_locked(pb, done)
             self._cv.notify_all()
         for fut, res, exc in resolved:
             _resolve(fut, res, exc)
+        if invalidate:
+            self._invalidate_programs(pb.bucket)
         if retune_reason is not None:
             self._trigger_retune(pb.bucket)
 
@@ -1245,20 +1439,210 @@ class GraphStreamEngine:
                     _resolve(req.future, exc=exc)
                 self._supervise(entry.ex)
 
-    def _unpack(self, pb: PackedBatch, out_np: np.ndarray
-                ) -> List[np.ndarray]:
-        """Per-graph views of the packed output (copied so buffers detach)."""
+    def _split_outputs(self, pb: PackedBatch, out_np: np.ndarray
+                       ) -> List[np.ndarray]:
+        """Per-graph views of the packed output (copied so buffers detach).
+        Shared by the serving unpack path and the shadow auditor's
+        reference re-execution, so both slice identically."""
         if self.cfg.task == "node":
             offs = pb.graph_offsets()
-            res = [np.array(out_np[offs[i]:offs[i + 1]])
-                   for i in range(pb.num_graphs)]
-        else:
-            res = [np.array(out_np[i]) for i in range(pb.num_graphs)]
+            return [np.array(out_np[offs[i]:offs[i + 1]])
+                    for i in range(pb.num_graphs)]
+        return [np.array(out_np[i]) for i in range(pb.num_graphs)]
+
+    def _unpack(self, pb: PackedBatch, out_np: np.ndarray
+                ) -> List[np.ndarray]:
+        res = self._split_outputs(pb, out_np)
         if self._faults is not None:
             # chaos: scripted NaN corruption lands here, between device
-            # readback and the engine's validation gate
-            res = self._faults.corrupt_outputs(pb, res)
+            # readback and the engine's validation gate; a broken-impl
+            # epsilon lands here too when this bucket served on it
+            res = self._faults.corrupt_outputs(
+                pb, res, impl=self._served_impl.get(pb.bucket))
         return res
+
+    # ------------------------------------------------------------------
+    # shadow auditor: sampled re-execution on the jnp mirror (§9)
+    # ------------------------------------------------------------------
+
+    def _audit_reference(self):
+        """The lazily-jitted unfused jnp mirror — the ladder floor and
+        the ground truth every audit and canary compares against."""
+        fn = self._audit_ref
+        if fn is None:
+            apply, cfg = self.model.apply, self.cfg
+            mirror = self.dataflow.replace(impl="unfused",
+                                           single_pass=False)
+            fn = jax.jit(lambda p, g: apply(p, g, cfg, mirror))
+            self._audit_ref = fn
+        return fn
+
+    def _audit_loop(self) -> None:
+        while True:
+            entry = self._audit_q.get()
+            if entry is None:
+                return
+            try:
+                self._audit_one(*entry)
+            except Exception:
+                with self._cv:
+                    self.stats.audit_dropped += 1
+            finally:
+                with self._cv:
+                    self._audits_done += 1
+                    self._cv.notify_all()
+
+    def _audit_one(self, pb: PackedBatch, served: List[np.ndarray],
+                   pver: int) -> None:
+        """Re-execute one sampled batch on the jnp mirror (host-side,
+        off the serving path) and compare what was SERVED — results after
+        any fault corruption, exactly what callers saw — against it."""
+        params = self._params_by_version.get(pver)
+        if params is None:             # params retired mid-flight: skip
+            with self._cv:
+                self.stats.audit_dropped += 1
+            return
+        g = pb.build(pos_dim=self.cfg.pos_dim)
+        out = np.asarray(self._audit_reference()(params, g))
+        ref = self._split_outputs(pb, out)
+        mismatch = False
+        for i in range(pb.num_graphs):
+            got = np.asarray(served[i])
+            if not bool(np.all(np.isfinite(got))):
+                continue               # the NaN gate owns non-finite rows
+            if not np.allclose(got, ref[i], rtol=self._audit_rtol,
+                               atol=self._audit_atol):
+                mismatch = True
+                break
+        invalidate = False
+        with self._cv:
+            self.stats.audits += 1
+            if mismatch:
+                self.stats.audit_mismatches += 1
+                invalidate = self._record_trip_locked(
+                    pb.bucket, "audit_mismatch", time.perf_counter())
+            else:
+                h = self._bucket_health.get(pb.bucket)
+                if h is not None and h.probing:
+                    h.probing = False  # probe confirmed clean
+            self._cv.notify_all()
+        if invalidate:
+            self._invalidate_programs(pb.bucket)
+
+    def flush_audits(self, timeout: Optional[float] = None) -> bool:
+        """Block until every audit enqueued so far has been judged (the
+        deterministic handle chaos tests need — 'within one audit window'
+        made waitable). Returns False on timeout."""
+        with self._cv:
+            return self._cv.wait_for(
+                lambda: self._audits_done >= self._audits_enqueued, timeout)
+
+    # ------------------------------------------------------------------
+    # hot parameter reload: versioned replicas + canary + rollback (§9)
+    # ------------------------------------------------------------------
+
+    def update_params(self, new_params, *, canary: bool = True) -> int:
+        """Install ``new_params`` across the pool with zero downtime.
+
+        Serving never pauses: each executor snapshots its ``(params,
+        version)`` pair at dispatch, so batches in flight finish on the
+        version that dispatched them while new dispatches pick up the new
+        one — no request is dropped, every future resolves exactly once.
+        With ``canary=True`` (default) the staged replicas must first
+        serve a probe batch with finite outputs matching the jnp mirror
+        under the new params; any failure raises ``ParamUpdateFailed``
+        and the previous version stays installed untouched (atomic
+        rollback — the staged replicas are simply discarded). Returns
+        the new version number.
+        """
+        if self._closed:
+            raise EngineClosed("engine is closed")
+        with self._update_lock:        # one update in flight at a time
+            reason = params_compatible(self.params, new_params)
+            if reason is not None:
+                with self._cv:
+                    self.stats.param_rollbacks += 1
+                raise ParamUpdateFailed(reason)
+            with self._cv:
+                alive = [ex for ex in self._executors if not ex.dead]
+            if not alive:
+                with self._cv:
+                    self.stats.param_rollbacks += 1
+                raise ParamUpdateFailed("no live executor to stage onto")
+            replicas = replicate_params(new_params,
+                                        [ex.device for ex in alive])
+            if canary:
+                err = self._run_canary(new_params, alive, replicas)
+                if err is not None:
+                    with self._cv:
+                        self.stats.param_rollbacks += 1
+                    raise ParamUpdateFailed(
+                        f"canary failed, previous params kept: {err}")
+            with self._cv:
+                self._param_version += 1
+                version = self._param_version
+                self.params = new_params
+                self._params_by_version[version] = new_params
+                while len(self._params_by_version) > 2:
+                    # keep the previous version for in-flight pinning and
+                    # late audits; anything older can no longer be live
+                    del self._params_by_version[
+                        min(self._params_by_version)]
+                for ex, rep in zip(alive, replicas):
+                    ex.set_params(rep, version)
+                self.stats.param_updates += 1
+                self._cv.notify_all()
+            return version
+
+    def _run_canary(self, new_params, alive, replicas) -> Optional[str]:
+        """Why the staged params fail validation, or None. The probe
+        batch runs per staged replica (on its executor's own device) and
+        must be finite and allclose to the jnp mirror's answer under the
+        SAME new params — a swap that would corrupt results is caught
+        before any real traffic can see it."""
+        g = self._probe_batch()
+        try:
+            ref = np.asarray(self._audit_reference()(new_params, g))
+        except Exception as exc:
+            return f"reference eval failed: {exc}"
+        if not bool(np.all(np.isfinite(ref))):
+            return "jnp-mirror outputs are non-finite under new params"
+        run = self._canary_run
+        if run is None:
+            # default-dataflow probe program, compiled once per engine;
+            # donate=False — the probe batch is reused across executors
+            run = self._make_run(self.dataflow, donate=False)
+            self._canary_run = run
+        for ex, rep in zip(alive, replicas):
+            try:
+                out = np.asarray(jax.block_until_ready(run(rep, g)))
+            except Exception as exc:
+                return f"canary batch failed on {ex.label}: {exc}"
+            if not bool(np.all(np.isfinite(out))):
+                return f"canary outputs non-finite on {ex.label}"
+            if not np.allclose(out, ref, rtol=self._audit_rtol,
+                               atol=self._audit_atol):
+                return f"canary diverges from jnp mirror on {ex.label}"
+        return None
+
+    def _probe_batch(self) -> GraphBatch:
+        """A small deterministic ring graph with non-trivial features in
+        the smallest bucket — rich enough that wrong params actually move
+        its outputs (an all-zeros batch would pass any canary)."""
+        rng = np.random.default_rng(0x9E3779B9)
+        b0 = self.buckets[0]
+        n = min(8, b0)
+        nf = rng.standard_normal(
+            (n, self.cfg.node_feat_dim)).astype(np.float32)
+        snd = np.arange(n, dtype=np.int32)
+        rcv = np.roll(snd, -1).astype(np.int32)
+        ef = (rng.standard_normal(
+            (n, self.cfg.edge_feat_dim)).astype(np.float32)
+            if self.cfg.edge_feat_dim != 1 else None)
+        return build_graph_batch(
+            nf, snd, rcv, edge_feat=ef, node_pad=b0,
+            edge_pad=pad_bucket(2 * b0, self.buckets), graph_pad=1,
+            pos_dim=self.cfg.pos_dim)
 
     # ------------------------------------------------------------------
     # drift detection -> bounded re-autotune (DESIGN.md §5)
@@ -1338,6 +1722,94 @@ class GraphStreamEngine:
                 ex.touched.pop(key, None)
 
     # ------------------------------------------------------------------
+    # impl circuit breaker: degradation ladder + cooldown re-probe (§9)
+    # ------------------------------------------------------------------
+
+    @staticmethod
+    def _impl_rung(df: DataflowConfig) -> int:
+        """Position of a dataflow on the degradation ladder (0 = most
+        fused / most lowering machinery in play; ``_JNP_RUNG`` = the
+        plain unfused jnp mirror, the audit reference itself)."""
+        if df.impl in ("fused_layer", "kernel"):
+            return 0
+        if df.impl in ("pipeline", "banked"):
+            return 1
+        if df.impl == "unfused" and not df.single_pass:
+            return _JNP_RUNG
+        return 2                       # single-pass jnp unit forms
+
+    def _ladder_df(self, base: DataflowConfig, rung: int) -> DataflowConfig:
+        """``base`` demoted to ``rung`` (clamped to the jnp floor); a rung
+        at or above the base's own is the base unchanged — demotion only
+        ever strips lowering machinery, never adds it."""
+        rung = min(int(rung), _JNP_RUNG)
+        if rung <= self._impl_rung(base):
+            return base
+        if rung == 1:
+            return base.replace(impl="pipeline")
+        if rung == 2:
+            return base.replace(impl="fused", single_pass=True)
+        return base.replace(impl="unfused", single_pass=False)
+
+    def _effective_df(self, key: BucketKey, df: DataflowConfig
+                      ) -> DataflowConfig:
+        """The dataflow ``key`` actually serves on: its tuned/default
+        winner demoted by the bucket's current breaker level."""
+        h = self._bucket_health.get(key)
+        if not self._breaker or h is None or h.level == 0:
+            return df
+        return self._ladder_df(df, self._impl_rung(df) + h.level)
+
+    def _record_trip_locked(self, key: BucketKey, reason: str,
+                            now: float) -> bool:
+        """One breaker trip for ``key``; returns True when it demoted a
+        rung (caller must then drop the bucket's compiled programs,
+        OUTSIDE ``self._cv``). Callers hold ``self._cv`` or the compile
+        lock; the ledger fields are GIL-atomic monitoring state, so the
+        cross-lock races are the tolerable kind (same precedent as the
+        autotune envelope writes)."""
+        if not self._breaker:
+            return False
+        h = self._bucket_health.setdefault(key, _BucketHealth())
+        h.trips += 1
+        h.last_trip_t = now
+        h.last_reason = reason
+        h.probing = False              # a trip ends any open probe
+        base = self._tuned.get(key, self.dataflow)
+        if self._impl_rung(base) + h.level >= _JNP_RUNG:
+            return False               # already serving the jnp floor
+        h.level += 1
+        self.stats.breaker_trips += 1
+        return True
+
+    def _maybe_probe_locked(self, key: BucketKey, now: float) -> bool:
+        """Half-open the breaker after a quiet cooldown: promote one rung
+        and mark the bucket probing (under ``self._cv``). Returns True
+        when it promoted (caller drops the compiled programs so the next
+        dispatch recompiles at the promoted rung)."""
+        h = self._bucket_health.get(key)
+        if (not self._breaker or h is None or h.level == 0 or h.probing
+                or h.probes >= self._breaker_max_probes
+                or now - h.last_trip_t < self._breaker_cooldown_s):
+            return False
+        h.level -= 1
+        h.probes += 1
+        h.probing = True
+        h.last_trip_t = now            # re-arm the cooldown window
+        self.stats.breaker_probes += 1
+        return True
+
+    def _invalidate_programs(self, key: BucketKey) -> None:
+        """Drop every executor's compiled program for ``key`` so the next
+        dispatch recompiles at the bucket's current breaker rung. Unlike
+        ``_trigger_retune`` the tuned winner survives — the breaker moves
+        along the ladder FROM it, and a healed bucket returns TO it."""
+        with self._compile_lock:
+            for ex in self._executors:
+                ex.compiled.pop(key, None)
+                ex.touched.pop(key, None)
+
+    # ------------------------------------------------------------------
     # per-executor program cache + shared per-bucket autotuning
     # ------------------------------------------------------------------
 
@@ -1381,11 +1853,27 @@ class GraphStreamEngine:
                 df = self._run_autotune(ex, key, g)
             if df is None:
                 df = self.dataflow
-            run = self._make_run(df)
-            if key not in self.edge_passes:
-                with count_edge_passes() as ps:
-                    jax.eval_shape(run, ex.params, g)
-                self.edge_passes[key] = ps.passes
+            # circuit breaker (§9): serve at the bucket's demoted rung,
+            # and walk further down the ladder if the rung itself fails
+            # to trace — the jnp floor always traces, so a bucket is
+            # never left unservable by a broken lowering.
+            while True:
+                eff = self._effective_df(key, df)
+                run = self._make_run(eff)
+                try:
+                    with count_edge_passes() as ps:
+                        jax.eval_shape(run, ex.params, g)
+                except Exception as exc:
+                    if (not self._breaker
+                            or self._impl_rung(eff) >= _JNP_RUNG):
+                        raise
+                    self._record_trip_locked(
+                        key, f"trace_failure: {type(exc).__name__}",
+                        time.perf_counter())
+                    continue
+                break
+            self.edge_passes.setdefault(key, ps.passes)
+            self._served_impl[key] = eff.impl
             ex.compiled[key] = run
             ex.touched[key] = next(self._touch)
             self._evict_cold_locked(ex, keep=key)

@@ -43,6 +43,37 @@ class EngineClosed(EngineError):
     """The engine was closed; no further submissions are accepted."""
 
 
+class InvalidRequest(EngineError, ValueError):
+    """A submission's arguments were rejected at admission (missing edge
+    features, non-positive deadline, ...). Also a ``ValueError`` so
+    pre-hierarchy callers that caught that keep working."""
+
+
+class InvalidGraph(InvalidRequest):
+    """The submitted graph itself failed admission validation
+    (``core/validate.py``): out-of-range edge indices, non-integer index
+    dtypes, feature-width mismatch vs the model config, degenerate
+    shapes, or (opt-in) non-finite features. Raised at ``submit`` —
+    BEFORE the graph can poison a packed batch — carrying the request id
+    like its siblings."""
+
+
+class UnknownQueue(EngineError, KeyError):
+    """The named tenant queue does not exist (no silent remapping; a
+    typo fails loudly). Also a ``KeyError`` for pre-hierarchy callers."""
+
+    def __str__(self) -> str:          # KeyError.__str__ would repr-quote
+        return BaseException.__str__(self)
+
+
+class ParamUpdateFailed(EngineError):
+    """A hot parameter update was rejected: the new tree's structure or
+    leaf shapes/dtypes do not match the serving params, or the canary
+    batch produced non-finite / reference-diverging outputs. The
+    previous version stays installed (atomic rollback); no in-flight
+    request is affected."""
+
+
 class BatchFailed(EngineError):
     """A batch's execution failed after the retry budget was exhausted
     without the failure being attributable to a single graph."""

@@ -68,11 +68,18 @@ class _InFlight:
     out: Any
     t_build_start: float
     t_dispatch: float
+    params_version: int = 0
 
 
 @dataclass
 class CompletedBatch:
-    """Everything the engine needs to resolve one batch."""
+    """Everything the engine needs to resolve one batch.
+
+    ``params_version`` is the executor's params version *at dispatch
+    time* — a hot ``update_params`` promoting mid-flight never changes
+    which weights an already-dispatched batch ran on, and the engine's
+    shadow auditor replays the batch against the matching host copy.
+    """
 
     queue: str
     batch: PackedBatch
@@ -82,6 +89,7 @@ class CompletedBatch:
     t_dispatch: float
     t_ready: float
     device_s: float                            # marginal device-busy time
+    params_version: int = 0
 
 
 class DeviceExecutor:
@@ -99,7 +107,10 @@ class DeviceExecutor:
                                                 PackedBatch], None]] = None):
         self.device = device
         self.index = index
-        self.params = params                   # committed to ``device``
+        # (replica committed to ``device``, version) swapped as ONE
+        # reference by hot reload, so a dispatch snapshot can never pair
+        # old weights with a new version number
+        self._params_v: Tuple[Any, int] = (params, 0)
         self.label = f"{device.platform}:{device.id}"
         # per-device program namespace: {bucket: jitted program}. The
         # engine's ``_compiled`` facade merges these for the observable
@@ -209,6 +220,26 @@ class DeviceExecutor:
                                executor_index=self.index)
         self._dead = True
         self._drain_queues(exc)
+
+    # -- versioned params (hot reload, DESIGN.md §9) ---------------------
+
+    @property
+    def params(self) -> Any:
+        return self._params_v[0]
+
+    @property
+    def params_version(self) -> int:
+        return self._params_v[1]
+
+    def set_params(self, params, version: int) -> None:
+        """Install a new committed replica at ``version``.
+
+        A single reference store (GIL-atomic): every dispatch AFTER this
+        runs the new weights; a batch already past its snapshot finishes
+        on the old replica, whose buffers stay alive exactly as long as
+        some in-flight batch still references them.
+        """
+        self._params_v = (params, int(version))
 
     # -- placement interface ---------------------------------------------
 
@@ -328,7 +359,10 @@ class DeviceExecutor:
                         self._fault_hook("dispatch", self, pb)
                     g = self._build_fn(pb)
                     run = self._program_fn(self, pb.bucket, g)
-                    out = run(self.params, g)   # asynchronous dispatch
+                    # one snapshot pins this batch to its dispatch-time
+                    # params version (hot reload swaps the pair atomically)
+                    params, pver = self._params_v
+                    out = run(params, g)        # asynchronous dispatch
                 except Exception as exc:        # bad batch: report, stay up
                     t = time.perf_counter()
                     self._finish(CompletedBatch(
@@ -342,7 +376,8 @@ class DeviceExecutor:
                 # dead-check breaks the wait so a crashed completer cannot
                 # wedge this thread on a full pipe.
                 inflight = _InFlight(queue_name, pb, out, t_build,
-                                     time.perf_counter())
+                                     time.perf_counter(),
+                                     params_version=pver)
                 while True:
                     if self._dead:
                         self._fail_batch(queue_name, pb, self._dead_exc())
@@ -386,7 +421,7 @@ class DeviceExecutor:
                     queue=item.queue, batch=item.batch, results=results,
                     err=err, t_build_start=item.t_build_start,
                     t_dispatch=item.t_dispatch, t_ready=t_ready,
-                    device_s=device_s))
+                    device_s=device_s, params_version=item.params_version))
         except BaseException as exc:
             self._loop_fatal(exc, current)
             raise

@@ -36,7 +36,8 @@ from typing import Dict, List, Optional, Set
 import numpy as np
 
 #: fault kinds understood by the rate-based coins
-FAULT_KINDS = ("crash", "dispatch_error", "stall", "nan", "oom")
+FAULT_KINDS = ("crash", "dispatch_error", "stall", "nan", "oom",
+               "bad_input")
 
 
 class InjectedFault(RuntimeError):
@@ -73,17 +74,22 @@ class FaultInjector:
     nan_rate : P(a graph's output rows are overwritten with NaN) — must
         be caught by the engine's output-validation gate, never returned.
     oom_rate : P(submit-time OOM-like failure) per submission.
+    bad_input_rate : P(a submission's raw arrays are corrupted pre-admission
+        — an out-of-range edge index or a NaN feature) — must be rejected
+        by the engine's admission validation (``InvalidGraph``), never
+        packed.
     stall_s : injected stall duration in seconds.
     """
 
     def __init__(self, seed: int = 0, *, crash_rate: float = 0.0,
                  dispatch_error_rate: float = 0.0, stall_rate: float = 0.0,
                  nan_rate: float = 0.0, oom_rate: float = 0.0,
-                 stall_s: float = 0.2):
+                 bad_input_rate: float = 0.0, stall_s: float = 0.2):
         self.seed = int(seed)
         self.rates: Dict[str, float] = {
             "crash": crash_rate, "dispatch_error": dispatch_error_rate,
             "stall": stall_rate, "nan": nan_rate, "oom": oom_rate,
+            "bad_input": bad_input_rate,
         }
         self.stall_s = stall_s
         # scripted victims (exact targeting for acceptance tests)
@@ -91,11 +97,14 @@ class FaultInjector:
         self._nan: Set[int] = set()
         self._stalled: Set[int] = set()
         self._oom: Set[int] = set()
+        self._bad_input: Set[int] = set()
         self._kills: Dict[int, int] = {}       # executor index -> nth dispatch
+        self._broken_impls: Dict[str, float] = {}   # impl -> finite epsilon
         self._lock = threading.Lock()
         self._dispatch_counts: Dict[int, int] = {}
         #: injected-fault counts by kind (observability for chaos benches)
         self.injected: Dict[str, int] = {k: 0 for k in FAULT_KINDS}
+        self.injected["bad_impl"] = 0
 
     # -- scripting ---------------------------------------------------------
 
@@ -119,6 +128,11 @@ class FaultInjector:
         self._oom.add(int(req_id))
         return self
 
+    def bad_input_request(self, req_id: int) -> "FaultInjector":
+        """This submission's raw arrays are corrupted pre-admission."""
+        self._bad_input.add(int(req_id))
+        return self
+
     def kill_executor(self, index: int,
                       after_batches: int = 0) -> "FaultInjector":
         """Kill executor ``index``'s dispatch loop on its
@@ -126,6 +140,24 @@ class FaultInjector:
         One-shot: a respawned executor at the same index is not
         re-killed unless scripted again."""
         self._kills[int(index)] = int(after_batches)
+        return self
+
+    def break_impl(self, impl: str, eps: float = 0.05) -> "FaultInjector":
+        """Emulate a numerically-broken kernel variant: every batch
+        *served by* dataflow ``impl`` has a finite ``eps`` added to all
+        its output values. Finite on purpose — it sails through the
+        engine's NaN gate the way a real miscompiled kernel would, and
+        only the shadow auditor's reference comparison can catch it.
+        Once the circuit breaker demotes the bucket off ``impl`` the
+        corruption stops (the "broken kernel" is no longer executing),
+        so demotion is observably curative. Re-breaking on a re-probe is
+        automatic: the promoted rung serves ``impl`` again."""
+        self._broken_impls[str(impl)] = float(eps)
+        return self
+
+    def fix_impl(self, impl: str) -> "FaultInjector":
+        """Heal a previously broken impl (the re-probe-succeeds case)."""
+        self._broken_impls.pop(str(impl), None)
         return self
 
     # -- deterministic coins ----------------------------------------------
@@ -144,6 +176,9 @@ class FaultInjector:
 
     def is_nan(self, req_id: int) -> bool:
         return req_id in self._nan or self._coin("nan", req_id)
+
+    def is_bad_input(self, req_id: int) -> bool:
+        return req_id in self._bad_input or self._coin("bad_input", req_id)
 
     def _count(self, kind: str) -> None:
         with self._lock:
@@ -168,6 +203,24 @@ class FaultInjector:
         if req_id in self._oom or self._coin("oom", req_id):
             self._count("oom")
             raise InjectedOOM(f"injected submit-time OOM (request {req_id})")
+
+    def corrupt_input(self, req_id: int, node_feat, senders, receivers,
+                      edge_feat):
+        """Engine admission path, BEFORE validation: corrupt a victim's
+        raw arrays the way a buggy client would — an out-of-range edge
+        index (even ids) or a NaN node feature (odd ids). Admission
+        validation must reject the result with ``InvalidGraph``; the
+        originals are never mutated (copies only)."""
+        if not self.is_bad_input(req_id):
+            return node_feat, senders, receivers, edge_feat
+        self._count("bad_input")
+        if senders.shape[0] and req_id % 2 == 0:
+            senders = np.array(senders, copy=True)
+            senders[0] = node_feat.shape[0] + 7       # out of [0, n_nodes)
+        else:
+            node_feat = np.array(node_feat, dtype=np.float32, copy=True)
+            node_feat[0, 0] = np.nan
+        return node_feat, senders, receivers, edge_feat
 
     def executor_hook(self, site: str, ex, pb) -> None:
         """Called by ``DeviceExecutor`` at its fault sites.
@@ -204,11 +257,18 @@ class FaultInjector:
                 self._count("stall")
                 time.sleep(self.stall_s)
 
-    def corrupt_outputs(self, pb, results: List[np.ndarray]
-                        ) -> List[np.ndarray]:
+    def corrupt_outputs(self, pb, results: List[np.ndarray],
+                        impl: Optional[str] = None) -> List[np.ndarray]:
         """Engine unpack path: overwrite victims' output rows with NaN
-        (the output-validation gate must quarantine them)."""
+        (the output-validation gate must quarantine them), and — when the
+        batch was served by a ``break_impl``-scripted dataflow — add the
+        broken impl's finite epsilon to every output (only the shadow
+        auditor can catch that one)."""
         out = list(results)
+        eps = self._broken_impls.get(impl) if impl is not None else None
+        if eps is not None:
+            self._count("bad_impl")
+            out = [np.asarray(r) + np.float32(eps) for r in out]
         for i, it in enumerate(pb.items):
             rid = getattr(it.payload, "req_id", None)
             if rid is not None and self.is_nan(int(rid)):

@@ -35,6 +35,7 @@ import time
 from dataclasses import dataclass
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
+from repro.core.errors import UnknownQueue
 from repro.core.packing import (DEFAULT_BUCKETS, GraphPacker, PackedBatch,
                                 PackItem)
 
@@ -202,7 +203,7 @@ class BatchScheduler:
         ready immediately."""
         q = self._queues.get(queue)
         if q is None:
-            raise KeyError(
+            raise UnknownQueue(
                 f"unknown queue '{queue}'; have {sorted(self._queues)}")
         now = time.perf_counter() if now is None else now
         if q.cfg.priority and self._preempt_chunk is not None:

@@ -204,6 +204,30 @@ def replicate_params(params, devices) -> list:
     return copies
 
 
+def params_compatible(old, new) -> Optional[str]:
+    """Why ``new`` cannot replace ``old`` as a hot-reloaded params tree,
+    or ``None`` when it can (same tree structure, leaf shapes, dtypes).
+
+    The serving engine's ``update_params`` stages per-executor replicas
+    of ``new`` via :func:`replicate_params`; every compiled per-bucket
+    program was traced against ``old``'s avals, so a structure or shape
+    mismatch would invalidate every executable mid-stream. Hot reload is
+    therefore *same-architecture only* — anything else is a new engine.
+    """
+    s_old = jax.tree_util.tree_structure(old)
+    s_new = jax.tree_util.tree_structure(new)
+    if s_old != s_new:
+        return (f"params tree structure changed: {s_new} != serving "
+                f"{s_old}")
+    for i, (a, b) in enumerate(zip(jax.tree.leaves(old),
+                                   jax.tree.leaves(new))):
+        a, b = jnp.asarray(a), jnp.asarray(b)
+        if a.shape != b.shape or a.dtype != b.dtype:
+            return (f"params leaf {i} changed: {b.shape}/{b.dtype} != "
+                    f"serving {a.shape}/{a.dtype}")
+    return None
+
+
 def param_count(defs) -> int:
     leaves = jax.tree.leaves(defs, is_leaf=lambda x: isinstance(x, ParamDef))
     return int(sum(np.prod(d.shape) for d in leaves))

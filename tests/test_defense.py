@@ -1,0 +1,487 @@
+"""Defense-in-depth suite: admission validation, the impl circuit
+breaker with shadow audits, and zero-downtime hot parameter reload
+(DESIGN.md §9).
+
+Layer 1 — admission: malformed graphs (out-of-range edge indices, float
+index dtypes, feature-width mismatches, degenerate shapes, opt-in
+non-finite features) fail at ``submit`` with ``InvalidGraph`` carrying
+the request id, BEFORE they can poison a packed batch; chaos-corrupted
+submissions (``bad_input``) are rejected the same way while co-packed
+survivors stay bitwise identical to a fault-free run.
+
+Layer 2 — the breaker: a numerically-broken impl (finite corruption that
+sails through the NaN gate) is caught by the shadow auditor's jnp-mirror
+comparison; the bucket demotes one ladder rung, keeps serving bitwise-
+correct results, and re-probes its tuned impl after a quiet cooldown.
+
+Layer 3 — hot reload: ``update_params`` swaps versioned replicas under
+live traffic with zero dropped requests; a failing canary rolls back
+atomically and the old version keeps serving untouched.
+"""
+
+import time
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core.engine import GraphStreamEngine
+from repro.core.errors import (EngineError, InvalidGraph, InvalidRequest,
+                               ParamUpdateFailed, UnknownQueue)
+from repro.core.faults import FaultInjector
+from repro.core.models import PAPER_GNN_CONFIGS, make_gnn
+from repro.core.validate import check_graph, validate_graph
+
+pytestmark = pytest.mark.filterwarnings(
+    "ignore::pytest.PytestUnhandledThreadExceptionWarning")
+
+MULTI_DEVICE = len(jax.devices()) >= 2
+needs_multi = pytest.mark.skipif(
+    not MULTI_DEVICE, reason="needs >=2 devices "
+    "(XLA_FLAGS=--xla_force_host_platform_device_count=N)")
+
+
+def _cfg():
+    cfg = PAPER_GNN_CONFIGS["gin"]
+    return cfg.replace(num_layers=2, hidden_dim=16,
+                       head_mlp=(8,) if cfg.head_mlp else ())
+
+
+def _params(cfg):
+    return make_gnn(cfg).init(jax.random.PRNGKey(0), cfg)
+
+
+def _graphs(n, seed=3):
+    from repro.data.graphs import molhiv_like
+    return list(molhiv_like(seed=seed, n_graphs=n))
+
+
+def _engine(cfg, params, **kw):
+    kw.setdefault("max_batch", 8)
+    kw.setdefault("max_wait_ms", 200.0)
+    kw.setdefault("eager_flush", False)     # deterministic co-packing
+    return GraphStreamEngine(cfg, params, **kw)
+
+
+def _submit_all(eng, graphs, **kw):
+    return [eng.submit(g.node_feat, g.senders, g.receivers, g.edge_feat,
+                       g.node_pos, **kw) for g in graphs]
+
+
+def _baseline(cfg, params, graphs, **kw):
+    with _engine(cfg, params, **kw) as eng:
+        futs = _submit_all(eng, graphs)
+        eng.drain(timeout=300)
+        return [f.result(timeout=5) for f in futs]
+
+
+def _assert_all_resolved(futs):
+    for i, f in enumerate(futs):
+        assert f.done(), f"future {i} left unresolved"
+
+
+def _breaker_entries(eng):
+    return {k: v["breaker"] for k, v in eng.autotune_report().items()
+            if "breaker" in v}
+
+
+# ---------------------------------------------------------------------------
+# layer 1: admission validation
+# ---------------------------------------------------------------------------
+
+def test_invalid_graph_variants_rejected_typed():
+    cfg = _cfg()
+    params = _params(cfg)
+    g = _graphs(1)[0]
+    with _engine(cfg, params) as eng:
+        oor = np.array(g.senders, copy=True)
+        oor[0] = g.node_feat.shape[0] + 3
+        bad = [
+            # out-of-range edge index (the cross-graph-read one)
+            dict(node_feat=g.node_feat, senders=oor, receivers=g.receivers,
+                 edge_feat=g.edge_feat),
+            # float edge indices silently truncate inside the scatter
+            dict(node_feat=g.node_feat,
+                 senders=g.senders.astype(np.float32),
+                 receivers=g.receivers, edge_feat=g.edge_feat),
+            # node-feature width mismatch vs the model config
+            dict(node_feat=g.node_feat[:, :-1], senders=g.senders,
+                 receivers=g.receivers, edge_feat=g.edge_feat),
+            # edge_feat rows disagree with the edge count
+            dict(node_feat=g.node_feat, senders=g.senders,
+                 receivers=g.receivers, edge_feat=g.edge_feat[:-1]),
+            # senders/receivers disagree on the edge count
+            dict(node_feat=g.node_feat, senders=g.senders[:-1],
+                 receivers=g.receivers, edge_feat=g.edge_feat),
+            # degenerate: zero nodes
+            dict(node_feat=g.node_feat[:0], senders=g.senders,
+                 receivers=g.receivers, edge_feat=g.edge_feat),
+        ]
+        for kw in bad:
+            with pytest.raises(InvalidGraph) as ei:
+                eng.submit(**kw)
+            assert ei.value.request_ids, "InvalidGraph must carry the req id"
+            assert isinstance(ei.value, EngineError)
+            assert isinstance(ei.value, ValueError)   # legacy compat
+        # the engine is unharmed: healthy traffic still serves
+        out = eng.process(g.node_feat, g.senders, g.receivers, g.edge_feat,
+                          g.node_pos)
+        assert np.all(np.isfinite(out))
+        assert eng.stats.invalid_rejects == len(bad)
+        assert eng.stats.summary()["invalid_graphs"] == len(bad)
+
+
+def test_typed_admission_errors_keep_legacy_compat():
+    cfg = _cfg()
+    with _engine(cfg, _params(cfg)) as eng:
+        g = _graphs(1)[0]
+        # missing edge features: InvalidRequest AND ValueError
+        with pytest.raises(InvalidRequest):
+            eng.submit(g.node_feat, g.senders, g.receivers)
+        with pytest.raises(ValueError):
+            eng.submit(g.node_feat, g.senders, g.receivers)
+        # non-positive deadline: same pair
+        with pytest.raises(InvalidRequest):
+            eng.submit(g.node_feat, g.senders, g.receivers, g.edge_feat,
+                       deadline=0.0)
+        # unknown queue: UnknownQueue AND KeyError AND EngineError
+        with pytest.raises(UnknownQueue):
+            eng.submit(g.node_feat, g.senders, g.receivers, g.edge_feat,
+                       queue="nope")
+        with pytest.raises(KeyError):
+            eng.submit(g.node_feat, g.senders, g.receivers, g.edge_feat,
+                       queue="nope")
+        try:
+            eng.submit(g.node_feat, g.senders, g.receivers, g.edge_feat,
+                       queue="nope")
+        except UnknownQueue as exc:
+            assert "unknown queue" in str(exc)     # no KeyError repr-quoting
+
+
+def test_require_finite_knob():
+    cfg = _cfg()
+    params = _params(cfg)
+    g = _graphs(1)[0]
+    nan_feat = np.array(g.node_feat, copy=True)
+    nan_feat[0, 0] = np.nan
+    with _engine(cfg, params, require_finite=True) as eng:
+        with pytest.raises(InvalidGraph):
+            eng.submit(nan_feat, g.senders, g.receivers, g.edge_feat)
+    # default (off): non-finite features are the model's business; the
+    # output gate still quarantines what they produce
+    with _engine(cfg, params) as eng:
+        fut = eng.submit(nan_feat, g.senders, g.receivers, g.edge_feat)
+        eng.drain(timeout=300)
+        assert fut.done()
+
+
+def test_check_graph_direct():
+    assert check_graph(np.zeros((3, 2), np.float32),
+                       np.array([0, 1]), np.array([1, 2])) is None
+    # zero edges is legal (isolated node is a real molecule)
+    assert check_graph(np.zeros((1, 2), np.float32),
+                       np.zeros(0, np.int32), np.zeros(0, np.int32)) is None
+    assert check_graph(np.zeros((2, 2), np.float32),
+                       np.array([0, 5]), np.array([1, 0])) is not None
+    with pytest.raises(InvalidGraph):
+        validate_graph(np.zeros((2, 2), np.float32),
+                       np.array([-1]), np.array([0]))
+
+
+def test_bad_input_chaos_survivors_bitwise():
+    """Scripted bad_input corruption is rejected at admission; co-packed
+    survivors match the fault-free run bitwise (acceptance scenario)."""
+    cfg = _cfg()
+    params = _params(cfg)
+    graphs = _graphs(16)
+    victims = {2, 5}        # 2 even -> OOR edge index, 5 odd -> NaN feature
+    clean = [g for i, g in enumerate(graphs) if i not in victims]
+    base = _baseline(cfg, params, clean, require_finite=True)
+
+    inj = FaultInjector(seed=7)
+    for v in victims:
+        inj.bad_input_request(v)
+    rejected, futs, kept = [], [], []
+    with _engine(cfg, params, require_finite=True,
+                 fault_injector=inj) as eng:
+        for i, g in enumerate(graphs):
+            try:
+                futs.append(eng.submit(g.node_feat, g.senders, g.receivers,
+                                       g.edge_feat, g.node_pos))
+                kept.append(i)
+            except InvalidGraph as exc:
+                rejected.append((i, exc))
+        eng.drain(timeout=300)
+        _assert_all_resolved(futs)
+        assert {i for i, _ in rejected} == victims
+        for _, exc in rejected:
+            assert exc.request_ids
+        assert inj.summary()["bad_input"] == len(victims)
+        assert eng.stats.invalid_rejects == len(victims)
+        results = [f.result(timeout=5) for f in futs]
+    assert kept == [i for i in range(len(graphs)) if i not in victims]
+    for got, want in zip(results, base):
+        np.testing.assert_array_equal(got, want)
+
+
+# ---------------------------------------------------------------------------
+# layer 2: circuit breaker + shadow audits
+# ---------------------------------------------------------------------------
+
+def _one_bucket_stream(n=8):
+    """n copies of one graph: a deterministic single-bucket batch."""
+    g = _graphs(1)[0]
+    return [g] * n
+
+
+def test_audit_mismatch_demotes_exactly_one_bucket():
+    cfg = _cfg()
+    params = _params(cfg)
+    stream_a = _one_bucket_stream(8)            # the bucket under attack
+    stream_b = _graphs(8, seed=11)              # bystander traffic
+    base_a = _baseline(cfg, params, stream_a)
+    base_b = _baseline(cfg, params, stream_b)
+
+    inj = FaultInjector(seed=0)
+    with _engine(cfg, params, audit_sample_rate=1.0,
+                 breaker_cooldown_s=3600.0,     # no re-probe in this test
+                 fault_injector=inj) as eng:
+        # bystander bucket first, clean: audits pass, no health entry
+        futs_b = _submit_all(eng, stream_b)
+        eng.drain(timeout=300)
+        assert eng.flush_audits(timeout=120)
+        assert not _breaker_entries(eng)
+        # break the default impl, hit bucket A: finite corruption sails
+        # through the NaN gate; only the audit can catch it
+        inj.break_impl("fused", eps=0.05)
+        futs_a = _submit_all(eng, stream_a)
+        eng.drain(timeout=300)
+        assert eng.flush_audits(timeout=120)
+        inj.fix_impl("fused")
+        entries = _breaker_entries(eng)
+        assert len(entries) == 1, f"expected 1 demoted bucket: {entries}"
+        (health,) = entries.values()
+        assert health["level"] == 1
+        assert health["last_reason"] == "audit_mismatch"
+        s = eng.stats.summary()
+        assert s["audit_mismatches"] >= 1
+        assert s["breaker_trips"] == 1
+        assert s["audits"] >= 2
+        # the demoted bucket is STILL SERVABLE, bitwise vs fault-free
+        # (gin's ladder rungs are bitwise-identical on this backend)
+        futs_a2 = _submit_all(eng, stream_a)
+        eng.drain(timeout=300)
+        assert eng.flush_audits(timeout=120)
+        for f, want in zip(futs_a2, base_a):
+            np.testing.assert_array_equal(f.result(timeout=5), want)
+        # the bystander bucket never left its tuned impl
+        futs_b2 = _submit_all(eng, stream_b)
+        eng.drain(timeout=300)
+        for f, want in zip(futs_b2, base_b):
+            np.testing.assert_array_equal(f.result(timeout=5), want)
+        assert eng.stats.summary()["breaker_trips"] == 1
+        _assert_all_resolved(futs_a + futs_b + futs_a2 + futs_b2)
+
+
+def test_breaker_reprobes_after_cooldown():
+    cfg = _cfg()
+    params = _params(cfg)
+    stream = _one_bucket_stream(8)
+    base = _baseline(cfg, params, stream)
+
+    inj = FaultInjector(seed=0).break_impl("fused", eps=0.05)
+    with _engine(cfg, params, audit_sample_rate=1.0,
+                 breaker_cooldown_s=0.2, fault_injector=inj) as eng:
+        futs = _submit_all(eng, stream)
+        eng.drain(timeout=300)
+        assert eng.flush_audits(timeout=120)
+        assert eng.stats.breaker_trips == 1
+        inj.fix_impl("fused")                   # the impl is healed
+        time.sleep(0.3)                         # let the cooldown pass
+        # two waves: the first completion half-opens the breaker (probe),
+        # the next batches serve at the promoted rung and audit clean
+        for _ in range(3):
+            futs += _submit_all(eng, stream)
+            eng.drain(timeout=300)
+            assert eng.flush_audits(timeout=120)
+        s = eng.stats.summary()
+        assert s["breaker_probes"] >= 1
+        entries = _breaker_entries(eng)
+        (health,) = entries.values()
+        assert health["level"] == 0, f"probe should have promoted: {health}"
+        assert not health["probing"]
+        # healed bucket serves its tuned impl again, bitwise
+        futs2 = _submit_all(eng, stream)
+        eng.drain(timeout=300)
+        for f, want in zip(futs2, base):
+            np.testing.assert_array_equal(f.result(timeout=5), want)
+        _assert_all_resolved(futs + futs2)
+
+
+def test_nan_gate_trips_breaker():
+    cfg = _cfg()
+    params = _params(cfg)
+    graphs = _graphs(8)
+    inj = FaultInjector(seed=0).nan_request(2)
+    with _engine(cfg, params, fault_injector=inj) as eng:
+        futs = _submit_all(eng, graphs)
+        eng.drain(timeout=300)
+        _assert_all_resolved(futs)
+        assert futs[2].exception() is not None     # quarantined
+        ok = [f for i, f in enumerate(futs) if i != 2]
+        assert all(f.exception() is None for f in ok)
+        s = eng.stats.summary()
+        assert s["quarantined_graphs"] == 1
+        assert s["breaker_trips"] == 1             # NaN gate demoted a rung
+        entries = _breaker_entries(eng)
+        assert any(v["last_reason"] == "nan_gate" for v in entries.values())
+
+
+def test_breaker_disabled_knob():
+    cfg = _cfg()
+    params = _params(cfg)
+    graphs = _graphs(8)
+    inj = FaultInjector(seed=0).nan_request(2)
+    with _engine(cfg, params, breaker=False, fault_injector=inj) as eng:
+        futs = _submit_all(eng, graphs)
+        eng.drain(timeout=300)
+        _assert_all_resolved(futs)
+        assert eng.stats.breaker_trips == 0
+        assert not _breaker_entries(eng)
+
+
+# ---------------------------------------------------------------------------
+# layer 3: hot parameter reload
+# ---------------------------------------------------------------------------
+
+def test_update_params_under_live_traffic():
+    cfg = _cfg()
+    params = _params(cfg)
+    params2 = jax.tree.map(lambda x: x * 1.01, params)
+    graphs = _graphs(24)
+    g = graphs[0]
+    with _engine(cfg, params) as eng:
+        futs = _submit_all(eng, graphs)         # in flight on v0
+        version = eng.update_params(params2)    # swap mid-stream
+        assert version == 1
+        futs += _submit_all(eng, graphs)        # lands on v1
+        eng.drain(timeout=300)
+        _assert_all_resolved(futs)
+        # zero dropped requests: every future resolved with a result
+        assert all(f.exception() is None for f in futs)
+        assert eng.stats.param_updates == 1
+        post = eng.process(g.node_feat, g.senders, g.receivers, g.edge_feat,
+                           g.node_pos)
+    # post-promotion outputs are bitwise what a fresh engine built with
+    # the new params serves
+    with _engine(cfg, params2) as fresh:
+        want = fresh.process(g.node_feat, g.senders, g.receivers,
+                             g.edge_feat, g.node_pos)
+    np.testing.assert_array_equal(post, want)
+
+
+def test_update_params_canary_rollback():
+    cfg = _cfg()
+    params = _params(cfg)
+    g = _graphs(1)[0]
+    with _engine(cfg, params) as eng:
+        before = eng.process(g.node_feat, g.senders, g.receivers,
+                             g.edge_feat, g.node_pos)
+        bad = jax.tree.map(lambda x: np.full_like(x, np.nan), params)
+        with pytest.raises(ParamUpdateFailed):
+            eng.update_params(bad)
+        assert eng.stats.param_rollbacks == 1
+        assert eng.stats.param_updates == 0
+        # atomic rollback: the old version is still what serves, bitwise
+        after = eng.process(g.node_feat, g.senders, g.receivers,
+                            g.edge_feat, g.node_pos)
+        np.testing.assert_array_equal(before, after)
+
+
+def test_update_params_rejects_incompatible_tree():
+    cfg = _cfg()
+    params = _params(cfg)
+    with _engine(cfg, params) as eng:
+        # leaf shapes changed (every leaf grows a leading axis)
+        reshaped = jax.tree.map(
+            lambda x: np.repeat(np.asarray(x)[None], 2, axis=0), params)
+        with pytest.raises(ParamUpdateFailed):
+            eng.update_params(reshaped)
+        # tree structure changed
+        with pytest.raises(ParamUpdateFailed):
+            eng.update_params({"wrapped": params})
+        assert eng.stats.param_rollbacks == 2
+        g = _graphs(1)[0]
+        out = eng.process(g.node_feat, g.senders, g.receivers, g.edge_feat,
+                          g.node_pos)
+        assert np.all(np.isfinite(out))
+
+
+# ---------------------------------------------------------------------------
+# acceptance: end-to-end defense demo (1 device + the 4-device CI lane)
+# ---------------------------------------------------------------------------
+
+def _e2e_defense(cfg, params, **engine_kw):
+    """All three layers in one serving session: malformed admissions,
+    a broken impl demoted within one audit window, a zero-downtime param
+    swap (to a value-identical copy, keeping the whole run comparable
+    bitwise to an unperturbed single-params run) — with every healthy
+    result bitwise vs the unperturbed baseline and no future dropped."""
+    graphs = _graphs(24)
+    victims = {3, 10}
+    clean = [g for i, g in enumerate(graphs) if i not in victims]
+    base = _baseline(cfg, params, clean, **engine_kw)
+
+    inj = FaultInjector(seed=5)
+    for v in victims:
+        inj.bad_input_request(v)
+    inj.break_impl("fused", eps=0.05)
+    results, rejected, futs = [], [], []
+    with _engine(cfg, params, require_finite=True, audit_sample_rate=1.0,
+                 breaker_cooldown_s=3600.0, fault_injector=inj,
+                 **engine_kw) as eng:
+        for i, g in enumerate(graphs):
+            try:
+                futs.append(eng.submit(g.node_feat, g.senders, g.receivers,
+                                       g.edge_feat, g.node_pos))
+            except InvalidGraph as exc:
+                assert exc.request_ids
+                rejected.append(i)
+        eng.drain(timeout=300)
+        assert eng.flush_audits(timeout=120)    # "within one audit window"
+        s = eng.stats.summary()
+        assert sorted(rejected) == sorted(victims)
+        assert s["invalid_graphs"] == len(victims)
+        assert s["audit_mismatches"] >= 1
+        assert s["breaker_trips"] >= 1
+        inj.fix_impl("fused")
+        # hot swap to a value-identical copy: exercises the full canary +
+        # versioned-promotion machinery without moving any output bits
+        copy = jax.tree.map(lambda x: np.array(x), params)
+        assert eng.update_params(copy) == 1
+        futs2 = []
+        for i, g in enumerate(graphs):
+            if i in victims:
+                continue
+            futs2.append(eng.submit(g.node_feat, g.senders, g.receivers,
+                                    g.edge_feat, g.node_pos))
+        eng.drain(timeout=300)
+        _assert_all_resolved(futs + futs2)
+        # exactly once, zero dropped: every admitted future has a result
+        assert all(f.exception() is None for f in futs + futs2)
+        assert eng.stats.param_updates == 1
+        results = [f.result(timeout=5) for f in futs2]
+    # post-demotion, post-swap traffic is bitwise the unperturbed run
+    for got, want in zip(results, base):
+        np.testing.assert_array_equal(got, want)
+
+
+def test_defense_e2e_single_device():
+    cfg = _cfg()
+    _e2e_defense(cfg, _params(cfg))
+
+
+@needs_multi
+def test_defense_e2e_multi_device():
+    cfg = _cfg()
+    _e2e_defense(cfg, _params(cfg))

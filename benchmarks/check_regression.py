@@ -26,9 +26,15 @@ floor sits under the lowest observed idle-host ratio; it still trips on
 the regressions it exists for (packing broken -> mean batch ~1 ->
 ratio ~1x, or pad blowup making batch-64 the slower path). The same flag gates the overload-robustness rows
 (``--max-slo-multiple`` / ``--min-preempt-gain`` /
-``--min-chaos-goodput`` / ``--min-degraded-goodput`` and the drift
+``--min-chaos-goodput`` / ``--min-degraded-goodput`` /
+``--min-wide-speedup`` and the drift
 retune+eviction and degraded-ladder audit/breaker invariants; see
-``check_stream``), all likewise self-relative.
+``check_stream``), all likewise self-relative. The wide gate reads the
+``wide`` section (K-gang wide placement vs K=1 serving of the same
+oversized-capable stream, DESIGN.md §10): a missing or skipped section
+is a coverage failure, the largest-K pool throughput must hold the
+(deliberately low — forced host devices share one CPU) floor, and
+every K's results must be bitwise-identical to single-device serving.
 
 ``--calibrate NAME`` divides every ratio by that row's own fresh/baseline
 ratio first, so a uniformly slower machine (CI runners vs the machine
@@ -66,7 +72,8 @@ def check_stream(path: str, min_speedup: float,
                  max_slo_multiple: float = 8.0,
                  min_preempt_gain: float = 2.0,
                  min_chaos_goodput: float = 0.85,
-                 min_degraded_goodput: float = 0.5) -> list:
+                 min_degraded_goodput: float = 0.5,
+                 min_wide_speedup: float = 0.2) -> list:
     """Validate BENCH_stream.json invariants; return failure strings.
 
     Beyond the batch-64 packing floor, three overload-robustness gates
@@ -203,6 +210,32 @@ def check_stream(path: str, min_speedup: float,
                 f"degraded gate: audits={audits} mismatches={mismatches} "
                 f"trips={trips} served={served}/{total} "
                 f"goodput={frac:.3f} (floor {min_degraded_goodput:.2f})")
+
+    wide = payload.get("wide")
+    if not wide or wide.get("skipped") or not wide.get("k"):
+        reason = (wide or {}).get("skipped") or "section missing"
+        print(f"FAIL {path}: no usable 'wide' section ({reason} — wide "
+              "bench needs a multi-device pool)")
+        failures.append(f"{path}: wide section missing/skipped ({reason})")
+    else:
+        kmax = max(wide["k"], key=int)
+        entry = wide["k"][kmax]
+        ratio = entry.get("speedup_vs_k1", 0.0)
+        bitwise = all(e.get("bitwise_vs_k1", False)
+                      for e in wide["k"].values())
+        ok = ratio >= min_wide_speedup
+        print(f"{'ok  ' if ok else 'FAIL'} wide placement: K={kmax} gang "
+              f"at {ratio:.2f}x K=1 pool throughput (floor "
+              f"{min_wide_speedup:.2f}x, halo "
+              f"{entry.get('halo_rows_per_layer', 0)} rows/layer)")
+        if not ok:
+            failures.append(f"wide K={kmax} throughput {ratio:.2f}x "
+                            f"< {min_wide_speedup:.2f}x of K=1")
+        print(f"{'ok  ' if bitwise else 'FAIL'} wide bitwise: K-gang "
+              f"results identical to single-device serving")
+        if not bitwise:
+            failures.append("wide results not bitwise-identical to K=1 "
+                            "serving")
     if baseline:
         with open(baseline) as f:
             base = json.load(f)
@@ -286,6 +319,10 @@ def main(argv=None) -> int:
     ap.add_argument("--min-degraded-goodput", type=float, default=0.5,
                     help="stream gate: minimum demoted-rung / clean-engine "
                          "throughput ratio after a breaker demotion")
+    ap.add_argument("--min-wide-speedup", type=float, default=0.2,
+                    help="stream gate: minimum largest-K wide-gang / K=1 "
+                         "pool throughput ratio (collapse tripwire, not a "
+                         "speedup claim — forced host devices share cores)")
     ap.add_argument("--stream-baseline", default=None, metavar="PATH",
                     help="smaller-pool BENCH_stream.json from the SAME "
                          "machine: gate --stream's batch-64 aggregate_gps "
@@ -316,7 +353,8 @@ def main(argv=None) -> int:
             max_slo_multiple=args.max_slo_multiple,
             min_preempt_gain=args.min_preempt_gain,
             min_chaos_goodput=args.min_chaos_goodput,
-            min_degraded_goodput=args.min_degraded_goodput)
+            min_degraded_goodput=args.min_degraded_goodput,
+            min_wide_speedup=args.min_wide_speedup)
     if args.edge_passes:
         stream_failures += check_edge_passes(args.edge_passes)
     if not args.baseline:

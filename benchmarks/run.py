@@ -42,6 +42,7 @@ def _run_stream(csv: Csv) -> None:
         csv, trace_out=str(OVERLOAD_TRACE_JSON))
     _STREAM_PAYLOAD["drift"] = stream_bench.drift_bench(csv)
     _STREAM_PAYLOAD["degraded"] = stream_bench.degraded_bench(csv)
+    _STREAM_PAYLOAD["wide"] = stream_bench.wide_bench(csv)
 
 
 TABLES = {

@@ -63,9 +63,9 @@ import jax
 import numpy as np
 
 from repro.core.errors import (BatchFailed, DeadlineExceeded, EngineClosed,
-                               EngineError, ExecutorDead, InvalidGraph,
-                               InvalidRequest, ParamUpdateFailed, PoisonGraph,
-                               UnknownQueue)
+                               EngineError, ExecutorDead, GraphTooLarge,
+                               InvalidGraph, InvalidRequest, ParamUpdateFailed,
+                               PoisonGraph, UnknownQueue)
 from repro.core.executor import CompletedBatch, DeviceExecutor
 from repro.core.faults import FaultInjector
 from repro.core.graph import GraphBatch, build_graph_batch, pad_bucket
@@ -74,9 +74,11 @@ from repro.core.message_passing import (DEFAULT_DATAFLOW, DataflowConfig,
 from repro.core.models import GNNConfig, make_gnn
 from repro.core.packing import PackedBatch, PackItem
 from repro.core.scheduler import BatchScheduler, QueueConfig
-from repro.core.validate import check_graph
+from repro.core.validate import check_budget, check_graph
 from repro.distributed.sharding import (device_kind, params_compatible,
                                         replicate_params)
+from repro.distributed.wide import (WidePlan, WidePlanError, build_wide_forward,
+                                    plan_wide, stack_shard_arrays, wide_mesh)
 
 BucketKey = Tuple[int, int, int]        # (node_pad, edge_pad, graph_pad)
 
@@ -317,6 +319,31 @@ class _Inflight:
 
 
 @dataclass
+class _WideRequest:
+    """One oversized graph awaiting (or holding) a K-executor gang.
+
+    Wide requests bypass the packer — an oversized graph is its own
+    "batch" by construction — but share the request registry, per-queue
+    admission caps, and stats with narrow traffic. ``plan`` is computed at
+    ``submit`` (one O(E) numpy pass; also where over-budget graphs are
+    rejected as ``GraphTooLarge``), so the placer only has to find a gang
+    window. ``attempts``/``requeues`` mirror the narrow batch retry
+    bookkeeping: a transient failure retries on a fresh gang with backoff;
+    a gang-member death re-places the whole gang without charging the
+    retry budget.
+    """
+
+    req: _Request
+    plan: WidePlan
+    node_feat: np.ndarray
+    edge_feat: Optional[np.ndarray]
+    node_pos: Optional[np.ndarray]
+    t_arrival: float
+    attempts: int = 0
+    requeues: int = 0
+
+
+@dataclass
 class _BucketLoad:
     """Per-bucket running traffic stats driving drift re-autotune (§5).
 
@@ -436,7 +463,9 @@ class GraphStreamEngine:
                  audit_seed: int = 0,
                  breaker: bool = True,
                  breaker_cooldown_s: float = 1.0,
-                 breaker_max_probes: int = 2):
+                 breaker_max_probes: int = 2,
+                 wide: bool = False,
+                 wide_k: Optional[int] = None):
         self.cfg = cfg
         self.params = params
         self.dataflow = dataflow
@@ -523,6 +552,24 @@ class GraphStreamEngine:
         # retries: one hop per surviving executor plus slack covers any
         # cascade of deaths without looping forever when the pool is gone
         self._max_requeues = 2 * len(self._devices) + 2
+
+        # wide placement (DESIGN.md §10): one oversized graph split across
+        # a gang of K executors. State under self._cv except the program
+        # cache (under _compile_lock like the narrow caches).
+        self._wide_enabled = bool(wide)
+        self._wide_k = (int(wide_k) if wide_k is not None
+                        else len(self._devices))
+        if self._wide_enabled:
+            if self._wide_k < 2:
+                raise ValueError("wide placement needs wide_k >= 2")
+            if self._wide_k > len(self._devices):
+                raise ValueError(
+                    f"wide_k={self._wide_k} exceeds the pool size "
+                    f"{len(self._devices)}")
+        self._wide_queue: List[_WideRequest] = []
+        self._wide_reserved: set = set()       # executor indices gang-held
+        self._wide_running = 0
+        self._wide_programs: Dict[Tuple[Any, ...], Any] = {}
 
         # autotune state; compiled programs live per executor (the
         # ``_compiled`` facade below merges them — its name is part of the
@@ -660,14 +707,39 @@ class GraphStreamEngine:
                 with self._cv:
                     self.stats.invalid_rejects += 1
                 raise InvalidGraph(reason, request_ids=(req_id,))
+        # single-device budget gate (DESIGN.md §10): a graph no bucket can
+        # hold is servable only by splitting it across a gang of executors
+        n_nodes = int(np.asarray(node_feat).shape[0])
+        n_edges = int(np.asarray(senders).shape[0])
+        node_budget = max(self.buckets)
+        wide_plan: Optional[WidePlan] = None
+        if n_nodes > node_budget:
+            reason = check_budget(n_nodes, n_edges, node_budget=node_budget,
+                                  wide_enabled=self._wide_enabled)
+            if not self._wide_enabled:
+                with self._cv:
+                    self.stats.invalid_rejects += 1
+                raise GraphTooLarge(reason, request_ids=(req_id,))
+            try:
+                wide_plan = plan_wide(
+                    np.asarray(senders), np.asarray(receivers), n_nodes,
+                    k=self._wide_k, node_budget=node_budget)
+            except WidePlanError as exc:
+                with self._cv:
+                    self.stats.invalid_rejects += 1
+                raise GraphTooLarge(
+                    f"graph does not fit a {self._wide_k}-shard wide "
+                    f"split: {exc}", request_ids=(req_id,)) from exc
         t_arrival = time.perf_counter()
         fut: Future = Future()
         req = _Request(future=fut, record=record, req_id=req_id, queue=queue,
                        deadline_t=(None if deadline is None
                                    else t_arrival + deadline))
-        item = PackItem(node_feat=node_feat, senders=senders,
-                        receivers=receivers, edge_feat=edge_feat,
-                        node_pos=node_pos, payload=req, t_arrival=t_arrival)
+        item = (None if wide_plan is not None else
+                PackItem(node_feat=node_feat, senders=senders,
+                         receivers=receivers, edge_feat=edge_feat,
+                         node_pos=node_pos, payload=req,
+                         t_arrival=t_arrival))
         self._ensure_threads()
         cap = self._queue_caps[queue]
         with self._cv:
@@ -701,7 +773,17 @@ class GraphStreamEngine:
                     self._deadlines_used = True
                     heapq.heappush(self._deadline_heap,
                                    (req.deadline_t, req_id))
-                self._scheduler.add(queue, item, now=item.t_arrival)
+                if wide_plan is not None:
+                    self._wide_queue.append(_WideRequest(
+                        req=req, plan=wide_plan,
+                        node_feat=np.asarray(node_feat, np.float32),
+                        edge_feat=(None if edge_feat is None else
+                                   np.asarray(edge_feat, np.float32)),
+                        node_pos=(None if node_pos is None else
+                                  np.asarray(node_pos, np.float32)),
+                        t_arrival=t_arrival))
+                else:
+                    self._scheduler.add(queue, item, now=item.t_arrival)
             self._cv.notify_all()
         if expired_req is not None:
             _resolve(fut, exc=DeadlineExceeded(
@@ -785,6 +867,7 @@ class GraphStreamEngine:
         self._scheduler.flush_all()
         self._retry_heap.clear()
         self._inflight.clear()
+        self._wide_queue.clear()
         victims = list(self._requests.values())
         self._requests.clear()
         for req in victims:
@@ -938,7 +1021,32 @@ class GraphStreamEngine:
                     to_fail.extend(self._shed_scheduler_locked(now))
                     if to_fail:
                         break          # resolve outside the lock, re-enter
-                    has_cap = any(ex.has_capacity for ex in self._executors)
+                    # wide gang scheduling (DESIGN.md §10): all-or-nothing
+                    # reservation of K idle executors; on failure the wide
+                    # request just stays queued (requeue semantics) while
+                    # narrow traffic keeps flowing — and completions wake
+                    # this loop, so a window is never missed
+                    if self._wide_queue:
+                        alive = sum(1 for ex in self._executors
+                                    if not ex.dead)
+                        if alive < self._wide_k and not self._respawn:
+                            # the pool shrank below K and will not heal:
+                            # waiting for a gang would strand the futures
+                            to_fail.extend(self._fail_wide_queue_locked(
+                                f"pool has {alive} live executors "
+                                f"< wide_k={self._wide_k}"))
+                            break
+                        gang = self._try_reserve_gang_locked(now)
+                        if gang is not None:
+                            wreq = self._wide_queue.pop(0)
+                            self._wide_running += 1
+                            threading.Thread(
+                                target=self._run_wide, args=(wreq, gang),
+                                name="flowgnn-wide", daemon=True).start()
+                            continue
+                    has_cap = any(ex.has_capacity
+                                  and ex.index not in self._wide_reserved
+                                  for ex in self._executors)
                     # due retries jump the fairness queue: they are old
                     # work that has already been charged virtual time
                     if (has_cap and self._retry_heap
@@ -963,8 +1071,11 @@ class GraphStreamEngine:
                     restrained = (has_cap
                                   and self._scheduler.preempt_active(now)
                                   and not self._scheduler.priority_ready
-                                  and not any(ex.idle for ex in
-                                              self._executors if not ex.dead))
+                                  and not any(
+                                      ex.idle for ex in self._executors
+                                      if not ex.dead
+                                      and ex.index not in
+                                      self._wide_reserved))
                     if has_cap and not restrained:
                         nxt = self._scheduler.next_batch(now)
                         if nxt is not None:
@@ -984,7 +1095,9 @@ class GraphStreamEngine:
                         # retry not yet due): wait below
                     elif (self._eager_flush and has_cap
                             and self._scheduler.open_batches
-                            and any(ex.idle for ex in self._executors)):
+                            and any(ex.idle for ex in self._executors
+                                    if ex.index not in
+                                    self._wide_reserved)):
                         # an executor is idle: serving the oldest open batch
                         # NOW beats waiting out its deadline (adaptive
                         # batching: under load, batches fill while every
@@ -1041,11 +1154,19 @@ class GraphStreamEngine:
         alive one exists, and a retry avoids the executor it failed on
         (``exclude``) when any alternative is alive."""
         with self._cv:
-            cands = ([ex for ex in self._executors if ex.has_capacity]
-                     or [ex for ex in self._executors if not ex.dead])
+            free = [ex for ex in self._executors
+                    if ex.index not in self._wide_reserved]
+            cands = ([ex for ex in free if ex.has_capacity]
+                     or [ex for ex in free if not ex.dead])
             if exclude is not None:
                 alt = [ex for ex in cands if ex.index != exclude]
                 cands = alt or cands
+            if not cands and any(not ex.dead for ex in self._executors):
+                # every alive executor is gang-reserved: not a failure —
+                # come back when the gang releases
+                self._push_retry_locked(queue_name, pb, delay=0.001,
+                                        exclude=exclude)
+                return
             if not cands:          # whole pool dead: nothing can run this
                 reqs = self._take_requests_locked(pb)
                 self.stats.record_failure(queue=queue_name, failed=len(reqs))
@@ -1065,6 +1186,219 @@ class GraphStreamEngine:
                 _resolve(req.future, exc=exc)
             return
         ex.submit(queue_name, pb)
+
+    # ------------------------------------------------------------------
+    # wide placement: gang scheduling + the gang runner (DESIGN.md §10)
+    # ------------------------------------------------------------------
+
+    def _try_reserve_gang_locked(self, now: float
+                                 ) -> Optional[List[DeviceExecutor]]:
+        """Atomically reserve K idle executors for a wide request, or
+        ``None`` (request stays queued). Must be called under ``self._cv``.
+
+        All-or-nothing: a partial hold would deadlock against narrow
+        traffic (and against a second wide request), so nothing is
+        reserved until K members are idle simultaneously. The priority
+        preemption window is respected the same way pipeline restraint
+        is — while a priority batch could claim an idle executor, the
+        gang does not take it.
+        """
+        if (self._scheduler.preempt_active(now)
+                and self._scheduler.priority_ready):
+            return None
+        avail = [ex for ex in self._executors
+                 if not ex.dead and ex.idle
+                 and ex.index not in self._wide_reserved]
+        if len(avail) < self._wide_k:
+            return None
+        gang = avail[:self._wide_k]
+        self._wide_reserved.update(ex.index for ex in gang)
+        return gang
+
+    def _fail_wide_queue_locked(self, reason: str
+                                ) -> List[Tuple[_Request, BaseException]]:
+        """Fail every queued wide request (under cv): the pool can no
+        longer form a K-gang and will not heal (no respawn)."""
+        out: List[Tuple[_Request, BaseException]] = []
+        for wreq in self._wide_queue:
+            req = self._requests.pop(wreq.req.req_id, None)
+            if req is None:
+                continue
+            self._pending -= 1
+            if req.queue in self._pending_by_queue:
+                self._pending_by_queue[req.queue] -= 1
+            self.stats.record_failure(queue=req.queue, failed=1)
+            out.append((req, ExecutorDead(
+                f"wide placement impossible: {reason}",
+                request_ids=(req.req_id,))))
+        self._wide_queue.clear()
+        if out:
+            self._cv.notify_all()
+        return out
+
+    def _ensure_wide_program(self, plan: WidePlan,
+                             gang: List[DeviceExecutor], stacked):
+        """The compiled SPMD wide program for (bucket geometry, gang).
+
+        Keyed on the :class:`WideBucket` plus the gang's device ids —
+        compile-once-per-bucket extended to gangs: every wide graph whose
+        plan lands in the same padded geometry reuses the program on the
+        same device set. The first build records trace-time edge passes
+        under a ``('wide', ...)`` key next to the narrow buckets (the
+        paper's one-pass property holds per shard per layer)."""
+        bucket = plan.bucket
+        key = (bucket, tuple(ex.device.id for ex in gang))
+        fn = self._wide_programs.get(key)
+        if fn is not None:
+            return fn
+        with self._compile_lock:
+            fn = self._wide_programs.get(key)
+            if fn is not None:
+                return fn
+            mesh = wide_mesh([ex.device for ex in gang])
+            fn = build_wide_forward(self.cfg, bucket, mesh, self.dataflow)
+            with count_edge_passes() as ps:
+                jax.eval_shape(fn, self.params, stacked)
+            self.edge_passes.setdefault(
+                ("wide", bucket.k, bucket.n_pad, bucket.e_pad), ps.passes)
+            self._wide_programs[key] = fn
+            return fn
+
+    def _run_wide(self, wreq: _WideRequest,
+                  gang: List[DeviceExecutor]) -> None:
+        """Run one wide request on its reserved gang (own thread).
+
+        Fault semantics (DESIGN.md §10): a gang-member death before,
+        during, or after the collective invalidates the WHOLE gang — a
+        ring collective with a dead participant has no trustworthy
+        result — so the request requeues intact (bounded by the requeue
+        budget; the placer reforms a gang from survivors). A transient
+        failure with the gang healthy retries like a narrow batch until
+        ``max_retries``, then fails the future with ``BatchFailed``.
+        Results pass the same non-finite validation gate as narrow
+        traffic (``PoisonGraph``). Exactly-once resolution goes through
+        the request registry like every other completion path.
+        """
+        req, plan = wreq.req, wreq.plan
+        resolved: Optional[Tuple[Future, Any,
+                                 Optional[BaseException]]] = None
+        try:
+            t_dispatch = time.perf_counter()
+            with self._cv:
+                if req.req_id not in self._requests:
+                    return             # shed/abandoned while queued
+                req.dispatched = True  # past the shedding window
+            err: Optional[BaseException] = None
+            out_np = None
+            if not any(ex.dead for ex in gang):
+                try:
+                    stacked = stack_shard_arrays(
+                        plan, wreq.node_feat, wreq.edge_feat,
+                        wreq.node_pos)
+                    fn = self._ensure_wide_program(plan, gang, stacked)
+                    out_np = np.asarray(jax.block_until_ready(
+                        fn(self.params, stacked)))
+                except Exception as exc:
+                    err = exc
+            t_done = time.perf_counter()
+
+            if any(ex.dead for ex in gang):
+                # death path: requeue the whole gang's work on survivors
+                with self._cv:
+                    alive = sum(1 for ex in self._executors
+                                if not ex.dead)
+                    can_requeue = (not (self._stopped or self._closed)
+                                   and (alive >= self._wide_k
+                                        or self._respawn)
+                                   and wreq.requeues < self._max_requeues
+                                   and req.req_id in self._requests)
+                    if can_requeue:
+                        wreq.requeues += 1
+                        req.dispatched = False     # sheddable again
+                        self.stats.record_failure(queue=req.queue,
+                                                  retries=1)
+                        self._wide_queue.append(wreq)
+                        self._cv.notify_all()
+                        return
+                    if self._requests.pop(req.req_id, None) is None:
+                        return
+                    self._pending -= 1
+                    if req.queue in self._pending_by_queue:
+                        self._pending_by_queue[req.queue] -= 1
+                    self.stats.record_failure(queue=req.queue, failed=1)
+                    self._cv.notify_all()
+                failure: EngineError = ExecutorDead(
+                    "gang member died and the wide graph could not be "
+                    "re-placed", request_ids=(req.req_id,))
+                failure.__cause__ = (err if isinstance(err, BaseException)
+                                     else None)
+                resolved = (req.future, None, failure)
+                return
+
+            if err is not None:
+                # transient path: gang healthy, the program itself failed
+                with self._cv:
+                    can_retry = (not (self._stopped or self._closed)
+                                 and wreq.attempts < self._max_retries
+                                 and req.req_id in self._requests)
+                    if can_retry:
+                        # no backoff heap: gang reformation (waiting for
+                        # K idle members again) naturally spaces retries
+                        wreq.attempts += 1
+                        req.dispatched = False
+                        self.stats.record_failure(queue=req.queue,
+                                                  retries=1)
+                        self._wide_queue.append(wreq)
+                        self._cv.notify_all()
+                        return
+                    if self._requests.pop(req.req_id, None) is None:
+                        return
+                    self._pending -= 1
+                    if req.queue in self._pending_by_queue:
+                        self._pending_by_queue[req.queue] -= 1
+                    self.stats.record_failure(queue=req.queue, failed=1)
+                    self._cv.notify_all()
+                failure = BatchFailed(
+                    f"wide graph failed after {wreq.attempts + 1} "
+                    f"attempts: {err}", request_ids=(req.req_id,))
+                failure.__cause__ = err
+                resolved = (req.future, None, failure)
+                return
+
+            result = (out_np[0] if self.cfg.task == "graph"
+                      else out_np[:plan.n_nodes])
+            with self._cv:
+                if self._requests.pop(req.req_id, None) is None:
+                    return             # abandoned mid-run: drop result
+                self._pending -= 1
+                if req.queue in self._pending_by_queue:
+                    self._pending_by_queue[req.queue] -= 1
+                if (self._validate_outputs
+                        and not bool(np.all(np.isfinite(result)))):
+                    self.stats.record_failure(queue=req.queue,
+                                              quarantined=1, failed=1)
+                    resolved = (req.future, None, PoisonGraph(
+                        "non-finite wide output quarantined by "
+                        "validation gate", request_ids=(req.req_id,)))
+                else:
+                    if req.record:
+                        self.stats.record_batch(
+                            latencies=[t_done - wreq.t_arrival],
+                            queue_waits=[t_dispatch - wreq.t_arrival],
+                            device_s=t_done - t_dispatch, batch_size=1,
+                            t_dispatch=t_dispatch, t_done=t_done,
+                            queue=req.queue,
+                            device=f"wide[{len(gang)}]")
+                    resolved = (req.future, result, None)
+                self._cv.notify_all()
+        finally:
+            with self._cv:
+                self._wide_reserved.difference_update(
+                    ex.index for ex in gang)
+                self._wide_running -= 1
+                self._cv.notify_all()
+            if resolved is not None:
+                _resolve(resolved[0], resolved[1], resolved[2])
 
     def _shed_scheduler_locked(self, now: float
                                ) -> List[Tuple[_Request, BaseException]]:
@@ -1088,6 +1422,26 @@ class GraphStreamEngine:
             out.append((req, DeadlineExceeded(
                 "deadline expired before dispatch",
                 request_ids=(req.req_id,))))
+        if self._wide_queue:
+            # wide requests waiting on a gang window are sheddable too
+            keep: List[_WideRequest] = []
+            for wreq in self._wide_queue:
+                dt = wreq.req.deadline_t
+                if dt is None or dt > now:
+                    keep.append(wreq)
+                    continue
+                req = self._requests.pop(wreq.req.req_id, None)
+                if req is None:
+                    continue
+                self._pending -= 1
+                if req.queue in self._pending_by_queue:
+                    self._pending_by_queue[req.queue] -= 1
+                self.stats.record_failure(queue=req.queue, shed=1,
+                                          failed=1)
+                out.append((req, DeadlineExceeded(
+                    "deadline expired before a gang window opened",
+                    request_ids=(req.req_id,))))
+            self._wide_queue[:] = keep
         if out:
             self._cv.notify_all()
         return out
@@ -1151,6 +1505,15 @@ class GraphStreamEngine:
             victims: List[_Request] = []
             for _, pb in stranded:
                 victims.extend(self._take_requests_locked(pb))
+            for wreq in self._wide_queue:
+                req = self._requests.pop(wreq.req.req_id, None)
+                if req is None:
+                    continue
+                self._pending -= 1
+                if req.queue in self._pending_by_queue:
+                    self._pending_by_queue[req.queue] -= 1
+                victims.append(req)
+            self._wide_queue.clear()
             if victims:
                 self.stats.record_failure(failed=len(victims))
             self._cv.notify_all()
@@ -2013,9 +2376,12 @@ class GraphStreamEngine:
     # Bumped whenever the candidate set or the lowering behind an impl
     # name changes meaning (schema 2: one-launch attention/field forms —
     # GAT/DGN buckets tuned against the pre-flash candidate set must not
-    # stay pinned to the old staged winners). A cache file whose
-    # "__schema__" does not match is ignored on load and rebuilt on save.
-    AUTOTUNE_CACHE_SCHEMA = 2
+    # stay pinned to the old staged winners; schema 3: the fingerprint
+    # gained a wide shard-count component, so schema-2 sections — keyed
+    # without it — would alias a wide engine's narrow buckets onto a
+    # non-wide engine's winners). A cache file whose "__schema__" does
+    # not match is ignored on load and rebuilt on save.
+    AUTOTUNE_CACHE_SCHEMA = 3
 
     def _cache_fingerprint(self) -> str:
         """Workload + topology identity for the autotune cache.
@@ -2024,11 +2390,16 @@ class GraphStreamEngine:
         another sharing the file — and winners tuned on one backend/device
         topology (CPU vs TPU generation, say) must not be silently reused
         on another, so the backend and device kind are part of the key.
+        The wide shard count is part of the workload identity too: a
+        wide-enabled engine's narrow buckets coexist with gang traffic
+        (different cache pressure and arrival mix), so its winners get
+        their own section (``@wide1`` = wide disabled).
         """
         c, d = self.cfg, self.dataflow
         topo = f"{jax.default_backend()}:{device_kind(self._devices[0])}"
+        wide_k = self._wide_k if self._wide_enabled else 1
         return (f"{topo}/{c.model}-l{c.num_layers}-h{c.hidden_dim}-{c.task}-"
-                f"{d.impl}{'-sp' if d.single_pass else ''}")
+                f"{d.impl}{'-sp' if d.single_pass else ''}@wide{wide_k}")
 
     def _load_autotune_cache(self) -> None:
         path = self._autotune_cache

@@ -58,6 +58,14 @@ class InvalidGraph(InvalidRequest):
     like its siblings."""
 
 
+class GraphTooLarge(InvalidRequest):
+    """The submitted graph exceeds the largest single-device bucket budget
+    and cannot be served: wide placement is disabled (enable with
+    ``GraphStreamEngine(wide=True)``), or even the K-shard wide split blew
+    a per-executor budget (``core/validate.py`` / the wide planner decide;
+    raised at ``submit`` like its siblings, carrying the request id)."""
+
+
 class UnknownQueue(EngineError, KeyError):
     """The named tenant queue does not exist (no silent remapping; a
     typo fails loudly). Also a ``KeyError`` for pre-hierarchy callers."""

@@ -211,20 +211,29 @@ def precompute_graph_stats(
     pna_delta: Optional[float] = None,
     with_dgn_field: bool = False,
     with_graph_counts: bool = False,
+    degrees: Optional[Array] = None,
 ) -> PrecomputedGraphStats:
     """Compute the per-graph statistics bundle (one sweep per family).
 
     ``pna_delta`` is the PNA normalization constant (``cfg.avg_log_degree``).
     Sweeps issued here are counted by ``count_edge_passes`` — they are real
     passes over the edge stream, just hoisted out of the layer loop.
+
+    ``degrees`` may be supplied to skip the degree sweep: wide placement
+    (distributed/wide.py) injects exact *global* in-degrees per shard, since
+    halo rows have no local in-edges but their degree normalizers (GCN
+    ``inv_sqrt_deg``, PNA scalers) must match the owner's values bitwise.
+    In-degree counts are exact small integers in f32, so the injected values
+    equal what the masked segment-sum would produce on the owning shard.
     """
-    degrees = None
     need_deg = with_degrees or with_self_loop_norm or pna_delta is not None
-    if need_deg:
+    if need_deg and degrees is None:
         _count_pass()
         degrees = jax.ops.segment_sum(
             graph.edge_mask.astype(jnp.float32), graph.receivers,
             num_segments=graph.n_node_pad)
+    elif not need_deg:
+        degrees = None
     inv_sqrt_deg = None
     if with_self_loop_norm:
         inv_sqrt_deg = jax.lax.rsqrt(degrees + 1.0)
@@ -291,9 +300,13 @@ class DataflowConfig:
     ``scan_layers`` selects the scanned stacked-parameter forward
     (DESIGN.md §7): the homogeneous layer stack runs as a single
     ``lax.scan`` — one trace, one compiled body, node buffer resident
-    across layers — instead of a per-layer unrolled Python loop. Bitwise
-    equal to the unrolled forward; ``False`` keeps the unrolled loop for
-    ablation.
+    across layers — instead of a per-layer unrolled Python loop. The scan
+    body computes the same op sequence as one unrolled layer (tails from
+    an identical input match bitwise); whole-forward outputs can still
+    drift by ~1 ulp against the unrolled program because XLA fuses the
+    two programs differently. Cross-program parity checks (e.g. the wide
+    placement tests) therefore pin ``scan_layers=False`` on both sides;
+    ``False`` also keeps the unrolled loop for ablation.
     """
 
     node_tile: int = 8

@@ -143,6 +143,39 @@ def gcn_init(key, cfg: GNNConfig) -> Params:
     return {"layers": layers, "head": _head_init(keys[-1], cfg, d)}
 
 
+def gcn_layer(p, graph: GraphBatch, x: Array, dataflow: DataflowConfig,
+              stats: PrecomputedGraphStats, *, last,
+              fusable: Optional[FusableMessage] = None) -> Array:
+    """One GCN layer (module-level so the wide runner can drive it per shard).
+
+    ``stats`` must carry ``inv_sqrt_deg``; ``fusable`` may share the per-edge
+    norm stream across layers (rebuilt here when absent — same values, the
+    gather is cheap next to the edge sweep).
+    """
+    inv_sqrt = stats.inv_sqrt_deg
+    self_coeff = inv_sqrt * inv_sqrt        # analytic self-loop weight
+    if fusable is None and dataflow.impl in _FUSABLE_IMPLS:
+        fusable = FusableMessage(
+            src_weight=inv_sqrt[graph.senders] * inv_sqrt[graph.receivers])
+
+    def message(src, dst, e, _inv=inv_sqrt, _g=graph):
+        norm = _inv[_g.senders] * _inv[_g.receivers]
+        return src * norm[:, None]
+
+    def update(xv, m, _p=p):
+        m = m + xv * self_coeff[:, None]      # analytic self loop
+        return _dense(_p, m)
+
+    fu = (FusableUpdate(w1=p["w"], b1=p["b"], self_coeff=self_coeff)
+          if dataflow.impl == "fused_layer" else None)
+    h = propagate(graph, x, message_fn=message, update_fn=update,
+                  aggregate="sum", dataflow=dataflow, stats=stats,
+                  fusable=fusable, fusable_update=fu)
+    # position-dependent activation gated outside the (scan-invariant)
+    # layer body; relu(0) == 0 so it commutes with the node mask
+    return jnp.where(last, h, jax.nn.relu(h))
+
+
 def gcn_apply(params, graph: GraphBatch, cfg: GNNConfig,
               dataflow: DataflowConfig = DEFAULT_DATAFLOW,
               stats: Optional[PrecomputedGraphStats] = None) -> Array:
@@ -161,22 +194,8 @@ def gcn_apply(params, graph: GraphBatch, cfg: GNNConfig,
             src_weight=inv_sqrt[graph.senders] * inv_sqrt[graph.receivers])
 
     def layer_step(xx, p, last):
-        def message(src, dst, e, _inv=inv_sqrt, _g=graph):
-            norm = _inv[_g.senders] * _inv[_g.receivers]
-            return src * norm[:, None]
-
-        def update(xv, m, _p=p):
-            m = m + xv * self_coeff[:, None]      # analytic self loop
-            return _dense(_p, m)
-
-        fu = (FusableUpdate(w1=p["w"], b1=p["b"], self_coeff=self_coeff)
-              if dataflow.impl == "fused_layer" else None)
-        h = propagate(graph, xx, message_fn=message, update_fn=update,
-                      aggregate="sum", dataflow=dataflow, stats=stats,
-                      fusable=fusable, fusable_update=fu)
-        # position-dependent activation gated outside the (scan-invariant)
-        # layer body; relu(0) == 0 so it commutes with the node mask
-        return jnp.where(last, h, jax.nn.relu(h))
+        return gcn_layer(p, graph, xx, dataflow, stats, last=last,
+                         fusable=fusable)
 
     n_layers = cfg.num_layers
     # layer 0 maps node_feat_dim -> hidden and stays unrolled; the
@@ -280,6 +299,19 @@ def gin_vn_init(key, cfg: GNNConfig) -> Params:
     }
 
 
+def gin_vn_broadcast(graph: GraphBatch, x: Array, vn: Array) -> Array:
+    """VN -> all nodes (node-local given a replicated ``vn``)."""
+    x = x + vn[graph.graph_ids]
+    return jnp.where(graph.node_mask[:, None], x, 0.0)
+
+
+def gin_vn_update(p_vn, graph: GraphBatch, x: Array, vn: Array) -> Array:
+    """All nodes -> VN: the per-graph sum pool + MLP (needs the full graph)."""
+    pooled = global_pool(graph, x, kind="sum")
+    vn = _mlp(p_vn, vn + pooled)
+    return jnp.where(graph.graph_mask[:, None], vn, 0.0)
+
+
 def gin_vn_apply(params, graph: GraphBatch, cfg: GNNConfig,
                  dataflow: DataflowConfig = DEFAULT_DATAFLOW,
                  stats: Optional[PrecomputedGraphStats] = None) -> Array:
@@ -297,13 +329,10 @@ def gin_vn_apply(params, graph: GraphBatch, cfg: GNNConfig,
     n_layers = len(params["layers"])
 
     def broadcast_vn(xx, vv):
-        xx = xx + vv[graph.graph_ids]                     # VN -> all nodes
-        return jnp.where(graph.node_mask[:, None], xx, 0.0)
+        return gin_vn_broadcast(graph, xx, vv)
 
     def vn_update(xx, vv, p_vn):
-        pooled = global_pool(graph, xx, kind="sum")       # all nodes -> VN
-        vv = _mlp(p_vn, vv + pooled)
-        return jnp.where(graph.graph_mask[:, None], vv, 0.0)
+        return gin_vn_update(p_vn, graph, xx, vv)
 
     if dataflow.scan_layers and n_layers > 1:
         # layers 0..L-2 (gin layer + vn exchange) are homogeneous and scan;
@@ -353,46 +382,61 @@ def gat_init(key, cfg: GNNConfig) -> Params:
     return {"layers": layers, "head": _head_init(keys[-1], cfg, d_hid)}
 
 
+def gat_layer(p, graph: GraphBatch, x: Array, dataflow: DataflowConfig,
+              stats: Optional[PrecomputedGraphStats], *, last) -> Array:
+    """One GAT layer (module-level so the wide runner can drive it per shard).
+
+    Heads/head_dim come from the attention-vector shapes. The per-node
+    attention halves use an explicit multiply-reduce over the head dim
+    rather than einsum: XLA lowers the einsum through a gemm whose
+    accumulation order depends on the row count, while the elementwise
+    product + axis reduction is per-row stable — required for wide
+    placement, where each shard evaluates the NT side on a different
+    number of rows yet must match the single-device forward bitwise.
+    """
+    H, Dh = p["a_src"].shape
+    N = graph.n_node_pad
+    h = _dense(p["w"], x).reshape(N, H, Dh)
+    # per-node attention halves (computed once per node — NT side)
+    alpha_src = (h * p["a_src"][None]).sum(-1)
+    alpha_dst = (h * p["a_dst"][None]).sum(-1)
+    if dataflow.impl in _FUSABLE_IMPLS:
+        # one-launch attention: per-edge logits, leaky_relu, the flash
+        # style online softmax (running max + rescaled denominator per
+        # dest bank) and the weighted scatter all fold into the edge
+        # sweep (DESIGN.md §6) — no seg_softmax pre-pass and no (E, H)
+        # attention stream through HBM
+        agg = fused_edge_aggregate(
+            graph, h.reshape(N, H * Dh),
+            FusableMessage(attention=FusableAttention(
+                src_logits=alpha_src, dst_logits=alpha_dst)),
+            kinds=("sum",), dataflow=dataflow, stats=stats)["sum"]
+    else:
+        logits = jax.nn.leaky_relu(
+            alpha_src[graph.senders] + alpha_dst[graph.receivers],
+            negative_slope=0.2)                               # (E, H)
+        att = segment_softmax(logits, graph.receivers, N,
+                              edge_mask=graph.edge_mask,
+                              dataflow=dataflow)              # (E, H)
+        msg = h[graph.senders] * att[..., None]               # (E, H, Dh)
+        _count_pass()         # the gather + weight message rewrite
+        agg = segment_aggregate(
+            msg.reshape(-1, H * Dh), graph.receivers, N,
+            kind="sum", edge_mask=graph.edge_mask, dataflow=dataflow)
+    out = jnp.where(last, agg, jax.nn.elu(agg))
+    return jnp.where(graph.node_mask[:, None], out, 0.0)
+
+
 def gat_apply(params, graph: GraphBatch, cfg: GNNConfig,
               dataflow: DataflowConfig = DEFAULT_DATAFLOW,
               stats: Optional[PrecomputedGraphStats] = None) -> Array:
     x = graph.node_feat.astype(cfg.dtype)
-    H, Dh = cfg.heads, cfg.head_dim
-    N = graph.n_node_pad
     if stats is None and cfg.task == "graph":
         stats = precompute_graph_stats(graph, with_degrees=False,
                                        with_graph_counts=True)
 
     def layer_step(xx, p, last):
-        h = _dense(p["w"], xx).reshape(N, H, Dh)
-        # per-node attention halves (computed once per node — NT side)
-        alpha_src = jnp.einsum("nhd,hd->nh", h, p["a_src"])
-        alpha_dst = jnp.einsum("nhd,hd->nh", h, p["a_dst"])
-        if dataflow.impl in _FUSABLE_IMPLS:
-            # one-launch attention: per-edge logits, leaky_relu, the flash
-            # style online softmax (running max + rescaled denominator per
-            # dest bank) and the weighted scatter all fold into the edge
-            # sweep (DESIGN.md §6) — no seg_softmax pre-pass and no (E, H)
-            # attention stream through HBM
-            agg = fused_edge_aggregate(
-                graph, h.reshape(N, H * Dh),
-                FusableMessage(attention=FusableAttention(
-                    src_logits=alpha_src, dst_logits=alpha_dst)),
-                kinds=("sum",), dataflow=dataflow, stats=stats)["sum"]
-        else:
-            logits = jax.nn.leaky_relu(
-                alpha_src[graph.senders] + alpha_dst[graph.receivers],
-                negative_slope=0.2)                               # (E, H)
-            att = segment_softmax(logits, graph.receivers, N,
-                                  edge_mask=graph.edge_mask,
-                                  dataflow=dataflow)              # (E, H)
-            msg = h[graph.senders] * att[..., None]               # (E, H, Dh)
-            _count_pass()         # the gather + weight message rewrite
-            agg = segment_aggregate(
-                msg.reshape(-1, H * Dh), graph.receivers, N,
-                kind="sum", edge_mask=graph.edge_mask, dataflow=dataflow)
-        out = jnp.where(last, agg, jax.nn.elu(agg))
-        return jnp.where(graph.node_mask[:, None], out, 0.0)
+        return gat_layer(p, graph, xx, dataflow, stats, last=last)
 
     n_layers = cfg.num_layers
     if dataflow.scan_layers and n_layers > 1:
@@ -434,54 +478,63 @@ def pna_init(key, cfg: GNNConfig) -> Params:
     }
 
 
+def pna_layer(p, graph: GraphBatch, x: Array, dataflow: DataflowConfig,
+              stats: PrecomputedGraphStats) -> Array:
+    """One PNA layer (module-level so the wide runner can drive it per shard).
+
+    ``stats`` must carry ``pna_scalers`` (and ``degrees`` for mean/std).
+    """
+    N = graph.n_node_pad
+    d = p["pre"]["w"].shape[1]
+    scalers = stats.pna_scalers                               # (N, 3)
+    e = _dense(p["edge_enc"], graph.edge_feat)
+
+    def message(src, dst, ee, _e=e, _p=p):
+        return jax.nn.relu(_dense(_p["pre"], jnp.concatenate([src, _e], -1)))
+
+    def update(xv, m, _p=p):
+        # m = concat of 4 aggregators: (N, 4D); apply 3 scalers -> (N, 12D)
+        scaled = (m[:, None, :] * scalers[:, :, None]).reshape(N, -1)
+        h = _dense(_p["post"], jnp.concatenate([xv, scaled], -1))
+        return jax.nn.relu(h)
+
+    # fusable phi: the pre-linear splits into a node-side transform
+    # (N rows, not E) plus an edge-side term — phi = relu(x@Ws[snd]
+    # + e@We + b), exactly the per-edge linear-combine contract.
+    # fusable gamma: the scaler-contraction epilogue — the four
+    # statistics are derived from the kernel's accumulators and the
+    # degree scalers contracted in-register (DESIGN.md §7), so under
+    # impl='fused_layer' on kernel backends PNA is one launch per
+    # layer too; off-kernel the pipeline edge phase + XLA gamma stays.
+    fusable = None
+    fu = None
+    if dataflow.impl in _FUSABLE_IMPLS:
+        w_pre, b_pre = p["pre"]["w"], p["pre"]["b"]
+        fusable = FusableMessage(
+            node_input=x @ w_pre[:d], edge_term=e @ w_pre[d:],
+            bias=b_pre, activation="relu")
+        if dataflow.impl == "fused_layer":
+            fu = FusableUpdate(w1=p["post"]["w"], b1=p["post"]["b"],
+                               scalers=scalers, out_activation="relu")
+
+    return propagate(graph, x, message_fn=message, update_fn=update,
+                     aggregate=("mean", "std", "max", "min"),
+                     dataflow=dataflow, stats=stats, fusable=fusable,
+                     fusable_update=fu)
+
+
 def pna_apply(params, graph: GraphBatch, cfg: GNNConfig,
               dataflow: DataflowConfig = DEFAULT_DATAFLOW,
               stats: Optional[PrecomputedGraphStats] = None) -> Array:
     x = jax.nn.relu(_dense(params["node_enc"], graph.node_feat.astype(cfg.dtype)))
-    N = graph.n_node_pad
-    d = cfg.hidden_dim
     if stats is None or stats.pna_scalers is None:
         # one degree sweep for the whole network: the shared degrees feed the
         # scalers AND every layer's mean/std (no per-layer count columns)
         stats = precompute_graph_stats(graph, pna_delta=cfg.avg_log_degree,
                                        with_graph_counts=cfg.task == "graph")
-    scalers = stats.pna_scalers                               # (N, 3)
 
     def layer_step(xx, p):
-        e = _dense(p["edge_enc"], graph.edge_feat)
-
-        def message(src, dst, ee, _e=e, _p=p):
-            return jax.nn.relu(_dense(_p["pre"], jnp.concatenate([src, _e], -1)))
-
-        def update(xv, m, _p=p):
-            # m = concat of 4 aggregators: (N, 4D); apply 3 scalers -> (N, 12D)
-            scaled = (m[:, None, :] * scalers[:, :, None]).reshape(N, -1)
-            h = _dense(_p["post"], jnp.concatenate([xv, scaled], -1))
-            return jax.nn.relu(h)
-
-        # fusable phi: the pre-linear splits into a node-side transform
-        # (N rows, not E) plus an edge-side term — phi = relu(x@Ws[snd]
-        # + e@We + b), exactly the per-edge linear-combine contract.
-        # fusable gamma: the scaler-contraction epilogue — the four
-        # statistics are derived from the kernel's accumulators and the
-        # degree scalers contracted in-register (DESIGN.md §7), so under
-        # impl='fused_layer' on kernel backends PNA is one launch per
-        # layer too; off-kernel the pipeline edge phase + XLA gamma stays.
-        fusable = None
-        fu = None
-        if dataflow.impl in _FUSABLE_IMPLS:
-            w_pre, b_pre = p["pre"]["w"], p["pre"]["b"]
-            fusable = FusableMessage(
-                node_input=xx @ w_pre[:d], edge_term=e @ w_pre[d:],
-                bias=b_pre, activation="relu")
-            if dataflow.impl == "fused_layer":
-                fu = FusableUpdate(w1=p["post"]["w"], b1=p["post"]["b"],
-                                   scalers=scalers, out_activation="relu")
-
-        return propagate(graph, xx, message_fn=message, update_fn=update,
-                         aggregate=("mean", "std", "max", "min"),
-                         dataflow=dataflow, stats=stats, fusable=fusable,
-                         fusable_update=fu)
+        return pna_layer(p, graph, xx, dataflow, stats)
 
     if dataflow.scan_layers and cfg.num_layers > 1:
         def body(xx, p):
@@ -512,6 +565,63 @@ def dgn_init(key, cfg: GNNConfig) -> Params:
     }
 
 
+def dgn_lane_weights(graph: GraphBatch, stats: PrecomputedGraphStats,
+                     d: int, dtype) -> Array:
+    """The layer-invariant [1 | w] per-lane weight stream for DGN's phi."""
+    e_pad = graph.n_edge_pad
+    return jnp.concatenate(
+        [jnp.ones((e_pad, d), dtype),
+         jnp.broadcast_to(stats.dgn_weights[:, None], (e_pad, d))], axis=-1)
+
+
+def dgn_layer(p, graph: GraphBatch, x: Array, dataflow: DataflowConfig,
+              stats: PrecomputedGraphStats, *,
+              lane_w: Optional[Array] = None) -> Array:
+    """One DGN layer (module-level so the wide runner can drive it per shard).
+
+    ``stats`` must carry the directional field (``dgn_weights``/``dgn_wsum``)
+    and ``degrees``; ``lane_w`` may share the per-forward [1 | w] lane stream
+    (rebuilt here when absent).
+    """
+    d = p["post"]["w"].shape[1]
+    w = stats.dgn_weights                                      # (E,)
+    w_sum = stats.dgn_wsum                                     # (N,)
+    if lane_w is None and dataflow.impl in _FUSABLE_IMPLS:
+        lane_w = dgn_lane_weights(graph, stats, d, x.dtype)
+
+    # single-pass multi-statistic sweep: the mean aggregator and the
+    # directional sum come out of ONE pass over [x_src | x_src*w]
+    # (degrees and the field normalizer come precomputed via ``stats``)
+    def message(src, dst, ee):
+        return jnp.concatenate([src, src * w[:, None]], axis=-1)
+
+    def update(xv, m, _p=p):
+        # m = concat(sum, mean) over the stacked lanes: (N, 4D)
+        m_mean = m[:, 2 * d:3 * d]
+        m_dir = m[:, d:2 * d]
+        m_dx = jnp.abs(m_dir - xv * w_sum[:, None])       # |B_dx X|
+        h = _dense(_p["post"], jnp.concatenate([xv, m_mean, m_dx], -1))
+        return jax.nn.relu(h)
+
+    # fusable gamma: the directional-field epilogue — under
+    # impl='fused_layer' on kernel backends the |s1 - x·wsum| combine
+    # and the post MLP run inside the same launch as the edge sweep
+    # (DESIGN.md §7), so DGN is one launch per layer too
+    fus = None
+    fu = None
+    if dataflow.impl in _FUSABLE_IMPLS:
+        fus = FusableMessage(
+            node_input=jnp.concatenate([x, x], axis=-1),
+            src_weight=lane_w)
+        if dataflow.impl == "fused_layer":
+            fu = FusableUpdate(w1=p["post"]["w"], b1=p["post"]["b"],
+                               field_wsum=w_sum, out_activation="relu")
+
+    return propagate(graph, x, message_fn=message, update_fn=update,
+                     aggregate=("sum", "mean"), dataflow=dataflow,
+                     stats=stats, fusable=fus, fusable_update=fu)
+
+
 def dgn_apply(params, graph: GraphBatch, cfg: GNNConfig,
               dataflow: DataflowConfig = DEFAULT_DATAFLOW,
               stats: Optional[PrecomputedGraphStats] = None) -> Array:
@@ -524,56 +634,19 @@ def dgn_apply(params, graph: GraphBatch, cfg: GNNConfig,
     layer-invariant — computed once in ``precompute_graph_stats`` and shared.
     """
     x = jax.nn.relu(_dense(params["node_enc"], graph.node_feat.astype(cfg.dtype)))
-    N = graph.n_node_pad
-    d = cfg.hidden_dim
     if stats is None or stats.dgn_weights is None:
         stats = precompute_graph_stats(graph, with_dgn_field=True,
                                        with_graph_counts=cfg.task == "graph")
-    w = stats.dgn_weights                                      # (E,)
-    w_sum = stats.dgn_wsum                                     # (N,)
 
     # fusable phi for the pipeline: [x_src | x_src*w] is the gathered row of
     # the duplicated node buffer scaled by per-lane weights [1 | w] — the
     # weight stream is layer-invariant (field only), built once per forward
     lane_w = None
     if dataflow.impl in _FUSABLE_IMPLS:
-        e_pad = graph.n_edge_pad
-        lane_w = jnp.concatenate(
-            [jnp.ones((e_pad, d), x.dtype),
-             jnp.broadcast_to(w[:, None], (e_pad, d))], axis=-1)
+        lane_w = dgn_lane_weights(graph, stats, cfg.hidden_dim, x.dtype)
 
     def layer_step(xx, p):
-        # single-pass multi-statistic sweep: the mean aggregator and the
-        # directional sum come out of ONE pass over [x_src | x_src*w]
-        # (degrees and the field normalizer come precomputed via ``stats``)
-        def message(src, dst, ee):
-            return jnp.concatenate([src, src * w[:, None]], axis=-1)
-
-        def update(xv, m, _p=p):
-            # m = concat(sum, mean) over the stacked lanes: (N, 4D)
-            m_mean = m[:, 2 * d:3 * d]
-            m_dir = m[:, d:2 * d]
-            m_dx = jnp.abs(m_dir - xv * w_sum[:, None])       # |B_dx X|
-            h = _dense(_p["post"], jnp.concatenate([xv, m_mean, m_dx], -1))
-            return jax.nn.relu(h)
-
-        # fusable gamma: the directional-field epilogue — under
-        # impl='fused_layer' on kernel backends the |s1 - x·wsum| combine
-        # and the post MLP run inside the same launch as the edge sweep
-        # (DESIGN.md §7), so DGN is one launch per layer too
-        fus = None
-        fu = None
-        if dataflow.impl in _FUSABLE_IMPLS:
-            fus = FusableMessage(
-                node_input=jnp.concatenate([xx, xx], axis=-1),
-                src_weight=lane_w)
-            if dataflow.impl == "fused_layer":
-                fu = FusableUpdate(w1=p["post"]["w"], b1=p["post"]["b"],
-                                   field_wsum=w_sum, out_activation="relu")
-
-        return propagate(graph, xx, message_fn=message, update_fn=update,
-                         aggregate=("sum", "mean"), dataflow=dataflow,
-                         stats=stats, fusable=fus, fusable_update=fu)
+        return dgn_layer(p, graph, xx, dataflow, stats, lane_w=lane_w)
 
     if dataflow.scan_layers and cfg.num_layers > 1:
         def body(xx, p):

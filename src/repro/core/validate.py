@@ -106,6 +106,34 @@ def check_graph(node_feat, senders, receivers, edge_feat=None,
     return None
 
 
+def check_budget(num_nodes: int, num_edges: int, *,
+                 node_budget: Optional[int] = None,
+                 edge_budget: Optional[int] = None,
+                 wide_enabled: bool = False) -> Optional[str]:
+    """Why this graph exceeds the single-device serving budget, or ``None``.
+
+    The budget is the largest compiled bucket one executor serves
+    (``max(GraphStreamEngine.buckets)`` node slots, plus an optional edge
+    bound). A graph over budget is *admissible only under wide placement*;
+    with wide disabled the engine raises :class:`GraphTooLarge` from the
+    reason returned here, naming the enabling knob so the caller knows the
+    graph is servable, just not on one device.
+    """
+    if node_budget is not None and num_nodes > node_budget:
+        return (f"graph has {num_nodes} nodes > largest single-device "
+                f"bucket {node_budget}"
+                + ("" if wide_enabled else
+                   " and wide placement is disabled (wide=True splits it "
+                   "across the executor pool)"))
+    if edge_budget is not None and num_edges > edge_budget:
+        return (f"graph has {num_edges} edges > single-device edge "
+                f"budget {edge_budget}"
+                + ("" if wide_enabled else
+                   " and wide placement is disabled (wide=True splits it "
+                   "across the executor pool)"))
+    return None
+
+
 def validate_graph(node_feat, senders, receivers, edge_feat=None,
                    node_pos=None, *, node_feat_dim: Optional[int] = None,
                    edge_feat_dim: Optional[int] = None,

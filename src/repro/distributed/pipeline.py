@@ -26,7 +26,40 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.distributed.sharding import compat_axis_size, compat_shard_map
+
 Array = jax.Array
+
+
+def ring_perm(size: int, *, steps: int = 1):
+    """The ring permutation ``i -> (i + steps) % size`` as ppermute pairs."""
+    return [(i, (i + steps) % size) for i in range(size)]
+
+
+def ring_shift(x: Array, axis_name: str, *, steps: int = 1,
+               size: int | None = None) -> Array:
+    """Rotate ``x`` ``steps`` hops forward around the ring over ``axis_name``.
+
+    The device at ring position i receives the value from position
+    ``(i - steps) % size``. Used by the pipeline schedule (steps=1, the
+    stage hand-off) and the wide-placement halo exchange (steps=s feeds the
+    halo block for the peer s hops back). Must run inside ``shard_map``.
+    """
+    if size is None:
+        size = compat_axis_size(axis_name)
+    return jax.lax.ppermute(x, axis_name, ring_perm(size, steps=steps))
+
+
+def broadcast_from(x: Array, axis_name: str, src) -> Array:
+    """Broadcast ``x`` from ring position ``src`` to every device.
+
+    ``ppermute`` requires unique sources, so a one-to-all broadcast cannot
+    be a permutation — the idiom is mask + psum: every device contributes
+    zeros except ``src``, and the sum is the broadcast. Must run inside
+    ``shard_map``; ``src`` may be traced (e.g. ``axis_size - 1``).
+    """
+    stage = jax.lax.axis_index(axis_name)
+    return jax.lax.psum(jnp.where(stage == src, x, 0.0), axis_name)
 
 
 def pipeline_apply(stage_fn: Callable[[Any, Array], Array],
@@ -49,7 +82,6 @@ def pipeline_apply(stage_fn: Callable[[Any, Array], Array],
         stage = jax.lax.axis_index(axis_name)
         n_micro = xs.shape[0]
         total = n_micro + n_stages - 1
-        perm = [(i, (i + 1) % n_stages) for i in range(n_stages)]
 
         def step(carry, t):
             acc, inflight = carry
@@ -60,7 +92,7 @@ def pipeline_apply(stage_fn: Callable[[Any, Array], Array],
             x_in = jnp.where(stage == 0, fresh, inflight)
             y = stage_fn(params, x_in)
             # pass to the next stage
-            inflight_next = jax.lax.ppermute(y, axis_name, perm)
+            inflight_next = ring_shift(y, axis_name, size=n_stages)
             # last stage emits microbatch (t - n_stages + 1)
             out_idx = t - (n_stages - 1)
             valid = (out_idx >= 0) & (stage == n_stages - 1)
@@ -78,15 +110,12 @@ def pipeline_apply(stage_fn: Callable[[Any, Array], Array],
                                    jnp.arange(total))
         # broadcast final outputs from the last stage to all stages
         # (ppermute requires unique sources, so mask + psum)
-        acc = jax.lax.psum(
-            jnp.where(stage == n_stages - 1, acc, 0.0), axis_name)
-        return acc
+        return broadcast_from(acc, axis_name, n_stages - 1)
 
     spec_params = jax.tree.map(lambda _: P(axis_name), stage_params)
-    fn = jax.shard_map(
+    fn = compat_shard_map(
         local, mesh=mesh,
         in_specs=(P(axis_name), P()),
         out_specs=P(),
-        check_vma=False,
     )
     return fn(stage_params, x_microbatches)

@@ -1,0 +1,672 @@
+"""Wide placement: one oversized graph edge-partitioned across K executors.
+
+A graph bigger than one device's bucket budget is split into K shards that
+run the existing per-layer dataflow locally and exchange boundary ("halo")
+node features between layers over a device mesh — the multi-queue scale-out
+of FlowGNN's MP units lifted from banks-within-a-device to
+devices-within-a-pool (ROADMAP "shard one oversized graph ACROSS the
+executor pool"; DESIGN.md §10).
+
+Partition rule — **destination ownership**: shard k owns the contiguous
+global node range [cut_k, cut_{k+1}) and *every in-edge of those nodes*, in
+original global edge order. Consequences:
+
+  * every per-destination aggregate (sum / mean / max / min / softmax
+    denominators / degree counts) is **complete** on the owning shard, and
+    accumulates its edges in exactly the single-device order — results are
+    bitwise-identical to the unsharded forward, not merely allclose;
+  * the only cross-shard state is the *feature rows* of remote source
+    nodes (the halo): refreshed once per layer via ring ``ppermute`` steps
+    (distributed/pipeline.py idiom), after which the local edge sweep and
+    the NT epilogue need nothing remote;
+  * the NT side (dense transforms, attention logits) is recomputed locally
+    for halo rows instead of shipped — per-row bitwise-stable on the XLA
+    CPU/TPU paths (models.py gat_layer documents the one reformulation
+    this required).
+
+The general partial-aggregate merge algebra (what a *source*-partitioned
+split would need: sums/counts merged by addition, keyed max/min merged at
+the finite ``-BIG`` neutral, online-softmax ``(m, l)`` carries merged with
+the flash-style rescale) is implemented and unit-tested here as
+:func:`merge_partial_sums`, :func:`merge_partial_extrema` and
+:func:`merge_softmax_carries` — it is the contract boundary-bank partials
+must satisfy, and the wide tests validate it against single-sweep
+aggregation. The shipped planner deliberately never *needs* it for the
+per-layer path (dest-ownership keeps aggregates whole, which is what makes
+the bitwise guarantee possible); the cross-shard reductions that do remain
+(virtual-node pools, the graph readout) run on the gathered full node
+buffer in global order for the same reason.
+
+Shard planning is one numpy pass over the edge stream (O(E + N) plus a
+sort of the boundary senders) — no METIS-style preprocessing, preserving
+the paper's real-time zero-preprocessing claim.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.core.graph import GraphBatch, pad_bucket
+from repro.core.message_passing import (
+    DataflowConfig,
+    DEFAULT_DATAFLOW,
+    PrecomputedGraphStats,
+    precompute_graph_stats,
+)
+from repro.distributed.pipeline import ring_shift
+from repro.distributed.sharding import compat_shard_map
+
+Array = jax.Array
+
+# finite keyed-extrema neutral (mirrors kernels/mp_pipeline.py BIG)
+BIG = 1e30
+
+WIDE_AXIS = "wide"
+
+
+# ---------------------------------------------------------------------------
+# partial-aggregate merge algebra (boundary-bank contract, DESIGN.md §10)
+# ---------------------------------------------------------------------------
+
+def merge_partial_sums(parts: Sequence[Array]) -> Array:
+    """Merge additive partial aggregates (sum / sumsq / count) across shards.
+
+    Left-fold in shard order — the deterministic merge order the contract
+    specifies (floating-point addition does not reassociate, so the order
+    is part of the algebra, not an implementation detail).
+    """
+    out = parts[0]
+    for p in parts[1:]:
+        out = out + p
+    return out
+
+
+def merge_partial_extrema(parts: Sequence[Array], *, kind: str) -> Array:
+    """Merge keyed max/min partial accumulators across shards.
+
+    Partials use the finite ``∓BIG`` neutral for destinations a shard saw
+    no edges for (the keyed formulation of kernels/mp_pipeline.py — never
+    ±inf, so the merge is a plain elementwise extremum and a destination
+    empty on *every* shard still sits at the neutral, to be neutralized by
+    the count/degree validity stream exactly as in ``_derive_kinds``).
+    """
+    if kind not in ("max", "min"):
+        raise ValueError(f"kind must be max|min, got {kind!r}")
+    op = jnp.maximum if kind == "max" else jnp.minimum
+    out = parts[0]
+    for p in parts[1:]:
+        out = op(out, p)
+    return out
+
+
+def merge_softmax_carries(
+    parts: Sequence[Tuple[Array, Array, Array]],
+) -> Tuple[Array, Array, Array]:
+    """Merge per-shard online-softmax carries with the flash-style rescale.
+
+    Each part is ``(m, l, s)`` per destination (and head): the running
+    max of the logits the shard saw, the denominator ``sum(exp(logit - m))``
+    at that max, and the weighted numerator ``sum(exp(logit - m) * v)``.
+    Destinations with no local edges carry ``m = -BIG, l = 0, s = 0``.
+    The merge is exactly the flash-attention combine::
+
+        m'  = max(m_a, m_b)
+        l'  = l_a * exp(m_a - m') + l_b * exp(m_b - m')
+        s'  = s_a * exp(m_a - m') + s_b * exp(m_b - m')
+
+    so a GAT shard needs one local sweep regardless of K, and the epilogue
+    ``s' / max(l', eps)`` happens only after the cross-shard merge.
+    """
+    m, l, s = parts[0]
+    for m_b, l_b, s_b in parts[1:]:
+        m_new = jnp.maximum(m, m_b)
+        r_a = jnp.exp(m - m_new)
+        r_b = jnp.exp(m_b - m_new)
+        l = l * r_a + l_b * r_b
+        if s.ndim == l.ndim + 1:        # per-head values broadcast over D
+            s = s * r_a[..., None] + s_b * r_b[..., None]
+        else:
+            s = s * r_a + s_b * r_b
+        m = m_new
+    return m, l, s
+
+
+def softmax_carry(logits: Array, values: Array, receivers: Array,
+                  num_nodes: int, *,
+                  edge_mask: Optional[Array] = None,
+                  ) -> Tuple[Array, Array, Array]:
+    """One local sweep producing the ``(m, l, s)`` online-softmax carry.
+
+    logits: (E,) or (E, H); values: (E, D) (broadcast over heads when the
+    logits carry one). Masked edges contribute the ``(-BIG, 0, 0)`` neutral.
+    """
+    if edge_mask is None:
+        edge_mask = jnp.ones(logits.shape[0], dtype=bool)
+    lm = edge_mask if logits.ndim == 1 else edge_mask[:, None]
+    neg = jnp.where(lm, logits, -BIG)
+    m = jax.ops.segment_max(neg, receivers, num_segments=num_nodes)
+    m = jnp.maximum(m, -BIG)            # all-masked destinations at neutral
+    e = jnp.where(lm, jnp.exp(logits - m[receivers]), 0.0)
+    l = jax.ops.segment_sum(e, receivers, num_segments=num_nodes)
+    ev = e[..., None] * values[:, None, :] if logits.ndim == 2 else \
+        e[:, None] * values
+    s = jax.ops.segment_sum(ev, receivers, num_segments=num_nodes)
+    return m, l, s
+
+
+# ---------------------------------------------------------------------------
+# shard planner
+# ---------------------------------------------------------------------------
+
+class WidePlanError(ValueError):
+    """The graph cannot be split into K shards within the given budgets."""
+
+
+@dataclass(frozen=True)
+class ShardPlan:
+    """Host-side (numpy) layout of one shard. Local node rows are
+
+        [0, n_own)                          owned nodes (global [lo, lo+n_own))
+        [n_own, n_own_pad)                  dead padding
+        [n_own_pad + (s-1)*h_pad, ... + h)  halo rows received at ring step s
+                                            (from peer (k - s) mod K), sorted
+                                            by global id
+        remaining rows                      dead padding
+    """
+
+    index: int
+    lo: int
+    n_own: int
+    halo_counts: np.ndarray      # (K-1,) real halo rows per ring step
+    halo_ids: Tuple[np.ndarray, ...]   # per step: global ids, sorted
+    send_idx: np.ndarray         # (K-1, h_pad) owned-local rows sent at step s
+    senders: np.ndarray          # (E_k,) local ids, global edge order
+    receivers: np.ndarray        # (E_k,) local ids (owned), global edge order
+    edge_ids: np.ndarray         # (E_k,) global edge indices
+
+
+@dataclass(frozen=True)
+class WideBucket:
+    """The shape key of a compiled wide program.
+
+    Every field is a padded geometry bound — none depends on a specific
+    graph's cut positions or halo membership, so one compiled SPMD program
+    serves every graph whose plan lands in the same bucket (the engine's
+    compile-once-per-bucket property, extended to gangs). The per-graph
+    content (features, edge lists, send tables, gather map, masks,
+    degrees) all flows in as traced inputs.
+    """
+
+    k: int
+    n_own_pad: int
+    h_pad: int
+    n_pad: int
+    e_pad: int
+    node_pad_full: int
+    graph_pad_full: int = 1
+
+
+@dataclass(frozen=True)
+class WidePlan:
+    k: int
+    n_nodes: int
+    n_edges: int
+    n_own_pad: int               # uniform owned-slot count (bucket-rounded)
+    h_pad: int                   # uniform halo slots per ring step (rounded)
+    n_pad: int                   # uniform local node padding (incl. halo)
+    e_pad: int                   # uniform local edge padding
+    node_pad_full: int           # full-graph padding for the readout
+    graph_pad_full: int
+    shards: Tuple[ShardPlan, ...]
+    degrees: np.ndarray          # (n_nodes,) exact global in-degrees (f32)
+    halo_rows_per_layer: int     # total real rows exchanged per layer
+
+    @property
+    def bucket(self) -> WideBucket:
+        return WideBucket(
+            k=self.k, n_own_pad=self.n_own_pad, h_pad=self.h_pad,
+            n_pad=self.n_pad, e_pad=self.e_pad,
+            node_pad_full=self.node_pad_full,
+            graph_pad_full=self.graph_pad_full)
+
+    def halo_bytes_per_layer(self, feat_dim: int, itemsize: int = 4) -> int:
+        return self.halo_rows_per_layer * feat_dim * itemsize
+
+
+def plan_wide(
+    senders: np.ndarray,
+    receivers: np.ndarray,
+    num_nodes: int,
+    *,
+    k: int,
+    node_budget: Optional[int] = None,
+    edge_budget: Optional[int] = None,
+    node_pad_full: Optional[int] = None,
+) -> WidePlan:
+    """Split one raw COO graph into K dest-owned shards + halo tables.
+
+    One pass over the edge stream (degree histogram + per-shard selection)
+    plus a sort of each shard's boundary sender set — no global clustering,
+    keeping the zero-preprocessing serving claim. Cuts balance *in-edges*
+    (the edge sweep is the dominant cost), subject to contiguity.
+
+    Raises :class:`WidePlanError` when any shard exceeds the given
+    node/edge budgets (the caller either raises ``GraphTooLarge`` or
+    retries with a larger K).
+    """
+    if k < 2:
+        raise ValueError(f"wide placement needs k >= 2, got {k}")
+    senders = np.asarray(senders, np.int64)
+    receivers = np.asarray(receivers, np.int64)
+    n, e = int(num_nodes), int(senders.shape[0])
+
+    deg = np.bincount(receivers, minlength=n).astype(np.int64)
+    csum = np.cumsum(deg)
+    # cut after ~i*E/k in-edges; force monotone non-degenerate cuts. Each
+    # shard's owned count is additionally capped at the bucket of
+    # ceil(n/k): an edge-balanced cut that overshoots the node split by
+    # even one row would bucket-round n_own_pad to the NEXT bucket and
+    # double every shard's padded geometry (the lower clamp keeps the
+    # remaining shards feasible under the same cap: k*cap >= n).
+    cap = pad_bucket(-(-n // k))
+    cuts = [0]
+    for i in range(1, k):
+        c = int(np.searchsorted(csum, e * i / k, side="left")) + 1
+        c = min(c, cuts[-1] + cap)
+        c = max(c, n - (k - i) * cap)
+        c = min(max(c, cuts[-1] + 1), n - (k - i))
+        cuts.append(c)
+    cuts.append(n)
+    cuts = np.asarray(cuts, np.int64)
+    owner_of = np.repeat(np.arange(k), np.diff(cuts))      # (n,)
+
+    edge_owner = owner_of[receivers]
+    shards: List[ShardPlan] = []
+    halo_ids_all: List[List[np.ndarray]] = []
+    for kk in range(k):
+        lo, hi = int(cuts[kk]), int(cuts[kk + 1])
+        eidx = np.flatnonzero(edge_owner == kk)            # global edge order
+        snd_g = senders[eidx]
+        # halo grouped by ring step: step s receives from (kk - s) mod k
+        steps = []
+        for s in range(1, k):
+            src = (kk - s) % k
+            sel = owner_of[snd_g] == src
+            steps.append(np.unique(snd_g[sel]))            # sorted global ids
+        halo_ids_all.append(steps)
+        shards.append((lo, hi, eidx, snd_g, steps))        # interim
+
+    n_own = np.diff(cuts).astype(np.int64)
+    h_counts = np.array([[len(st) for st in steps]
+                         for steps in halo_ids_all], np.int64)   # (k, k-1)
+    # every padding bound is bucket-rounded so plans for same-scale graphs
+    # land in the same WideBucket and share one compiled SPMD program
+    # (tile/bank divisibility included)
+    n_own_pad = pad_bucket(int(n_own.max()))
+    h_pad = pad_bucket(int(max(1, h_counts.max())))
+    n_pad = pad_bucket(n_own_pad + (k - 1) * h_pad)
+    e_pad = pad_bucket(int(max(len(sh[2]) for sh in shards)))
+    if node_budget is not None and n_pad > node_budget:
+        raise WidePlanError(
+            f"wide k={k}: shard needs {n_pad} node rows "
+            f"(own {n_own_pad} + halo {(k - 1) * h_pad}) > budget "
+            f"{node_budget}")
+    if edge_budget is not None and e_pad > edge_budget:
+        raise WidePlanError(
+            f"wide k={k}: shard needs {e_pad} edge rows > budget "
+            f"{edge_budget}")
+
+    out: List[ShardPlan] = []
+    for kk in range(k):
+        lo, hi, eidx, snd_g, steps = shards[kk]
+        loc = np.full(n, 0, np.int64)
+        loc[lo:hi] = np.arange(hi - lo)
+        for s, ids in enumerate(steps, start=1):
+            loc[ids] = n_own_pad + (s - 1) * h_pad + np.arange(len(ids))
+        # send table: at step s this shard feeds peer (kk + s) mod k, i.e.
+        # that peer's halo block for source kk — same sorted global order
+        send = np.zeros((k - 1, h_pad), np.int64)
+        for s in range(1, k):
+            dst = (kk + s) % k
+            ids = halo_ids_all[dst][s - 1]     # dst's block s-1 is from kk
+            send[s - 1, :len(ids)] = ids - lo  # owned-local rows
+        out.append(ShardPlan(
+            index=kk, lo=lo, n_own=hi - lo,
+            halo_counts=h_counts[kk].copy(),
+            halo_ids=tuple(steps),
+            send_idx=send.astype(np.int32),
+            senders=loc[snd_g].astype(np.int32),
+            receivers=(receivers[eidx] - lo).astype(np.int32),
+            edge_ids=eidx,
+        ))
+
+    return WidePlan(
+        k=k, n_nodes=n, n_edges=e,
+        n_own_pad=n_own_pad, h_pad=h_pad, n_pad=n_pad, e_pad=e_pad,
+        node_pad_full=(node_pad_full if node_pad_full is not None
+                       else pad_bucket(n)),
+        graph_pad_full=1,
+        shards=tuple(out),
+        degrees=deg.astype(np.float32),
+        halo_rows_per_layer=int(h_counts.sum()),
+    )
+
+
+# ---------------------------------------------------------------------------
+# shard materialization (host -> padded local arrays)
+# ---------------------------------------------------------------------------
+
+def _shard_arrays(plan: WidePlan, sp: ShardPlan, node_feat: np.ndarray,
+                  edge_feat: Optional[np.ndarray],
+                  node_pos: Optional[np.ndarray],
+                  pos_dim: int = 1) -> Dict[str, np.ndarray]:
+    """Padded local arrays for one shard (numpy, ready to stack/ship)."""
+    n_pad, e_pad = plan.n_pad, plan.e_pad
+    f = node_feat.shape[1]
+    if edge_feat is None:
+        edge_feat = np.zeros((plan.n_edges, 1), np.float32)
+    if node_pos is None:
+        node_pos = np.zeros((plan.n_nodes, pos_dim), np.float32)
+
+    nf = np.zeros((n_pad, f), np.float32)
+    npos = np.zeros((n_pad, node_pos.shape[1]), np.float32)
+    nmask = np.zeros((n_pad,), bool)
+    deg = np.zeros((n_pad,), np.float32)
+
+    nf[:sp.n_own] = node_feat[sp.lo:sp.lo + sp.n_own]
+    npos[:sp.n_own] = node_pos[sp.lo:sp.lo + sp.n_own]
+    nmask[:sp.n_own] = True
+    deg[:sp.n_own] = plan.degrees[sp.lo:sp.lo + sp.n_own]
+    for s, ids in enumerate(sp.halo_ids, start=1):
+        r0 = plan.n_own_pad + (s - 1) * plan.h_pad
+        nf[r0:r0 + len(ids)] = node_feat[ids]
+        npos[r0:r0 + len(ids)] = node_pos[ids]
+        nmask[r0:r0 + len(ids)] = True
+        deg[r0:r0 + len(ids)] = plan.degrees[ids]
+
+    ne = len(sp.edge_ids)
+    ef = np.zeros((e_pad, edge_feat.shape[1]), np.float32)
+    ef[:ne] = edge_feat[sp.edge_ids]
+    snd = np.zeros((e_pad,), np.int32)
+    snd[:ne] = sp.senders
+    rcv = np.zeros((e_pad,), np.int32)
+    rcv[:ne] = sp.receivers
+    emask = np.zeros((e_pad,), bool)
+    emask[:ne] = True
+
+    return {
+        "node_feat": nf, "edge_feat": ef, "node_pos": npos,
+        "senders": snd, "receivers": rcv,
+        "node_mask": nmask, "edge_mask": emask,
+        "degrees": deg, "send_idx": sp.send_idx,
+    }
+
+
+def _local_graph(arr: Dict[str, Any], n_pad: int) -> GraphBatch:
+    """Wrap one shard's local arrays as a GraphBatch (single graph, id 0)."""
+    return GraphBatch(
+        node_feat=jnp.asarray(arr["node_feat"]),
+        edge_feat=jnp.asarray(arr["edge_feat"]),
+        senders=jnp.asarray(arr["senders"]),
+        receivers=jnp.asarray(arr["receivers"]),
+        node_mask=jnp.asarray(arr["node_mask"]),
+        edge_mask=jnp.asarray(arr["edge_mask"]),
+        graph_ids=jnp.zeros((n_pad,), jnp.int32),
+        graph_mask=jnp.ones((1,), bool),
+        node_pos=jnp.asarray(arr["node_pos"]),
+    )
+
+
+def _full_meta_graph(plan: WidePlan, pos_dim: int = 1) -> GraphBatch:
+    """Skeleton full-graph batch for the readout (masks/ids only matter)."""
+    n_pad = plan.node_pad_full
+    return GraphBatch(
+        node_feat=jnp.zeros((n_pad, 1), jnp.float32),
+        edge_feat=jnp.zeros((1, 1), jnp.float32),
+        senders=jnp.zeros((1,), jnp.int32),
+        receivers=jnp.zeros((1,), jnp.int32),
+        node_mask=jnp.asarray(np.arange(n_pad) < plan.n_nodes),
+        edge_mask=jnp.zeros((1,), bool),
+        graph_ids=jnp.zeros((n_pad,), jnp.int32),
+        graph_mask=jnp.ones((plan.graph_pad_full,), bool),
+        node_pos=jnp.zeros((n_pad, pos_dim), jnp.float32),
+    )
+
+
+# ---------------------------------------------------------------------------
+# per-model plumbing (encode / per-layer body / stats)
+# ---------------------------------------------------------------------------
+
+def _encode(params, cfg, node_feat: Array) -> Array:
+    from repro.core.models import _dense
+    x = node_feat.astype(cfg.dtype)
+    if cfg.model in ("gcn", "gat"):
+        return x
+    return jax.nn.relu(_dense(params["node_enc"], x))
+
+
+def _make_shard_stats(cfg, graph: GraphBatch, degrees: Array,
+                      ) -> Optional[PrecomputedGraphStats]:
+    """Per-shard stats with exact *global* in-degrees injected.
+
+    Halo rows have no local in-edges, but their degree normalizers (GCN's
+    ``inv_sqrt_deg[senders]``, PNA's scalers) must be the owner's values —
+    the planner's exact integer counts reproduce them bitwise. The DGN
+    directional field is computed from the local edges: dest-ownership
+    makes every per-destination field statistic complete locally.
+    """
+    if cfg.model == "gcn":
+        return precompute_graph_stats(graph, with_self_loop_norm=True,
+                                      degrees=degrees)
+    if cfg.model == "pna":
+        return precompute_graph_stats(graph, pna_delta=cfg.avg_log_degree,
+                                      degrees=degrees)
+    if cfg.model == "dgn":
+        return precompute_graph_stats(graph, with_dgn_field=True,
+                                      degrees=degrees)
+    return None
+
+
+def _layer_body(params, cfg, li: int, graph: GraphBatch, x: Array,
+                dataflow: DataflowConfig,
+                stats: Optional[PrecomputedGraphStats]) -> Array:
+    from repro.core import models as M
+    p = params["layers"][li]
+    last = li == cfg.num_layers - 1
+    if cfg.model == "gcn":
+        return M.gcn_layer(p, graph, x, dataflow, stats, last=last)
+    if cfg.model in ("gin", "gin_vn"):
+        return M._gin_layer(p, graph, x, dataflow, stats)
+    if cfg.model == "gat":
+        return M.gat_layer(p, graph, x, dataflow, stats, last=last)
+    if cfg.model == "pna":
+        return M.pna_layer(p, graph, x, dataflow, stats)
+    if cfg.model == "dgn":
+        return M.dgn_layer(p, graph, x, dataflow, stats)
+    raise KeyError(f"unknown wide model '{cfg.model}'")
+
+
+# ---------------------------------------------------------------------------
+# reference runner (host loop over shards — the oracle for the SPMD path)
+# ---------------------------------------------------------------------------
+
+def wide_forward_reference(params, cfg, plan: WidePlan,
+                           node_feat: np.ndarray,
+                           edge_feat: Optional[np.ndarray] = None,
+                           node_pos: Optional[np.ndarray] = None,
+                           dataflow: DataflowConfig = DEFAULT_DATAFLOW,
+                           ) -> Array:
+    """Run the wide forward as a host Python loop over the K shards.
+
+    Bitwise-identical to :func:`wide_forward_spmd` (same local programs,
+    same exchange schedule) but with the exchanges done by host indexing —
+    runs on a single device, so the in-process parity tests cover all six
+    models without a forced multi-device topology.
+    """
+    from repro.core.models import _readout
+
+    k = plan.k
+    arrs = [_shard_arrays(plan, sp, node_feat, edge_feat, node_pos)
+            for sp in plan.shards]
+    graphs = [_local_graph(a, plan.n_pad) for a in arrs]
+    stats = [_make_shard_stats(cfg, g, jnp.asarray(a["degrees"]))
+             for g, a in zip(graphs, arrs)]
+    xs = [_encode(params, cfg, g.node_feat) for g in graphs]
+
+    full = _full_meta_graph(plan)
+    vn = (jnp.zeros((plan.graph_pad_full, cfg.hidden_dim), cfg.dtype)
+          if cfg.model == "gin_vn" else None)
+
+    def exchange(xs):
+        new = list(xs)
+        for s in range(1, k):
+            for j in range(k):
+                dst = (j + s) % k
+                cnt = int(plan.shards[dst].halo_counts[s - 1])
+                if cnt == 0:
+                    continue
+                rows = xs[j][jnp.asarray(
+                    plan.shards[j].send_idx[s - 1, :cnt])]
+                r0 = plan.n_own_pad + (s - 1) * plan.h_pad
+                new[dst] = new[dst].at[r0:r0 + cnt].set(rows)
+        return new
+
+    def gather_full(xs):
+        xf = jnp.zeros((plan.node_pad_full, xs[0].shape[1]), xs[0].dtype)
+        for kk, sp in enumerate(plan.shards):
+            xf = xf.at[sp.lo:sp.lo + sp.n_own].set(xs[kk][:sp.n_own])
+        return xf
+
+    from repro.core.models import gin_vn_broadcast, gin_vn_update
+    for li in range(cfg.num_layers):
+        if li > 0:
+            xs = exchange(xs)
+        if vn is not None:
+            xs = [gin_vn_broadcast(g, x, vn) for g, x in zip(graphs, xs)]
+        xs = [_layer_body(params, cfg, li, g, x, dataflow, st)
+              for g, x, st in zip(graphs, xs, stats)]
+        if vn is not None and li < cfg.num_layers - 1:
+            vn = gin_vn_update(params["vn_mlps"][li], full,
+                               gather_full(xs), vn)
+    x_full = gather_full(xs)
+    return _readout(params["head"], cfg, full, x_full)
+
+
+# ---------------------------------------------------------------------------
+# SPMD runner (shard_map over a K-device mesh, ring-ppermute halo exchange)
+# ---------------------------------------------------------------------------
+
+def stack_shard_arrays(plan: WidePlan, node_feat: np.ndarray,
+                       edge_feat: Optional[np.ndarray] = None,
+                       node_pos: Optional[np.ndarray] = None,
+                       ) -> Dict[str, np.ndarray]:
+    """Stack all shards' local arrays on a leading K axis for shard_map.
+
+    Besides the per-shard locals this carries the two *replicated*
+    per-graph tables the compiled program needs as traced inputs (so one
+    program per :class:`WideBucket` serves every graph in the bucket):
+    ``full_map`` — global row i of the readout buffer lives at flat
+    all-gather row ``full_map[i]`` — and ``full_node_mask``.
+    """
+    per = [_shard_arrays(plan, sp, node_feat, edge_feat, node_pos)
+           for sp in plan.shards]
+    stacked = {key: np.stack([a[key] for a in per]) for key in per[0]}
+    fmap = np.zeros((plan.node_pad_full,), np.int32)
+    for kk, sp in enumerate(plan.shards):
+        fmap[sp.lo:sp.lo + sp.n_own] = (
+            kk * plan.n_own_pad + np.arange(sp.n_own))
+    fmask = np.arange(plan.node_pad_full) < plan.n_nodes
+    stacked["full_map"] = np.broadcast_to(
+        fmap, (plan.k, plan.node_pad_full)).copy()
+    stacked["full_node_mask"] = np.broadcast_to(
+        fmask, (plan.k, plan.node_pad_full)).copy()
+    return stacked
+
+
+def wide_mesh(devices: Sequence[Any]) -> jax.sharding.Mesh:
+    """A 1-D mesh over the gang's devices (axis name 'wide')."""
+    import numpy as _np
+    return jax.sharding.Mesh(_np.asarray(list(devices)), (WIDE_AXIS,))
+
+
+def build_wide_forward(cfg, bucket, mesh,
+                       dataflow: DataflowConfig = DEFAULT_DATAFLOW):
+    """Compile the SPMD wide forward: ``fn(params, stacked) -> out``.
+
+    ``bucket`` is a :class:`WideBucket` (or a :class:`WidePlan`, whose
+    bucket is taken) — only padded geometry is baked into the program;
+    everything graph-specific arrives through ``stacked``
+    (:func:`stack_shard_arrays` output, device-shardable on the leading K
+    axis), so the engine compiles once per bucket and reuses the program
+    for every wide graph landing in it. The result is replicated (every
+    gang member holds the full readout); callers take it from any device.
+    """
+    from repro.core.models import _readout, gin_vn_broadcast, gin_vn_update
+
+    b: WideBucket = getattr(bucket, "bucket", bucket)
+    k = b.k
+    n_layers = cfg.num_layers
+
+    def local(params, arr):
+        arr = {key: v[0] for key, v in arr.items()}        # drop shard dim
+        graph = GraphBatch(
+            node_feat=arr["node_feat"], edge_feat=arr["edge_feat"],
+            senders=arr["senders"], receivers=arr["receivers"],
+            node_mask=arr["node_mask"], edge_mask=arr["edge_mask"],
+            graph_ids=jnp.zeros((b.n_pad,), jnp.int32),
+            graph_mask=jnp.ones((1,), bool),
+            node_pos=arr["node_pos"])
+        full = GraphBatch(
+            node_feat=jnp.zeros((b.node_pad_full, 1), jnp.float32),
+            edge_feat=jnp.zeros((1, 1), jnp.float32),
+            senders=jnp.zeros((1,), jnp.int32),
+            receivers=jnp.zeros((1,), jnp.int32),
+            node_mask=arr["full_node_mask"],
+            edge_mask=jnp.zeros((1,), bool),
+            graph_ids=jnp.zeros((b.node_pad_full,), jnp.int32),
+            graph_mask=jnp.ones((b.graph_pad_full,), bool),
+            node_pos=jnp.zeros((b.node_pad_full, 1), jnp.float32))
+        stats = _make_shard_stats(cfg, graph, arr["degrees"])
+        x = _encode(params, cfg, graph.node_feat)
+        vn = (jnp.zeros((b.graph_pad_full, cfg.hidden_dim), cfg.dtype)
+              if cfg.model == "gin_vn" else None)
+
+        def exchange(x):
+            # ring halo refresh: at step s every shard feeds the peer s
+            # hops ahead and fills halo block s-1 (rows from s hops back)
+            for s in range(1, k):
+                rows = x[arr["send_idx"][s - 1]]           # (h_pad, D)
+                rows = ring_shift(rows, WIDE_AXIS, steps=s, size=k)
+                x = jax.lax.dynamic_update_slice(
+                    x, rows, (b.n_own_pad + (s - 1) * b.h_pad, 0))
+            return x
+
+        def gather_full(x):
+            own = jax.lax.all_gather(
+                x[:b.n_own_pad], WIDE_AXIS)                # (K, own_pad, D)
+            flat = own.reshape(k * b.n_own_pad, -1)
+            # global row i lives at flat row full_map[i]; pad rows -> 0
+            xf = flat[arr["full_map"]]
+            return jnp.where(full.node_mask[:, None], xf, 0.0)
+
+        for li in range(n_layers):
+            if li > 0:
+                x = exchange(x)
+            xb = x if vn is None else gin_vn_broadcast(graph, x, vn)
+            x = _layer_body(params, cfg, li, graph, xb, dataflow, stats)
+            if vn is not None and li < n_layers - 1:
+                vn = gin_vn_update(params["vn_mlps"][li], full,
+                                   gather_full(x), vn)
+        return _readout(params["head"], cfg, full, gather_full(x))
+
+    fn = compat_shard_map(
+        local, mesh=mesh,
+        in_specs=(P(), P(WIDE_AXIS)),
+        out_specs=P())
+    return jax.jit(fn)

@@ -3,7 +3,7 @@
 On TPU the kernels run compiled; everywhere else they run in interpret mode
 (the kernel body executed step-by-step on CPU), which is how this repo's
 tests validate them. The pure-JAX fallbacks in ref.py are what the dry-run
-lowers for GSPMD compilation (see DESIGN.md §11).
+lowers for GSPMD compilation (see DESIGN.md §12).
 """
 
 from __future__ import annotations

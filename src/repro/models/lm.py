@@ -45,6 +45,23 @@ def lm_param_defs(cfg: ModelConfig) -> Dict[str, Any]:
     return defs
 
 
+@jax.custom_jvp
+def _diff_barrier(args):
+    """``optimization_barrier`` with a defined derivative.
+
+    The barrier is a pure scheduling hint (keep the per-chunk unembedding
+    matmuls apart); some jax versions ship no differentiation rule for it,
+    which breaks the training path. The JVP is the identity — tangents skip
+    the barrier, primals keep it.
+    """
+    return jax.lax.optimization_barrier(args)
+
+
+@_diff_barrier.defjvp
+def _diff_barrier_jvp(primals, tangents):
+    return _diff_barrier(primals[0]), tangents[0]
+
+
 def _onehot_lookup(table: Array, tokens: Array, cfg: ModelConfig, rules,
                    mesh, chunks: int = 8) -> Array:
     """Embedding lookup from a vocab-sharded table as a chunked one-hot
@@ -196,7 +213,7 @@ def lm_loss(params, batch: Dict[str, Array], cfg: ModelConfig, *,
                         mask[:, i * sc:(i + 1) * sc])
         nll_sum, z_sum = nll_sum + a, z_sum + z
         if i < nc - 1:
-            cur_x, nll_sum, z_sum = jax.lax.optimization_barrier(
+            cur_x, nll_sum, z_sum = _diff_barrier(
                 (cur_x, nll_sum, z_sum))
 
     denom = jnp.maximum(mask.sum(), 1.0)

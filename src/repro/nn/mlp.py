@@ -8,7 +8,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
-from repro.distributed.sharding import (ParamDef, ShardingRules,
+from repro.distributed.sharding import (ParamDef, ShardingRules, compat_shard_map,
                                         logical_constraint)
 from repro.nn.layers import activation
 
@@ -75,7 +75,6 @@ def _mlp_sp_shardmap(params: Dict[str, Array], x: Array, cfg: ModelConfig,
 
     in_specs = (P(batch_ax, model_ax, None),
                 P(ef_ax, model_ax), P(ef_ax, model_ax), P(model_ax, ef_ax))
-    fn = jax.shard_map(local, mesh=mesh, in_specs=in_specs,
-                       out_specs=P(batch_ax, model_ax, None),
-                       check_vma=False)
+    fn = compat_shard_map(local, mesh=mesh, in_specs=in_specs,
+                          out_specs=P(batch_ax, model_ax, None))
     return fn(x, params["w_gate"], params["w_up"], params["w_down"])

@@ -33,7 +33,8 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import ModelConfig
-from repro.distributed.sharding import ParamDef, ShardingRules
+from repro.distributed.sharding import (ParamDef, ShardingRules,
+                                        compat_shard_map)
 from repro.nn.layers import activation
 
 Array = jax.Array
@@ -177,6 +178,6 @@ def moe_ffn(params: Dict[str, Array], x: Array, cfg: ModelConfig, *,
         P(model_ax, ef_ax, None),                    # wd
     )
     out_specs = (P(batch_ax, None, None), P())
-    fn = jax.shard_map(local_fn, mesh=mesh, in_specs=in_specs,
-                       out_specs=out_specs, check_vma=False)
+    fn = compat_shard_map(local_fn, mesh=mesh, in_specs=in_specs,
+                          out_specs=out_specs)
     return fn(x, params["router"], params["wg"], params["wu"], params["wd"])

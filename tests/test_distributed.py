@@ -117,7 +117,8 @@ def test_pipeline_parallel_matches_sequential():
     run_with_devices("""
 import jax, numpy as np, jax.numpy as jnp
 from repro.distributed.pipeline import pipeline_apply
-mesh = jax.make_mesh((2,), ('pod',), axis_types=(jax.sharding.AxisType.Auto,))
+from repro.distributed.sharding import compat_make_mesh
+mesh = compat_make_mesh((2,), ('pod',))
 rng = np.random.default_rng(0)
 n_stages, d = 2, 16
 ws = jnp.asarray(rng.normal(size=(n_stages, d, d)).astype(np.float32) * 0.3)
@@ -133,6 +134,109 @@ for s in range(n_stages):
 np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-5, rtol=1e-5)
 print('OK')
 """, n=2)
+
+
+RING_COMMON = """
+import jax, numpy as np, jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+from repro.distributed.pipeline import ring_perm, ring_shift, broadcast_from
+from repro.distributed.sharding import compat_make_mesh, compat_shard_map
+mesh = compat_make_mesh((4,), ('ring',))
+"""
+
+
+def test_ring_perm_pairs():
+    from repro.distributed.pipeline import ring_perm
+    assert ring_perm(4) == [(0, 1), (1, 2), (2, 3), (3, 0)]
+    assert ring_perm(4, steps=2) == [(0, 2), (1, 3), (2, 0), (3, 1)]
+    assert ring_perm(3, steps=5) == [(0, 2), (1, 0), (2, 1)]
+    # a permutation: unique sources AND unique destinations
+    for size in (2, 3, 4, 7):
+        for steps in (1, 2, size - 1, size + 3):
+            pairs = ring_perm(size, steps=steps)
+            assert len({s for s, _ in pairs}) == size
+            assert len({d for _, d in pairs}) == size
+
+
+def test_ring_shift_all_step_counts():
+    # device i holds value i; after a shift by s, device i holds (i-s)%4.
+    # Every s in [1, k) is exercised — the halo exchange uses all of them.
+    run_with_devices(RING_COMMON + """
+vals = jnp.arange(4, dtype=jnp.float32).reshape(4, 1)
+for s in range(1, 4):
+    fn = compat_shard_map(
+        lambda x: ring_shift(x, 'ring', steps=s),
+        mesh=mesh, in_specs=(P('ring'),), out_specs=P('ring'))
+    got = np.asarray(jax.jit(fn)(vals)).ravel()
+    want = np.asarray([(i - s) % 4 for i in range(4)], np.float32)
+    np.testing.assert_array_equal(got, want)
+print('OK')
+""", n=4)
+
+
+def test_ring_shift_uneven_payload_roundtrip():
+    # shifting k times in unequal hops (1 then k-1) is the identity
+    run_with_devices(RING_COMMON + """
+rng = np.random.default_rng(0)
+vals = jnp.asarray(rng.normal(size=(4, 3, 5)).astype(np.float32))
+def roundtrip(x):
+    y = ring_shift(x, 'ring', steps=1)
+    return ring_shift(y, 'ring', steps=3)
+fn = compat_shard_map(roundtrip, mesh=mesh,
+                      in_specs=(P('ring'),), out_specs=P('ring'))
+np.testing.assert_array_equal(np.asarray(jax.jit(fn)(vals)),
+                              np.asarray(vals))
+print('OK')
+""", n=4)
+
+
+def test_broadcast_from_mask_psum():
+    # one-to-all is not a permutation (ppermute needs unique sources);
+    # broadcast_from's mask+psum must deliver src's value everywhere,
+    # including from a traced src index
+    run_with_devices(RING_COMMON + """
+vals = jnp.arange(4, dtype=jnp.float32).reshape(4, 1) + 10.0
+for src in range(4):
+    fn = compat_shard_map(
+        lambda x: broadcast_from(x, 'ring', src),
+        mesh=mesh, in_specs=(P('ring'),), out_specs=P('ring'))
+    got = np.asarray(jax.jit(fn)(vals)).ravel()
+    np.testing.assert_array_equal(got, np.full(4, 10.0 + src, np.float32))
+# traced src (the pipeline uses axis_size - 1)
+def from_last(x):
+    last = jax.lax.psum(1, 'ring') - 1
+    return broadcast_from(x, 'ring', last)
+fn = compat_shard_map(from_last, mesh=mesh,
+                      in_specs=(P('ring'),), out_specs=P('ring'))
+np.testing.assert_array_equal(np.asarray(jax.jit(fn)(vals)).ravel(),
+                              np.full(4, 13.0, np.float32))
+print('OK')
+""", n=4)
+
+
+def test_pipeline_uneven_stage_counts():
+    # n_stages does not divide n_micro (3 microbatches, 4 stages): the
+    # fill/drain schedule must still emit every microbatch exactly once
+    run_with_devices("""
+import jax, numpy as np, jax.numpy as jnp
+from repro.distributed.pipeline import pipeline_apply
+from repro.distributed.sharding import compat_make_mesh
+mesh = compat_make_mesh((4,), ('pod',))
+rng = np.random.default_rng(1)
+n_stages, d = 4, 8
+ws = jnp.asarray(rng.normal(size=(n_stages, d, d)).astype(np.float32) * 0.3)
+
+def stage_fn(w, x):
+    return jnp.tanh(x @ w)
+
+xs = jnp.asarray(rng.normal(size=(3, 4, d)).astype(np.float32))
+out = pipeline_apply(stage_fn, ws, xs, mesh=mesh, axis_name='pod')
+ref = xs
+for s in range(n_stages):
+    ref = jax.vmap(lambda x: stage_fn(ws[s], x))(ref)
+np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-5, rtol=1e-5)
+print('OK')
+""", n=4)
 
 
 def test_elastic_restore_across_meshes(tmp_path):
@@ -164,7 +268,8 @@ def test_compressed_dp_training_converges():
 import jax, numpy as np, jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.optim.compression import ef_compressed_psum
-mesh = jax.make_mesh((4,), ('pod',), axis_types=(jax.sharding.AxisType.Auto,))
+from repro.distributed.sharding import compat_make_mesh, compat_shard_map
+mesh = compat_make_mesh((4,), ('pod',))
 rng = np.random.default_rng(0)
 X = jnp.asarray(rng.normal(size=(64, 8)).astype(np.float32))
 true_w = jnp.asarray(rng.normal(size=(8,)).astype(np.float32))
@@ -179,10 +284,9 @@ def step(w, err, xb, yb):
         g = local_grad(w, xb, yb)
         g_sum, e2 = ef_compressed_psum(g, e[0], 'pod')
         return w - 0.05 * g_sum / 4, e2[None]
-    return jax.shard_map(f, mesh=mesh,
-                         in_specs=(P(), P('pod'), P('pod'), P('pod')),
-                         out_specs=(P(), P('pod')), check_vma=False)(
-                             w, err, xb, yb)
+    return compat_shard_map(f, mesh=mesh,
+                            in_specs=(P(), P('pod'), P('pod'), P('pod')),
+                            out_specs=(P(), P('pod')))(w, err, xb, yb)
 
 w = jnp.zeros(8); err = jnp.zeros((4, 8))   # per-pod error feedback state
 for i in range(200):

@@ -88,8 +88,8 @@ def test_error_feedback_reduces_bias():
     # single-participant psum == identity; simulate via axis of size 1
     import jax
     from jax.sharding import PartitionSpec as P
-    mesh = jax.make_mesh((1,), ("p",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    from repro.distributed.sharding import compat_make_mesh, compat_shard_map
+    mesh = compat_make_mesh((1,), ("p",))
 
     def run(with_ef):
         err = jnp.zeros(32)
@@ -100,9 +100,9 @@ def test_error_feedback_reduces_bias():
             def f(x, e):
                 return ef_compressed_psum(x, e, "p")
 
-            out, new_err = jax.shard_map(
+            out, new_err = compat_shard_map(
                 f, mesh=mesh, in_specs=(P(), P()),
-                out_specs=(P(), P()), check_vma=False)(
+                out_specs=(P(), P()))(
                     xj, err if with_ef else jnp.zeros(32))
             if with_ef:
                 err = new_err

@@ -1,0 +1,435 @@
+"""Wide placement (DESIGN.md §10): edge-partitioned serving of one
+oversized graph across a gang of executors.
+
+In-process tests cover the merge algebra (the boundary-bank contract),
+the O(E) shard planner's layout invariants, the host-loop reference
+runner, and the ``GraphTooLarge`` admission gate. Multi-device tests run
+in subprocesses with 4 forced host devices (``run_with_devices``): SPMD
+parity against the single-device forward for all six paper models at
+K ∈ {2, 4}, one edge pass per layer per shard under the forced Pallas
+kernel, and the engine's gang scheduling end to end.
+
+Parity oracle: the *unrolled* single-device forward
+(``DataflowConfig(scan_layers=False)``). Scan and unrolled programs
+compute the same per-layer op sequence but sit in different XLA fusion
+contexts, which costs ~1 ulp — the wide program unrolls, so it is
+compared against the unrolled oracle, where GIN/GIN-VN/GCN/GAT are
+bitwise and PNA/DGN are within 1-2 ulp (fusion-context difference in
+their multi-branch epilogues).
+"""
+
+import numpy as np
+import pytest
+
+jax = pytest.importorskip("jax")
+import jax.numpy as jnp  # noqa: E402
+
+from conftest import run_with_devices  # noqa: E402
+
+from repro.core import models as M  # noqa: E402
+from repro.core.errors import GraphTooLarge  # noqa: E402
+from repro.core.graph import build_graph_batch, pad_bucket  # noqa: E402
+from repro.core.message_passing import DataflowConfig  # noqa: E402
+from repro.data.graphs import mesh_like  # noqa: E402
+from repro.distributed import wide as W  # noqa: E402
+
+
+def _mesh_graph(n=600, seed=0, node_dim=8, edge_dim=1):
+    return next(mesh_like(seed=seed, n_graphs=1, n_nodes=n,
+                          node_dim=node_dim, edge_dim=edge_dim))
+
+
+# ---------------------------------------------------------------------------
+# merge algebra (unit-level contract)
+# ---------------------------------------------------------------------------
+
+def test_merge_partial_sums_is_left_fold(rng):
+    parts = [jnp.asarray(rng.normal(size=(5, 3)).astype(np.float32))
+             for _ in range(4)]
+    got = W.merge_partial_sums(parts)
+    want = ((parts[0] + parts[1]) + parts[2]) + parts[3]
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_merge_partial_extrema_neutral(rng):
+    # a destination with no edges on some shards sits at the -/+BIG
+    # neutral there and must not perturb the merged extremum
+    a = jnp.asarray([[1.0, -W.BIG], [-W.BIG, 2.0]], jnp.float32)
+    b = jnp.asarray([[0.5, 3.0], [-W.BIG, -W.BIG]], jnp.float32)
+    mx = np.asarray(W.merge_partial_extrema([a, b], kind="max"))
+    np.testing.assert_array_equal(
+        mx, np.asarray([[1.0, 3.0], [-W.BIG, 2.0]], np.float32))
+    mn = np.asarray(W.merge_partial_extrema([-a, -b], kind="min"))
+    np.testing.assert_array_equal(
+        mn, np.asarray([[-1.0, -3.0], [W.BIG, -2.0]], np.float32))
+    with pytest.raises(ValueError):
+        W.merge_partial_extrema([a, b], kind="mean")
+
+
+def test_merge_softmax_carries_matches_full_softmax(rng):
+    # K partial (m, l, s) carries merged flash-style == softmax over the
+    # union of every shard's edges
+    n, d, k = 6, 4, 3
+    logits, values, recv = [], [], []
+    for _ in range(k):
+        e = 17
+        logits.append(jnp.asarray(rng.normal(size=e).astype(np.float32)))
+        values.append(jnp.asarray(
+            rng.normal(size=(e, d)).astype(np.float32)))
+        recv.append(jnp.asarray(rng.integers(0, n, size=e), jnp.int32))
+    parts = [W.softmax_carry(lg, v, r, n)
+             for lg, v, r in zip(logits, values, recv)]
+    m, l, s = W.merge_softmax_carries(parts)
+    got = np.asarray(s / jnp.maximum(l, 1e-16)[:, None])
+
+    all_lg = np.concatenate([np.asarray(x) for x in logits])
+    all_v = np.concatenate([np.asarray(x) for x in values])
+    all_r = np.concatenate([np.asarray(x) for x in recv])
+    want = np.zeros((n, d), np.float32)
+    for i in range(n):
+        sel = all_r == i
+        if not sel.any():
+            continue
+        w = np.exp(all_lg[sel] - all_lg[sel].max())
+        want[i] = (w[:, None] * all_v[sel]).sum(0) / w.sum()
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+
+def test_softmax_carry_masked_edges_are_neutral(rng):
+    e, n, d = 12, 4, 3
+    lg = jnp.asarray(rng.normal(size=e).astype(np.float32))
+    v = jnp.asarray(rng.normal(size=(e, d)).astype(np.float32))
+    r = jnp.asarray(rng.integers(0, n, size=e), jnp.int32)
+    mask = jnp.asarray(rng.random(e) < 0.5)
+    m1, l1, s1 = W.softmax_carry(lg, v, r, n, edge_mask=mask)
+    keep = np.asarray(mask)
+    m2, l2, s2 = W.softmax_carry(lg[keep], v[keep], r[keep], n)
+    np.testing.assert_allclose(np.asarray(l1), np.asarray(l2),
+                               rtol=1e-6, atol=1e-7)
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2),
+                               rtol=1e-6, atol=1e-7)
+
+
+# ---------------------------------------------------------------------------
+# shard planner invariants
+# ---------------------------------------------------------------------------
+
+def test_plan_dest_ownership_and_halo_layout():
+    g = _mesh_graph(n=500, seed=1)
+    n = g.node_feat.shape[0]
+    for k in (2, 4):
+        plan = W.plan_wide(g.senders, g.receivers, n, k=k)
+        covered = np.zeros(g.senders.shape[0], bool)
+        for sp in plan.shards:
+            # dest ownership: every edge of the shard targets an owned node
+            glob_recv = sp.receivers.astype(np.int64) + sp.lo
+            assert glob_recv.min() >= sp.lo
+            assert glob_recv.max() < sp.lo + sp.n_own
+            np.testing.assert_array_equal(glob_recv,
+                                          g.receivers[sp.edge_ids])
+            # edges stay in global edge order (accumulation-order parity)
+            assert (np.diff(sp.edge_ids) > 0).all()
+            assert not covered[sp.edge_ids].any()
+            covered[sp.edge_ids] = True
+            # senders resolve to the right global node through the local
+            # row layout: owned rows map back via lo, halo rows via the
+            # per-step sorted halo id tables
+            row_to_global = np.full(plan.n_pad, -1, np.int64)
+            row_to_global[:sp.n_own] = np.arange(sp.lo, sp.lo + sp.n_own)
+            for s, ids in enumerate(sp.halo_ids, start=1):
+                base = plan.n_own_pad + (s - 1) * plan.h_pad
+                row_to_global[base:base + len(ids)] = ids
+            np.testing.assert_array_equal(row_to_global[sp.senders],
+                                          g.senders[sp.edge_ids])
+        assert covered.all()   # every edge owned by exactly one shard
+
+
+def test_plan_send_tables_feed_the_right_halo():
+    g = _mesh_graph(n=400, seed=2)
+    n = g.node_feat.shape[0]
+    plan = W.plan_wide(g.senders, g.receivers, n, k=4)
+    k = plan.k
+    for kk, sp in enumerate(plan.shards):
+        for s in range(1, k):
+            # at ring step s, shard kk's halo block s-1 holds rows from
+            # peer (kk - s) mod k, in the order that peer's send table
+            # emits them
+            src = plan.shards[(kk - s) % k]
+            ids = sp.halo_ids[s - 1]
+            sent = src.send_idx[s - 1][:len(ids)].astype(np.int64) + src.lo
+            np.testing.assert_array_equal(sent, ids)
+
+
+def test_plan_bucket_rounding_shares_programs():
+    # same-scale graphs land in the same WideBucket (compile-once)
+    g1, g2 = _mesh_graph(n=590, seed=3), _mesh_graph(n=640, seed=4)
+    p1 = W.plan_wide(g1.senders, g1.receivers, 590, k=4)
+    p2 = W.plan_wide(g2.senders, g2.receivers, 640, k=4)
+    assert p1.bucket == p2.bucket
+    # and the owned-node cap keeps n_own_pad at the bucket of ceil(n/k)
+    assert p1.n_own_pad == pad_bucket(-(-590 // 4))
+
+
+def test_plan_budget_rejection():
+    g = _mesh_graph(n=500, seed=5)
+    with pytest.raises(W.WidePlanError):
+        W.plan_wide(g.senders, g.receivers, 500, k=2, node_budget=64)
+    with pytest.raises(W.WidePlanError):
+        W.plan_wide(g.senders, g.receivers, 500, k=2, edge_budget=64)
+    with pytest.raises(ValueError):
+        W.plan_wide(g.senders, g.receivers, 500, k=1)
+
+
+def test_halo_accounting():
+    g = _mesh_graph(n=500, seed=6)
+    plan = W.plan_wide(g.senders, g.receivers, 500, k=4)
+    want = sum(int(sp.halo_counts.sum()) for sp in plan.shards)
+    assert plan.halo_rows_per_layer == want
+    assert plan.halo_bytes_per_layer(64) == want * 64 * 4
+    # locality-structured graph: the halo is a sliver of the node set
+    assert plan.halo_rows_per_layer < 500 // 4
+
+
+# ---------------------------------------------------------------------------
+# host-loop reference runner (in-process, no devices needed)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("model", ["gin", "gcn", "gat"])
+def test_wide_reference_matches_single_device(model):
+    g = _mesh_graph(n=300, seed=7, node_dim=9, edge_dim=3)
+    n, e = g.node_feat.shape[0], g.senders.shape[0]
+    cfg = M.PAPER_GNN_CONFIGS[model].replace(num_layers=3, hidden_dim=16)
+    init = getattr(M, f"{model}_init")
+    apply = getattr(M, f"{model}_apply")
+    params = init(jax.random.PRNGKey(0), cfg)
+    df = DataflowConfig(scan_layers=False)
+    batch = build_graph_batch(g.node_feat, g.senders, g.receivers,
+                              edge_feat=g.edge_feat,
+                              node_pad=pad_bucket(n), edge_pad=pad_bucket(e),
+                              node_pos=g.node_pos)
+    ref = np.asarray(jax.jit(
+        lambda p, b: apply(p, b, cfg, df))(params, batch))
+    plan = W.plan_wide(g.senders, g.receivers, n, k=3)
+    got = np.asarray(W.wide_forward_reference(
+        params, cfg, plan, g.node_feat, edge_feat=g.edge_feat,
+        node_pos=g.node_pos, dataflow=df))
+    np.testing.assert_allclose(got, ref, rtol=1e-5, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# admission gate (single-device pool is enough)
+# ---------------------------------------------------------------------------
+
+def test_graph_too_large_without_wide():
+    from repro.core.engine import GraphStreamEngine
+    cfg = M.GNNConfig(model="gin", num_layers=2, hidden_dim=8,
+                      node_feat_dim=8, edge_feat_dim=1, out_dim=2)
+    params = M.gin_init(jax.random.PRNGKey(0), cfg)
+    g = _mesh_graph(n=200, seed=8)
+    with GraphStreamEngine(cfg, params, buckets=(32, 64)) as eng:
+        with pytest.raises(GraphTooLarge) as exc_info:
+            eng.process(g.node_feat, g.senders, g.receivers, g.edge_feat)
+        assert "wide=True" in str(exc_info.value)
+        assert eng.stats.invalid_rejects == 1
+        # in-budget traffic is unaffected
+        out = eng.process(g.node_feat[:40], g.senders[:60] % 40,
+                          g.receivers[:60] % 40, g.edge_feat[:60])
+        assert np.all(np.isfinite(out))
+
+
+def test_wide_needs_a_big_enough_pool():
+    from repro.core.engine import GraphStreamEngine
+    cfg = M.GNNConfig(model="gin", num_layers=2, hidden_dim=8,
+                      node_feat_dim=8, edge_feat_dim=1, out_dim=2)
+    params = M.gin_init(jax.random.PRNGKey(0), cfg)
+    with pytest.raises(ValueError):
+        GraphStreamEngine(cfg, params, wide=True,
+                          wide_k=2 + len(jax.devices()))
+
+
+def test_autotune_fingerprint_has_wide_component(tmp_path):
+    from repro.core.engine import GraphStreamEngine
+    cfg = M.GNNConfig(model="gin", num_layers=2, hidden_dim=8,
+                      node_feat_dim=8, edge_feat_dim=1, out_dim=2)
+    params = M.gin_init(jax.random.PRNGKey(0), cfg)
+    assert GraphStreamEngine.AUTOTUNE_CACHE_SCHEMA == 3
+    with GraphStreamEngine(cfg, params, buckets=(32, 64)) as eng:
+        assert eng._cache_fingerprint().endswith("@wide1")
+
+
+# ---------------------------------------------------------------------------
+# multi-device: SPMD parity, edge passes, engine gang scheduling
+# ---------------------------------------------------------------------------
+
+WIDE_COMMON = """
+import jax, numpy as np, jax.numpy as jnp
+from repro.core import models as M
+from repro.core.graph import build_graph_batch, pad_bucket
+from repro.core.message_passing import DataflowConfig
+from repro.data.graphs import mesh_like
+from repro.distributed import wide as W
+
+g = next(mesh_like(seed=11, n_graphs=1, n_nodes=300, node_dim=9, edge_dim=3))
+n, e = g.node_feat.shape[0], g.senders.shape[0]
+df = DataflowConfig(scan_layers=False)
+"""
+
+
+def test_spmd_parity_all_models_k2_k4():
+    # every paper model, K in {2, 4}, against the unrolled single-device
+    # forward: bitwise for GIN/GIN-VN/GCN/GAT, <= 2 ulp for PNA/DGN
+    run_with_devices(WIDE_COMMON + """
+for name in ("gin", "gin_vn", "gcn", "gat", "pna", "dgn"):
+    cfg = M.PAPER_GNN_CONFIGS[name].replace(num_layers=3)
+    init = getattr(M, name + "_init")
+    apply = getattr(M, name + "_apply")
+    params = init(jax.random.PRNGKey(0), cfg)
+    batch = build_graph_batch(g.node_feat, g.senders, g.receivers,
+                              edge_feat=g.edge_feat, node_pad=pad_bucket(n),
+                              edge_pad=pad_bucket(e), node_pos=g.node_pos)
+    ref = np.asarray(jax.jit(lambda p, b: apply(p, b, cfg, df))(params, batch))
+    for k in (2, 4):
+        plan = W.plan_wide(g.senders, g.receivers, n, k=k)
+        fwd = W.build_wide_forward(cfg, plan, W.wide_mesh(jax.devices()[:k]), df)
+        arrs = W.stack_shard_arrays(plan, g.node_feat, edge_feat=g.edge_feat,
+                                    node_pos=g.node_pos)
+        out = np.asarray(fwd(params, arrs))
+        if name in ("pna", "dgn"):
+            assert np.allclose(out, ref, rtol=1e-6, atol=1e-6), (name, k)
+        else:
+            assert np.array_equal(out, ref), (
+                name, k, float(np.abs(out - ref).max()))
+print('OK')
+""", n=4, timeout=560)
+
+
+def test_forced_kernel_one_edge_pass_per_layer_per_shard():
+    # under the forced Pallas pipeline kernel the wide program still makes
+    # exactly one pass over the edges per layer per shard (DGN adds its
+    # two hoisted field-stat sweeps; PNA's degrees are injected, so its
+    # stats sweep disappears) — and the forced-kernel numerics stay close
+    run_with_devices(WIDE_COMMON + """
+from repro.core import message_passing as mp
+from repro.core.message_passing import count_edge_passes
+
+expected = {"gin": 3, "gcn": 3, "gat": 3, "pna": 3, "dgn": 5}
+mp._FORCE_PIPELINE_KERNEL = True
+try:
+    for name, want in expected.items():
+        cfg = M.PAPER_GNN_CONFIGS[name].replace(num_layers=3)
+        dfk = DataflowConfig(scan_layers=False, impl="fused_layer")
+        init = getattr(M, name + "_init")
+        apply = getattr(M, name + "_apply")
+        params = init(jax.random.PRNGKey(0), cfg)
+        plan = W.plan_wide(g.senders, g.receivers, n, k=4)
+        fwd = W.build_wide_forward(cfg, plan, W.wide_mesh(jax.devices()), dfk)
+        arrs = W.stack_shard_arrays(plan, g.node_feat, edge_feat=g.edge_feat,
+                                    node_pos=g.node_pos)
+        with count_edge_passes() as ps:
+            jax.eval_shape(fwd, params, arrs)
+        assert ps.passes == want, (name, ps.passes, want)
+        out = np.asarray(fwd(params, arrs))
+        batch = build_graph_batch(g.node_feat, g.senders, g.receivers,
+                                  edge_feat=g.edge_feat, node_pad=pad_bucket(n),
+                                  edge_pad=pad_bucket(e), node_pos=g.node_pos)
+        ref = np.asarray(jax.jit(
+            lambda p, b: apply(p, b, cfg, df))(params, batch))
+        assert np.allclose(out, ref, rtol=1e-4, atol=1e-4), name
+finally:
+    mp._FORCE_PIPELINE_KERNEL = False
+print('OK')
+""", n=4, timeout=560)
+
+
+def test_engine_gang_serves_oversized_graph():
+    # a graph ~2x one executor's bucket budget serves on a 4-device pool,
+    # bitwise vs the unrolled single-device forward; narrow traffic flows
+    # on the same engine, and one wide program serves both size classes
+    run_with_devices("""
+import jax, numpy as np
+from repro.core import models as M
+from repro.core.engine import GraphStreamEngine
+from repro.core.errors import GraphTooLarge
+from repro.core.graph import build_graph_batch, pad_bucket
+from repro.core.message_passing import DataflowConfig
+from repro.data.graphs import mesh_like
+
+cfg = M.GNNConfig(model="gin", num_layers=3, hidden_dim=16,
+                  node_feat_dim=8, edge_feat_dim=1, out_dim=4)
+params = M.gin_init(jax.random.PRNGKey(0), cfg)
+df = DataflowConfig(scan_layers=False)
+model = M.make_gnn(cfg)
+
+def oracle(nf, snd, rcv, ef):
+    b = build_graph_batch(nf, snd, rcv, edge_feat=ef,
+                          node_pad=pad_bucket(nf.shape[0]),
+                          edge_pad=pad_bucket(snd.shape[0]))
+    return np.asarray(jax.jit(
+        lambda p, g: model.apply(p, g, cfg, df))(params, b))
+
+eng = GraphStreamEngine(cfg, params, buckets=(32, 64, 128, 256, 512),
+                        wide=True, wide_k=4, dataflow=df)
+futs, graphs = [], []
+for i in range(5):
+    g = next(mesh_like(seed=20 + i, n_graphs=1,
+                       n_nodes=900 + 80 * (i % 2), node_dim=8, edge_dim=1))
+    graphs.append(g)
+    futs.append(eng.submit(g.node_feat, g.senders, g.receivers, g.edge_feat))
+for i in range(6):
+    g = next(mesh_like(seed=40 + i, n_graphs=1, n_nodes=48,
+                       node_dim=8, edge_dim=1))
+    graphs.append(g)
+    futs.append(eng.submit(g.node_feat, g.senders, g.receivers, g.edge_feat))
+eng.drain(timeout=300)
+for g, fut in zip(graphs, futs):
+    out = fut.result(timeout=60)
+    ref = oracle(g.node_feat, g.senders, g.receivers, g.edge_feat)[0]
+    assert np.array_equal(out, ref), float(np.abs(out - ref).max())
+assert len(eng._wide_programs) == 1      # both wide size classes shared it
+assert any(k[0] == "wide" for k in eng.edge_passes)
+assert "wide[4]" in eng.stats.by_device
+
+# a graph with no locality cannot fit the per-shard budget: admission
+# rejects it as GraphTooLarge even with wide enabled
+rng = np.random.default_rng(0)
+nf = rng.normal(size=(900, 8)).astype(np.float32)
+snd = rng.integers(0, 900, size=3600).astype(np.int32)
+rcv = rng.integers(0, 900, size=3600).astype(np.int32)
+ef = rng.normal(size=(3600, 1)).astype(np.float32)
+try:
+    eng.process(nf, snd, rcv, ef)
+    raise SystemExit("expected GraphTooLarge")
+except GraphTooLarge:
+    pass
+eng.close()
+print('OK')
+""", n=4, timeout=560)
+
+
+def test_engine_wide_deadline_sheds_while_queued():
+    # a wide request whose deadline expires before a gang window opens is
+    # shed with DeadlineExceeded, exactly like narrow pre-dispatch shedding
+    run_with_devices("""
+import numpy as np, jax
+from repro.core import models as M
+from repro.core.engine import GraphStreamEngine
+from repro.core.errors import DeadlineExceeded
+from repro.data.graphs import mesh_like
+
+cfg = M.GNNConfig(model="gin", num_layers=2, hidden_dim=8,
+                  node_feat_dim=8, edge_feat_dim=1, out_dim=2)
+params = M.gin_init(jax.random.PRNGKey(0), cfg)
+eng = GraphStreamEngine(cfg, params, buckets=(32, 64, 128, 256, 512),
+                        wide=True, wide_k=4)
+g = next(mesh_like(seed=1, n_graphs=1, n_nodes=900, node_dim=8, edge_dim=1))
+# impossible deadline: shed before any gang forms (compile takes longer)
+fut = eng.submit(g.node_feat, g.senders, g.receivers, g.edge_feat,
+                 deadline=1e-4)
+try:
+    fut.result(timeout=60)
+    raise SystemExit("expected DeadlineExceeded")
+except DeadlineExceeded:
+    pass
+eng.close()
+print('OK')
+""", n=4, timeout=560)
